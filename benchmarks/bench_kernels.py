@@ -1,0 +1,91 @@
+"""Kernel micro-benchmarks: jnp-oracle wall time on this host (CPU) plus
+derived TPU-roofline projections for the Pallas kernels.
+
+On-CPU wall time exercises the oracle path only (kernels are TPU-target;
+interpret mode is a correctness tool, not a perf path).  The projection
+derives bytes/flops per call from shapes and reports the v5e roofline
+bound per kernel - the number the Pallas implementation is written to
+approach.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def bench_spmv():
+    from repro.kernels.spmv.ref import spmv_ell_ref
+    n_rows, k, n_cols = 65536, 16, 65536
+    idx = jax.random.randint(jax.random.key(1), (n_rows, k), 0, n_cols)
+    val = jax.random.normal(jax.random.key(2), (n_rows, k))
+    x = jax.random.normal(jax.random.key(3), (n_cols,))
+    f = jax.jit(spmv_ell_ref)
+    dt = _time(f, idx, val, x)
+    bytes_moved = (idx.size * 4 + val.size * 4 + n_rows * 4
+                   + n_rows * k * 4)  # gather traffic ~ 1 read per edge
+    flops = 2 * n_rows * k
+    bound = max(bytes_moved / HBM_BW, flops / PEAK_FLOPS_BF16)
+    print(f"spmv_ell,{dt*1e6:.0f}us_cpu_oracle,"
+          f"tpu_roofline_bound={bound*1e6:.1f}us,"
+          f"intensity={flops/bytes_moved:.3f}flop/B")
+
+
+def bench_frontier():
+    from repro.kernels.frontier.ref import bfs_pull_ref
+    import numpy as np
+    n_rows, k, n_cols = 65536, 16, 1 << 20
+    rng = np.random.default_rng(0)
+    nbr = jnp.asarray(rng.integers(0, n_cols, (n_rows, k), dtype=np.int32))
+    bits = jnp.asarray(rng.integers(0, 2 ** 32, n_cols // 32,
+                                    dtype=np.uint32))
+    unv = jnp.asarray(rng.integers(0, 2, n_rows, dtype=np.int32))
+    f = jax.jit(bfs_pull_ref)
+    dt = _time(f, nbr, bits, unv)
+    bytes_moved = nbr.size * 4 + nbr.size * 4 + n_rows * 8
+    bound = bytes_moved / HBM_BW
+    print(f"bfs_pull,{dt*1e6:.0f}us_cpu_oracle,"
+          f"tpu_roofline_bound={bound*1e6:.1f}us,memory_bound")
+
+
+def bench_flash():
+    from repro.models.layers import flash_attention_xla
+    B, S, H, D = 1, 2048, 8, 128
+    q, k, v = [jax.random.normal(jax.random.key(i), (B, S, H, D),
+                                 jnp.bfloat16) for i in range(3)]
+    f = jax.jit(lambda q, k, v: flash_attention_xla(
+        q, k, v, True, 0, 0.0, 512, 512))
+    dt = _time(f, q, k, v)
+    flops = 4 * B * H * S * S * D  # qk + pv
+    bytes_moved = 4 * B * S * H * D * 2
+    bound = max(flops / PEAK_FLOPS_BF16, bytes_moved / HBM_BW)
+    print(f"flash_attention,{dt*1e6:.0f}us_cpu_oracle,"
+          f"tpu_roofline_bound={bound*1e6:.1f}us,"
+          f"intensity={flops/bytes_moved:.0f}flop/B,compute_bound")
+
+
+def main():
+    print("name,cpu_oracle_time,tpu_projection,notes")
+    bench_spmv()
+    bench_frontier()
+    bench_flash()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Render the roofline table from dry-run artifacts (EXPERIMENTS.md
+SRoofline source of truth)."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+def load(art_dir="artifacts/dryrun"):
+    rows = []
+    for p in sorted(pathlib.Path(art_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") == "ok":
+            rows.append(rec)
+    return rows
+
+
+def render(rows, mesh="pod", include_graph=True):
+    out = []
+    hdr = ("| arch | shape | c (ms) | m (ms) | x (ms) | bottleneck | "
+           "MODEL/HLO | HBM GB/dev |")
+    out.append(hdr)
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["arch"].startswith("graph-") and not include_graph:
+            continue
+        # donated outputs alias inputs: HBM = args + temps
+        hbm = (r.get("arg_bytes_per_device", 0)
+               + r.get("temp_bytes_per_device", 0)) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | {r['bottleneck']} "
+            f"| {r.get('useful_flops_ratio', 0):.2f} | {hbm:.1f} |")
+    return "\n".join(out)
+
+
+def summarize(rows, mesh="pod"):
+    """Per-cell roofline fraction = dominant-term share of an ideal
+    perfectly-overlapped step: step_time >= max(c,m,x); fraction =
+    max-term / sum-terms proxies how balanced the cell is."""
+    worst = []
+    for r in rows:
+        if r["mesh"] != mesh or r["arch"].startswith("graph-"):
+            continue
+        c, m, x = r["compute_s"], r["memory_s"], r["collective_s"]
+        tot = c + m + x
+        dom = max(c, m, x)
+        frac = c / dom  # compute share of the critical term
+        worst.append((frac, r["arch"], r["shape"], r["bottleneck"]))
+    worst.sort()
+    return worst
+
+
+def main():
+    rows = load()
+    print(render(rows))
+    print("\nmost-skewed cells (lowest compute share of dominant term):")
+    for frac, arch, shape, b in summarize(rows)[:6]:
+        print(f"  {arch} x {shape}: compute/dominant = {frac:.3f} ({b})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness: one entry per paper table/figure + roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Outputs CSV-ish lines per benchmark and writes JSON artifacts under
+artifacts/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller graphs / fewer reps (CI mode)")
+    ap.add_argument("--skip-scaling", action="store_true",
+                    help="skip the multi-process scaling figures")
+    args = ap.parse_args()
+
+    graph = "urand16"
+    parts = (1, 2, 4) if args.fast else (1, 2, 4, 8)
+    reps = 2 if args.fast else 3
+
+    print("=" * 72)
+    print("Figure 1: distributed BFS, BSP(Boost-like) vs HPX-adapted")
+    print("=" * 72)
+    if not args.skip_scaling:
+        from benchmarks.bench_bfs import main as bfs_main
+        bfs_main(graph=graph, parts=parts, reps=reps)
+
+    print("=" * 72)
+    print("Figure 2: distributed PageRank, BSP(Boost-like) vs HPX-adapted")
+    print("=" * 72)
+    if not args.skip_scaling:
+        from benchmarks.bench_pagerank import main as pr_main
+        pr_main(graph=graph, parts=parts, reps=reps)
+
+    print("=" * 72)
+    print("Kernel micro-benchmarks (CPU oracle time + TPU roofline bound)")
+    print("=" * 72)
+    from benchmarks.bench_kernels import main as k_main
+    k_main()
+
+    print("=" * 72)
+    print("Roofline table (from dry-run artifacts; see EXPERIMENTS.md)")
+    print("=" * 72)
+    try:
+        from benchmarks.roofline_table import main as r_main
+        r_main()
+    except Exception as e:  # noqa: BLE001 - artifacts may not exist yet
+        print(f"(roofline table unavailable: {e!r}; "
+              "run python -m repro.launch.dryrun first)")
+
+
+if __name__ == "__main__":
+    main()

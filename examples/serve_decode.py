@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests: prefill + step-wise decode
+against the segment KV/SSM cache (greedy sampling).
+
+  PYTHONPATH=src python examples/serve_decode.py
+  PYTHONPATH=src python examples/serve_decode.py --arch mamba2-1.3b
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "tinyllama-1.1b", "--smoke", "--batch", "4",
+                     "--prompt-len", "32", "--gen", "48"]
+    elif "--smoke" not in sys.argv:
+        sys.argv.append("--smoke")
+    main()

@@ -1,0 +1,20 @@
+"""Train a small causal LM end to end: deterministic data pipeline,
+AdamW, checkpoint every 50 steps, auto-resume, straggler watchdog.
+
+  PYTHONPATH=src python examples/train_lm.py              # ~2M params, CPU
+  PYTHONPATH=src python examples/train_lm.py --arch zamba2-7b --smoke
+
+The same driver lowers unchanged against the production mesh (see
+repro/launch/dryrun.py); --simulate-failure N demonstrates the
+checkpoint/restart + elastic-remesh path.
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "tinyllama-1.1b", "--smoke", "--steps", "200",
+                     "--batch", "8", "--seq", "128", "--lr", "1e-3"]
+    main()

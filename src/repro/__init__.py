@@ -1,0 +1,24 @@
+"""repro: distributed graph analytics + multi-architecture LM framework in JAX.
+
+Reproduces and extends "An Initial Evaluation of Distributed Graph
+Algorithms using NWGraph and HPX" (Mohammadiporshokooh, Syskakis, Kaiser;
+2026).  The paper's asynchronous, partitioned-container execution model for
+distributed BFS and PageRank is adapted to TPU-native JAX (shard_map +
+pjit + Pallas) and embedded in a production-scale training/serving
+framework supporting 10 assigned LM architectures on multi-pod meshes.
+
+Layout:
+  repro.core         -- the paper's contribution: distributed graph engine
+  repro.graphs       -- graph generation (urand / Erdos-Renyi, RMAT), CSR
+  repro.models       -- unified LM stack (dense / MoE / SSM / hybrid / enc-dec / VLM)
+  repro.kernels      -- Pallas TPU kernels (spmv, bfs frontier, flash attention)
+  repro.distributed  -- mesh/sharding rules, collectives, compression, fault tolerance
+  repro.optim        -- AdamW + schedules
+  repro.data         -- deterministic sharded token pipeline
+  repro.checkpoint   -- atomic sharded checkpoint/restore
+  repro.configs      -- per-architecture configs + registry
+  repro.launch       -- mesh construction, multi-pod dry-run, train/serve drivers
+  repro.roofline     -- roofline-term extraction from compiled artifacts
+"""
+
+__version__ = "0.1.0"

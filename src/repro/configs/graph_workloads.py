@@ -1,0 +1,27 @@
+"""Paper-side workload configs: urand (Erdos-Renyi) graphs as in §5.
+
+The paper evaluates BFS and PageRank on 'urand' graphs of varying scale
+(urand25 has 2^25 vertices) on up to 32 nodes.  These configs drive the
+benchmark harness (Figures 1 and 2) and the graph-engine dry-run.
+"""
+
+from repro.configs.base import GraphConfig
+
+# Benchmark-scale graphs (runnable on this container)
+URAND16 = GraphConfig("urand16", scale=16)
+URAND18 = GraphConfig("urand18", scale=18)
+URAND20 = GraphConfig("urand20", scale=20)
+
+# Paper-scale graphs (dry-run / production targets)
+URAND22 = GraphConfig("urand22", scale=22)
+URAND25 = GraphConfig("urand25", scale=25)
+URAND28 = GraphConfig("urand28", scale=28)
+
+# RMAT (GAP 'kron'-style) for skewed-degree stress
+RMAT18 = GraphConfig("rmat18", scale=18, generator="rmat")
+RMAT20 = GraphConfig("rmat20", scale=20, generator="rmat")
+
+ALL = {
+    g.name: g
+    for g in (URAND16, URAND18, URAND20, URAND22, URAND25, URAND28, RMAT18, RMAT20)
+}

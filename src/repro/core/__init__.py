@@ -1,0 +1,8 @@
+"""The paper's primary contribution: a distributed graph-analytics engine
+(NWGraph+HPX adapted to JAX SPMD).  See core/bfs.py, core/pagerank.py for
+the algorithm-level adaptation notes and DESIGN.md for the system view."""
+
+from repro.core.api import GraphEngine
+from repro.core.graph import GraphShards, abstract_graph, partition_graph
+
+__all__ = ["GraphEngine", "GraphShards", "abstract_graph", "partition_graph"]

@@ -1,0 +1,112 @@
+"""Public graph-engine API: jitted shard_map programs over a 1-D mesh.
+
+``GraphEngine`` binds a partitioned graph to a mesh and exposes
+BFS / PageRank / SSSP / CC in both BSP-baseline and optimized variants.
+The same builders lower against abstract inputs for the multi-pod
+dry-run (core/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfs as BFS
+from repro.core import cc as CC
+from repro.core import pagerank as PR
+from repro.core import sssp as SSSP
+from repro.core.graph import GraphShards
+
+P = jax.sharding.PartitionSpec
+
+
+def _graph_specs(g: GraphShards):
+    return {k: P("parts", None) for k in g.abstract_arrays()}
+
+
+@dataclass
+class GraphEngine:
+    g: GraphShards
+    mesh: jax.sharding.Mesh
+
+    def _wrap(self, fn, extra_in_specs=(), out_specs=None):
+        in_specs = (_graph_specs(self.g),) + tuple(extra_in_specs)
+        return jax.jit(jax.shard_map(
+            fn, mesh=self.mesh, in_specs=in_specs,
+            out_specs=out_specs, check_vma=False))
+
+    # -- BFS ------------------------------------------------------------
+    def bfs(self, mode: str = "fast", max_levels: int = 64,
+            static_iters: int = 0):
+        g, m = self.g, self.mesh
+        shard_fn = (BFS.bfs_fast_shard if mode == "fast"
+                    else BFS.bfs_bsp_shard)
+
+        def fn(garr, root):
+            garr = {k: v[0] for k, v in garr.items()}
+            parents, levels = shard_fn(garr, root, g.n, g.n_local,
+                                       max_levels,
+                                       static_iters=static_iters)
+            return parents[None], levels
+
+        return self._wrap(fn, extra_in_specs=(P(),),
+                          out_specs=(P("parts", None), P()))
+
+    # -- PageRank ---------------------------------------------------------
+    def pagerank(self, mode: str = "fast", iters: int = 50,
+                 tol: float = 1e-6, compress: bool = True,
+                 static_iters: int = 0):
+        g = self.g
+
+        def fn(garr):
+            garr = {k: v[0] for k, v in garr.items()}
+            if mode == "fast":
+                rank, err, it = PR.pagerank_fast_shard(
+                    garr, g.n, g.n_local, g.n_orig, iters, tol,
+                    compress=compress, static_iters=static_iters)
+            else:
+                rank, err, it = PR.pagerank_bsp_shard(
+                    garr, g.n, g.n_local, g.n_orig, iters, tol,
+                    static_iters=static_iters)
+            return rank[None], err, it
+
+        return self._wrap(fn, out_specs=(P("parts", None), P(), P()))
+
+    # -- SSSP -------------------------------------------------------------
+    def sssp(self, max_rounds: int = 64):
+        g = self.g
+
+        def fn(garr, root):
+            garr = {k: v[0] for k, v in garr.items()}
+            dist, rounds = SSSP.sssp_shard(garr, root, g.n, g.n_local,
+                                           max_rounds)
+            return dist[None], rounds
+
+        return self._wrap(fn, extra_in_specs=(P(),),
+                          out_specs=(P("parts", None), P()))
+
+    # -- Connected components ----------------------------------------------
+    def cc(self, max_rounds: int = 64):
+        g = self.g
+
+        def fn(garr):
+            garr = {k: v[0] for k, v in garr.items()}
+            labels, rounds = CC.cc_shard(garr, g.n, g.n_local, max_rounds)
+            return labels[None], rounds
+
+        return self._wrap(fn, out_specs=(P("parts", None), P()))
+
+    # -- helpers -------------------------------------------------------------
+    def device_graph(self):
+        arrs = self.g.device_arrays()
+        sh = jax.sharding.NamedSharding(self.mesh, P("parts", None))
+        return {k: jax.device_put(v, sh) for k, v in arrs.items()}
+
+    def gather_vertex_field(self, arr) -> np.ndarray:
+        """(P, n_local) sharded -> (n_orig,) numpy."""
+        return np.asarray(arr).reshape(-1)[: self.g.n_orig]

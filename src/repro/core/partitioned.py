@@ -1,0 +1,77 @@
+"""PartitionedVector: the ``hpx::partitioned_vector`` analogue.
+
+A global per-vertex array lives as (P, n_local) sharded over the "parts"
+mesh axis.  HPX exposes remote element access through AGAS; the SPMD
+analogue is bulk exchange, so this module provides the three exchange
+primitives the graph algorithms are built from:
+
+  * exchange_sum / exchange_or  -- each partition holds a full-length
+      (n,) accumulator of proposed updates; a single fused
+      ``psum_scatter`` delivers the combined slice to each owner.  This
+      is the TPU-native form of the paper's "remote contributions are
+      sent and atomically applied at the owner" (message aggregation
+      replaces fine-grained atomics).
+  * exchange_min_int -- owner-combining with MIN (parent selection in
+      BFS replaces compare_exchange); implemented with all_to_all.
+  * broadcast_global -- all-gather a (P, n_local) field into a full (n,)
+      replica on every partition (pull-mode reads).
+
+All functions are meant to be called INSIDE shard_map over axis "parts".
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+AXIS = "parts"
+
+
+def local_slice_bounds(n_local: int):
+    """[lo, hi) global ids owned by this partition (inside shard_map)."""
+    idx = jax.lax.axis_index(AXIS)
+    lo = idx * n_local
+    return lo, lo + n_local
+
+
+def exchange_sum(acc_global, axis_name: str = AXIS):
+    """acc_global: (n,) proposed updates for ALL vertices (local view).
+
+    Returns (n_local,) combined updates for the vertices THIS partition
+    owns.  One reduce-scatter on the wire: (P-1)/P * n elements.
+    """
+    parts = jax.lax.axis_size(axis_name)
+    blocks = acc_global.reshape(parts, -1)
+    return jax.lax.psum_scatter(blocks, axis_name, scatter_dimension=0,
+                                tiled=False).reshape(-1)
+
+
+def exchange_or(mask_global, axis_name: str = AXIS):
+    """Boolean OR-combine: frontiers. Same wire cost as exchange_sum."""
+    summed = exchange_sum(mask_global.astype(jnp.int32), axis_name)
+    return summed > 0
+
+
+def exchange_min_int(val_global, axis_name: str = AXIS, big=None):
+    """Element-wise MIN combine of int32 proposals.
+
+    all_to_all moves each partition's (P, n_local) proposal matrix so
+    that owners receive P candidate rows; min over the row axis.
+    """
+    parts = jax.lax.axis_size(axis_name)
+    blocks = val_global.reshape(parts, 1, -1)
+    rows = jax.lax.all_to_all(blocks, axis_name, split_axis=0,
+                              concat_axis=1)          # (1, P, n_local)
+    return rows.min(axis=(0, 1))
+
+
+def broadcast_global(local_vals, axis_name: str = AXIS):
+    """(n_local,) -> (n,) full replica (all-gather)."""
+    return jax.lax.all_gather(local_vals, axis_name, axis=0,
+                              tiled=True)
+
+
+def psum_scalar(x, axis_name: str = AXIS):
+    return jax.lax.psum(x, axis_name)

@@ -1,0 +1,3 @@
+from repro.data.tokens import TokenStream, batch_at
+
+__all__ = ["TokenStream", "batch_at"]

@@ -1,0 +1,3 @@
+from repro.distributed import actctx
+
+__all__ = ["actctx"]

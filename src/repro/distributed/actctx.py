@@ -1,0 +1,120 @@
+"""Activation-sharding context.
+
+The model code is mesh-agnostic; drivers (train/dry-run) install a
+sharding policy here before tracing.  ``constrain(x, kind)`` applies
+``jax.lax.with_sharding_constraint`` when a policy is active, otherwise
+it is the identity - so tests and single-device runs are unaffected.
+
+Kinds:
+  "resid"  -- (B, S, D) residual stream. Train policy shards S over
+              "model" (Megatron-style sequence parallelism) so the
+              per-layer scan carry is 1/TP the size; GSPMD inserts the
+              all-gather / reduce-scatter pairs around attention/MLP.
+  "batch"  -- (B, ...) batch-leading tensors; shard B over data axes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_POLICY: Optional[dict] = None
+
+
+def set_policy(policy: Optional[dict]):
+    global _POLICY
+    _POLICY = policy
+
+
+@contextlib.contextmanager
+def policy(p: Optional[dict]):
+    global _POLICY
+    old = _POLICY
+    _POLICY = p
+    try:
+        yield
+    finally:
+        _POLICY = old
+
+
+def constrain(x, kind: str):
+    if _POLICY is None:
+        return x
+    sh = _POLICY.get(kind)
+    if sh is None:
+        return x
+    if callable(sh):
+        sh = sh(x)
+        if sh is None:
+            return x
+    elif isinstance(sh, dict):
+        sh = sh.get(x.ndim)
+        if sh is None:
+            return x
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def _heads_rule(mesh, batch_axes):
+    """(B, S, H, D) attention tensors: B over batch axes, H over model.
+
+    Falls back to replicated heads when H < model-axis size (tiny models)
+    to avoid mostly-padding shards.
+    """
+    P = jax.sharding.PartitionSpec
+    NS = jax.sharding.NamedSharding
+    m = mesh.shape["model"]
+
+    def rule(x):
+        if x.ndim != 4:
+            return None
+        h = x.shape[2]
+        ha = "model" if h >= m else None
+        return NS(mesh, P(batch_axes, None, ha, None))
+
+    return rule
+
+
+def make_train_policy(mesh, *, batch_axes, seq_axis="model"):
+    """Residual stream (B,S,D): B over batch_axes, S over seq_axis (SP)."""
+    P = jax.sharding.PartitionSpec
+    NS = jax.sharding.NamedSharding
+    ba = batch_axes if batch_axes else None
+    return {
+        "resid": {3: NS(mesh, P(ba, seq_axis, None))},
+        "batch": {2: NS(mesh, P(ba, None)),
+                  3: NS(mesh, P(ba, None, None))},
+        "heads": _heads_rule(mesh, ba),
+        "ffn": _ffn_rule(mesh, ba),
+    }
+
+
+def make_infer_policy(mesh, *, batch_axes):
+    P = jax.sharding.PartitionSpec
+    NS = jax.sharding.NamedSharding
+    ba = batch_axes if batch_axes else None
+    return {
+        "resid": {3: NS(mesh, P(ba, None, None))},
+        "batch": {2: NS(mesh, P(ba, None)),
+                  3: NS(mesh, P(ba, None, None))},
+        "heads": _heads_rule(mesh, ba),
+        "ffn": _ffn_rule(mesh, ba),
+    }
+
+
+def _ffn_rule(mesh, batch_axes):
+    """(B, S, F) hidden activations: F over model (Megatron pattern:
+    gather the sequence, shard the hidden width)."""
+    P = jax.sharding.PartitionSpec
+    NS = jax.sharding.NamedSharding
+    m = mesh.shape["model"]
+
+    def rule(x):
+        if x.ndim != 3:
+            return None
+        f = x.shape[2]
+        fa = "model" if f >= m else None
+        return NS(mesh, P(batch_axes, None, fa))
+
+    return rule

@@ -1,0 +1,52 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Cross-pod data-parallel gradient all-reduces traverse the slow DCI links;
+int8 + per-bucket scale cuts that wire 4x vs fp32.  Error feedback
+(Karimireddy et al.) accumulates the quantization residual locally and
+adds it back next step, preserving convergence.
+
+Usage inside a train step (see launch/train.py):
+    qgrads, new_state = compress_tree(grads, ef_state)
+    # all-reduce qgrads over the pod axis (pjit inserts it), then
+    grads = dequantize_tree(qgrads)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, resid):
+    """x + resid -> (int8 payload, scale, new resid)."""
+    y = x.astype(jnp.float32) + resid
+    scale = jnp.max(jnp.abs(y)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(y / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, y - deq
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_ef_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads, ef_state):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    qs, scales, resids = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, r = quantize_int8(g, e)
+        qs.append(q)
+        scales.append(s)
+        resids.append(r)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, resids))
+
+
+def decompress_tree(qs, scales):
+    return jax.tree.map(dequantize_int8, qs, scales)

@@ -1,0 +1,3 @@
+from repro.graphs.generate import generate_edges, rmat_edges, urand_edges
+
+__all__ = ["generate_edges", "rmat_edges", "urand_edges"]

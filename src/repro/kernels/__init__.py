@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  spmv            -- ELL segment-sum SpMV (PageRank contribution pull)
+  frontier        -- BFS pull step over packed frontier bitmaps
+  flash_attention -- blocked online-softmax attention (LM train/prefill)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd dispatch wrapper), ref.py (pure-jnp oracle).  Kernels are
+validated against ref.py in interpret mode (tests/test_kernels_*.py) and
+selected automatically on TPU backends.
+"""

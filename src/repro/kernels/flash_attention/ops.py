@@ -1,0 +1,45 @@
+"""Dispatch wrapper for flash attention.
+
+(B, S, H, D) <-> (B*H, S, D) adapters, head_dim padding to a multiple of
+128 (danube3's 120), and backend dispatch: Pallas kernel on TPU, the
+custom-VJP XLA implementation elsewhere (and always for backward).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _pad_d(x, mult=128):
+    d = x.shape[-1]
+    pad = (-d) % mult
+    if pad == 0:
+        return x, d
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]), d
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    force_kernel=False, interpret=False):
+    """q/k/v: (B, S, H, D) with kv heads pre-repeated -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    if force_kernel or jax.default_backend() == "tpu":
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+        qf, d0 = _pad_d(qf)
+        kf, _ = _pad_d(kf)
+        vf, _ = _pad_d(vf)
+        if qf.shape[-1] != d0:
+            # kernel scales by padded D; compensate to the true 1/sqrt(d0)
+            qf = qf * jnp.asarray((qf.shape[-1] / d0) ** 0.5, qf.dtype)
+        # padded key dims contribute zeros to q.k^T; padded v dims sliced off
+        o = flash_attention_fwd(
+            qf, kf, vf, causal=causal, window=window, softcap=softcap,
+            interpret=interpret or jax.default_backend() != "tpu")
+        o = o[..., :d0].reshape(B, H, Sq, d0).transpose(0, 2, 1, 3)
+        return o
+    from repro.models.layers import flash_attention_xla
+    return flash_attention_xla(q, k, v, causal, window, softcap, 1024, 1024)

@@ -1,0 +1,3 @@
+from repro.kernels.frontier.ops import frontier_pull
+
+__all__ = ["frontier_pull"]

@@ -1,0 +1,14 @@
+"""Dispatch wrapper: Pallas kernel on TPU, jnp oracle elsewhere."""
+
+import jax
+
+from repro.kernels.frontier.kernel import bfs_pull
+from repro.kernels.frontier.ref import bfs_pull_ref
+
+
+def frontier_pull(nbr, bits, unvisited, *, row_block: int = 256,
+                  force_kernel: bool = False, interpret: bool = False):
+    if force_kernel or jax.default_backend() == "tpu":
+        return bfs_pull(nbr, bits, unvisited, row_block=row_block,
+                        interpret=interpret or jax.default_backend() != "tpu")
+    return bfs_pull_ref(nbr, bits, unvisited)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the BFS pull kernel."""
+
+import jax.numpy as jnp
+
+INT_INF = jnp.int32(2 ** 30)
+
+
+def bfs_pull_ref(nbr, bits, unvisited):
+    word = jnp.take(bits, nbr >> 5, axis=0)
+    hit = ((word >> (nbr & 31).astype(jnp.uint32)) & 1) == 1
+    cand = jnp.where(hit, nbr, INT_INF)
+    parent = cand.min(axis=1)
+    return jnp.where(unvisited.astype(jnp.int32) == 1, parent, INT_INF)

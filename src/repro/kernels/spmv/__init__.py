@@ -1,0 +1,3 @@
+from repro.kernels.spmv.ops import spmv
+
+__all__ = ["spmv"]

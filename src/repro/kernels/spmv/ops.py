@@ -1,0 +1,14 @@
+"""Dispatch wrapper: Pallas kernel on TPU, jnp oracle elsewhere."""
+
+import jax
+
+from repro.kernels.spmv.kernel import spmv_ell
+from repro.kernels.spmv.ref import spmv_ell_ref
+
+
+def spmv(idx, val, x, *, row_block: int = 256, force_kernel: bool = False,
+         interpret: bool = False):
+    if force_kernel or jax.default_backend() == "tpu":
+        return spmv_ell(idx, val, x, row_block=row_block,
+                        interpret=interpret or jax.default_backend() != "tpu")
+    return spmv_ell_ref(idx, val, x)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the ELL SpMV kernel."""
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(idx, val, x):
+    gathered = jnp.take(x.astype(jnp.float32), idx, axis=0)
+    return (gathered * val).sum(axis=1)

@@ -1,0 +1,144 @@
+"""Training driver: end-to-end loop with checkpoint/restart, straggler
+watchdog, and (simulated) elastic remesh.
+
+Runs real steps on whatever devices exist (CPU smoke scale through
+production meshes).  Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 200 --batch 8 --seq 128
+
+  # fault-tolerance demo: kill at step 60, auto-resume from checkpoint
+  ... --simulate-failure 60
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_arch, smoke_config
+from repro.data import TokenStream
+from repro.distributed import actctx
+from repro.distributed.fault_tolerance import StepWatchdog, plan_remesh
+from repro.launch.mesh import batch_axes, make_local_mesh
+from repro.launch.steps import make_train_step
+from repro.models import init_params, param_spec, param_shardings
+from repro.models.params import abstract_params
+from repro.optim import init_opt_state
+
+
+def build_state(cfg, tc, mesh):
+    spec_tree = param_spec(cfg)
+    shardings = param_shardings(spec_tree, mesh)
+    params = init_params(spec_tree, jax.random.key(tc.seed))
+    params = jax.tree.map(jax.device_put, params, shardings)
+    opt = init_opt_state(params)
+    return params, opt, shardings
+
+
+def train(cfg, tc: TrainConfig, *, batch: int, seq: int, steps: int,
+          mesh=None, simulate_failure: int = -1, log_every: int = 10,
+          resume: bool = True):
+    mesh = mesh or make_local_mesh(len(jax.devices()), 1)
+    params, opt, shardings = build_state(cfg, tc, mesh)
+    stream = TokenStream(global_batch=batch, seq_len=seq,
+                         vocab_size=cfg.vocab_size, seed=tc.seed)
+
+    start = 0
+    if resume:
+        last = ckpt.latest_step(tc.checkpoint_dir)
+        if last is not None:
+            params = ckpt.restore(tc.checkpoint_dir, last, params, shardings)
+            opt_tpl = init_opt_state(params)
+            opt = ckpt.restore(f"{tc.checkpoint_dir}/opt", last, opt_tpl)
+            stream.restore(last)
+            start = last
+            print(f"[train] resumed from step {last}")
+
+    ba = batch_axes(mesh, batch)
+    policy = actctx.make_train_policy(mesh, batch_axes=ba) \
+        if mesh.shape.get("model", 1) > 1 else None
+    step_fn = make_train_step(cfg, tc)
+    with actctx.policy(policy):
+        step_jit = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    watchdog = StepWatchdog()
+    losses = []
+    for step in range(start, steps):
+        if step == simulate_failure:
+            print(f"[train] SIMULATED FAILURE at step {step}: "
+                  "dropping state, planning remesh, restoring checkpoint")
+            plan = plan_remesh(len(jax.devices()) * 256, 256)
+            print(f"[train] remesh plan: {plan.mesh_shape} "
+                  f"({plan.note})")
+            last = ckpt.latest_step(tc.checkpoint_dir)
+            assert last is not None, "no checkpoint to recover from"
+            params = jax.tree.map(jnp.zeros_like, params)  # state lost
+            params = ckpt.restore(tc.checkpoint_dir, last, params, shardings)
+            opt = ckpt.restore(f"{tc.checkpoint_dir}/opt", last,
+                               init_opt_state(params))
+            stream.restore(last)
+            simulate_failure = -1
+            # re-run from the checkpoint step
+            for s2 in range(last, step):
+                b = stream.next()
+                params, opt, m = step_jit(params, opt, b)
+            print(f"[train] recovered; replayed {step - last} steps")
+
+        b = stream.next()
+        watchdog.start()
+        params, opt, metrics = step_jit(params, opt, b)
+        slow = watchdog.stop(step)
+        if slow:
+            print(f"[train] straggler flagged at step {step}")
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            losses.append((step, loss))
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+        if tc.checkpoint_every and (step + 1) % tc.checkpoint_every == 0:
+            ckpt.save(tc.checkpoint_dir, step + 1, params,
+                      keep=tc.keep_checkpoints)
+            ckpt.save(f"{tc.checkpoint_dir}/opt", step + 1, opt,
+                      keep=tc.keep_checkpoints)
+    return params, opt, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config for this arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--simulate-failure", type=int, default=-1)
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     warmup_steps=max(10, args.steps // 20),
+                     checkpoint_dir=args.ckpt_dir,
+                     checkpoint_every=args.ckpt_every)
+    t0 = time.time()
+    _, _, losses = train(cfg, tc, batch=args.batch, seq=args.seq,
+                         steps=args.steps,
+                         simulate_failure=args.simulate_failure,
+                         resume=not args.no_resume)
+    dt = time.time() - t0
+    print(f"[train] done in {dt:.1f}s; loss {losses[0][1]:.3f} -> "
+          f"{losses[-1][1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+from repro.models.model import (
+    build_plan,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_cache,
+    param_spec,
+)
+from repro.models.params import (
+    abstract_params,
+    init_params,
+    param_count,
+    param_shardings,
+)
+
+__all__ = [
+    "build_plan",
+    "forward_decode",
+    "forward_prefill",
+    "forward_train",
+    "init_cache",
+    "param_spec",
+    "abstract_params",
+    "init_params",
+    "param_count",
+    "param_shardings",
+]

@@ -1,0 +1,413 @@
+"""Core neural layers: norms, RoPE, GQA attention (full / sliding-window /
+local-global / cross), and MLPs.
+
+Attention has three interchangeable implementations:
+  * ``naive``   -- materializes (Sq, Sk) scores; oracle for tests.
+  * ``chunked`` -- XLA flash attention (double-scanned, online softmax);
+                   O(chunk^2) memory; used for training/prefill lowering.
+  * ``pallas``  -- the Pallas TPU kernel in repro.kernels.flash_attention
+                   (selected on real TPU backends; validated in interpret
+                   mode by tests).
+
+All attention entry points take q of shape (B, Sq, KH, G, D) and k/v of
+shape (B, Sk, KH, D): GQA is expressed by the (KH, G) factorization so
+that kv heads are never materialized repeated.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.actctx import constrain
+from repro.models.params import spec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_spec(d):
+    return {"scale": spec((d,), (None,), init="ones")}
+
+
+def layernorm_spec(d):
+    return {"scale": spec((d,), (None,), init="ones"),
+            "bias": spec((d,), (None,), init="zeros")}
+
+
+def norm_spec(kind, d):
+    return rmsnorm_spec(d) if kind == "rmsnorm" else layernorm_spec(d)
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, ..., D) with positions broadcastable to the S axis.
+
+    x shape (B, S, H..., D); positions (S,) or (B, S).
+    """
+    d = x.shape[-1]
+    d2 = d // 2
+    freqs = rope_freqs(d, theta)  # (d2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d2)
+    # broadcast angles over any head dims between S and D
+    extra = x.ndim - ang.ndim - 1
+    for _ in range(extra):
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :d2], x[..., d2:2 * d2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([xr1, xr2], axis=-1)
+    if 2 * d2 != d:  # odd head_dim (e.g. danube3's 120 stays even; guard anyway)
+        out = jnp.concatenate([out, x[..., 2 * d2:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+def attn_mask(q_pos, k_pos, *, causal: bool, window: int):
+    """Boolean (..., Sq, Sk) mask; True = attend."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= kp > qp - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Attention implementations
+# ---------------------------------------------------------------------------
+def _scores_softcap(s, softcap):
+    if softcap and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def attention_naive(q, k, v, *, q_pos, k_pos, causal, window, softcap=0.0):
+    """q/k/v: (B, S, H, D), kv heads pre-repeated -> (B, Sq, H, D)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _scores_softcap(s, softcap)
+    mask = attn_mask(q_pos, k_pos, causal=causal, window=window)  # (Sq, Sk)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return out
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (falls back to s)."""
+    if s <= target:
+        return s
+    for c in range(target, 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+# ---------------------------------------------------------------------------
+# XLA flash attention with a hand-written VJP.
+#
+# A plain scan-based online-softmax forward is memory-safe, but its
+# autodiff saves the (m, l, acc) carries per kv-block - an O(S^2)-scale
+# residual footprint.  The custom VJP saves only (q, k, v, out, lse) and
+# recomputes probabilities blockwise in the backward (two passes: dq by
+# q-block, dk/dv by kv-block) - the standard flash-attention treatment,
+# expressed in pure lax.scan so it lowers on any backend.
+# ---------------------------------------------------------------------------
+def _flash_fwd_impl(q, k, v, *, causal, window, softcap, q_chunk, kv_chunk):
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Sk, kv_chunk)
+    nq, nk = Sq // qc, Sk // kc
+    scale = D ** -0.5
+
+    qs = q.reshape(B, nq, qc, H, D).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, nk, kc, H, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, H, D).transpose(1, 0, 2, 3, 4)
+
+    def q_block(_, qi):
+        qcb, qidx = qi
+
+        def kv_block(state, ki):
+            m, l, acc = state
+            kcb, vcb, kidx = ki
+            s = jnp.einsum("bqhd,bkhd->bhqk", qcb.astype(jnp.float32),
+                           kcb.astype(jnp.float32)) * scale
+            s = _scores_softcap(s, softcap)
+            qp = qidx * qc + jnp.arange(qc)
+            kp = kidx * kc + jnp.arange(kc)
+            mask = attn_mask(qp, kp, causal=causal, window=window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vcb.dtype), vcb)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, D), v.dtype)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out.transpose(0, 2, 1, 3), lse)  # (B,qc,H,D),(B,H,qc)
+
+    _, (outs, lses) = jax.lax.scan(q_block, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+    lse = lses.transpose(1, 2, 0, 3).reshape(B, H, Sq)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, *, causal, window, softcap,
+                    q_chunk, kv_chunk):
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Sk, kv_chunk)
+    nq, nk = Sq // qc, Sk // kc
+    scale = D ** -0.5
+    f32 = jnp.float32
+
+    delta = jnp.einsum("bshd,bshd->bhs", do.astype(f32), out.astype(f32))
+
+    qs = q.reshape(B, nq, qc, H, D).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, nk, kc, H, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, H, D).transpose(1, 0, 2, 3, 4)
+    dos = do.reshape(B, nq, qc, H, D).transpose(1, 0, 2, 3, 4)
+    lses = lse.reshape(B, H, nq, qc).transpose(2, 0, 1, 3)     # (nq,B,H,qc)
+    deltas = delta.reshape(B, H, nq, qc).transpose(2, 0, 1, 3)
+
+    def _p_ds(qcb, kcb, vcb, docb, lseb, delb, qidx, kidx):
+        """Recompute p and ds for one (q-block, kv-block) pair."""
+        s_raw = jnp.einsum("bqhd,bkhd->bhqk", qcb.astype(f32),
+                           kcb.astype(f32)) * scale
+        if softcap and softcap > 0:
+            t = jnp.tanh(s_raw / softcap)
+            s = t * softcap
+            dcap = 1.0 - t * t
+        else:
+            s, dcap = s_raw, 1.0
+        qp = qidx * qc + jnp.arange(qc)
+        kp = kidx * kc + jnp.arange(kc)
+        mask = attn_mask(qp, kp, causal=causal, window=window)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lseb[..., None])                        # (B,H,q,k)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", docb.astype(f32), vcb.astype(f32))
+        ds = p * (dp - delb[..., None]) * scale * dcap
+        ds = jnp.where(mask, ds, 0.0)
+        return p, ds
+
+    # pass 1: dq by q-block (scan kv inside)
+    def dq_block(_, qi):
+        qcb, docb, lseb, delb, qidx = qi
+
+        def inner(dq, ki):
+            kcb, vcb, kidx = ki
+            p, ds = _p_ds(qcb, kcb, vcb, docb, lseb, delb, qidx, kidx)
+            dq = dq + jnp.einsum("bhqk,bkhd->bqhd", ds, kcb.astype(f32))
+            return dq, None
+
+        dq0 = jnp.zeros((B, qc, H, D), f32)
+        dq, _ = jax.lax.scan(inner, dq0, (ks, vs, jnp.arange(nk)))
+        return None, dq
+
+    _, dqs = jax.lax.scan(dq_block, None,
+                          (qs, dos, lses, deltas, jnp.arange(nq)))
+    dq = dqs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+
+    # pass 2: dk/dv by kv-block (scan q inside)
+    def dkv_block(_, ki):
+        kcb, vcb, kidx = ki
+
+        def inner(carry, qi):
+            dk, dv = carry
+            qcb, docb, lseb, delb, qidx = qi
+            p, ds = _p_ds(qcb, kcb, vcb, docb, lseb, delb, qidx, kidx)
+            dv = dv + jnp.einsum("bhqk,bqhd->bkhd", p, docb.astype(f32))
+            dk = dk + jnp.einsum("bhqk,bqhd->bkhd", ds, qcb.astype(f32))
+            return (dk, dv), None
+
+        z = jnp.zeros((B, kc, H, D), f32)
+        (dk, dv), _ = jax.lax.scan(inner, (z, z),
+                                   (qs, dos, lses, deltas, jnp.arange(nq)))
+        return None, (dk, dv)
+
+    _, (dks, dvs) = jax.lax.scan(dkv_block, None, (ks, vs, jnp.arange(nk)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, H, D)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sk, H, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_xla(q, k, v, causal, window, softcap, q_chunk, kv_chunk):
+    out, _ = _flash_fwd_impl(q, k, v, causal=causal, window=window,
+                             softcap=softcap, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, window, softcap, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, window, softcap, q_chunk, kv_chunk, res, do):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, do, causal=causal,
+                           window=window, softcap=softcap,
+                           q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
+flash_attention_xla.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + core)
+# ---------------------------------------------------------------------------
+def attn_spec(cfg):
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": spec((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": spec((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": spec((h, hd, d), ("heads", "head_dim", "embed"),
+                   scale=0.02 / max(1, cfg.num_layers) ** 0.5),
+    }
+    if cfg.attn_bias:
+        p["bq"] = spec((h, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = spec((kh, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = spec((kh, hd), ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def attn_qkv(p, x, cfg, positions, rope=True):
+    """Project and rope. Returns q (B,S,H,D), k/v (B,S,KH,D) (unrepeated)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def repeat_kv(k, groups: int):
+    """(B, S, KH, D) -> (B, S, KH*G, D). Head axis stays shardable."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def attn_out(p, o, x_dtype):
+    """o: (B, S, H, D) -> (B, S, d_model)."""
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x_dtype))
+
+
+def attention_block(p, x, cfg, *, positions, causal=True, window=0,
+                    impl="chunked", kv=None, kv_positions=None):
+    """Full attention sub-block (no norm/residual). kv!=None => cross-attn.
+
+    Returns (out, (k, v)) with k/v in UNREPEATED (B, S, KH, D) form for
+    the decode cache.
+    """
+    g = cfg.num_heads // cfg.num_kv_heads
+    if kv is None:
+        q, k, v = attn_qkv(p, x, cfg, positions)
+        k_pos = positions
+    else:
+        # cross-attention: keys/values from encoder memory, no rope on kv
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhe->bshe", kv, p["wk"].astype(kv.dtype))
+        v = jnp.einsum("bsd,dhe->bshe", kv, p["wv"].astype(kv.dtype))
+        k_pos = (kv_positions if kv_positions is not None
+                 else jnp.arange(kv.shape[1]))
+        causal, window = False, 0
+
+    if impl == "chunked":
+        # pin the head-parallel layout: (B,S,H,D) with H over "model"
+        # (the surrounding SP-sharded residual would otherwise tempt GSPMD
+        # into a replicated-heads seq-parallel layout with f32 residue)
+        qf = constrain(q, "heads")
+        kf = constrain(repeat_kv(k, g), "heads")
+        vf = constrain(repeat_kv(v, g), "heads")
+        # positions are arange in every full-sequence path
+        o = flash_attention_xla(qf, kf, vf,
+                                causal, window, cfg.attn_logit_softcap,
+                                1024, 1024)
+        o = constrain(o, "heads")
+    else:
+        o = attention_naive(q, repeat_kv(k, g), repeat_kv(v, g),
+                            q_pos=positions, k_pos=k_pos, causal=causal,
+                            window=window, softcap=cfg.attn_logit_softcap)
+    return attn_out(p, o, x.dtype), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_spec(cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wi": spec((d, f), ("embed", "ffn")),
+            "wg": spec((d, f), ("embed", "ffn")),
+            "wo": spec((f, d), ("ffn", "embed"),
+                       scale=0.02 / max(1, cfg.num_layers) ** 0.5),
+        }
+    return {
+        "wi": spec((d, f), ("embed", "ffn")),
+        "wo": spec((f, d), ("ffn", "embed"),
+                   scale=0.02 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def apply_mlp(p, x, cfg):
+    wi = p["wi"].astype(x.dtype)
+    h = constrain(jnp.einsum("bsd,df->bsf", x, wi), "ffn")
+    if cfg.act == "swiglu":
+        g = constrain(jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype)),
+                      "ffn")
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))

@@ -1,0 +1,202 @@
+"""Mamba2 (SSD, state-space duality) block: chunked training scan and
+O(1)-state decode step.
+
+Follows Dao & Gu (arXiv:2405.21060).  The SSD chunked algorithm splits
+the sequence into chunks of length Q: intra-chunk terms are computed as
+a masked quadratic attention-like product (MXU-friendly), inter-chunk
+terms flow through a scan over per-chunk states (B, H, P, N).
+
+Shapes:  d_inner = expand * d_model;  H = d_inner / head_dim (P);
+         N = ssm_state;  G = ssm_groups (B/C shared across heads/group).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import spec
+
+
+def mamba2_spec(cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    g = cfg.ssm_groups
+    nh = cfg.ssm_nheads
+    conv_dim = di + 2 * g * n
+    return {
+        "in_proj": spec((d, 2 * di + 2 * g * n + nh), ("embed", "ssm_inner")),
+        "conv_w": spec((cfg.ssm_conv, conv_dim), ("conv", "ssm_inner"),
+                       scale=0.1),
+        "conv_b": spec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": spec((nh,), ("ssm_heads",), init="arange_neg"),
+        "D": spec((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": spec((nh,), ("ssm_heads",), init="zeros"),
+        "norm_scale": spec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": spec((di, d), ("ssm_inner", "embed"),
+                         scale=0.02 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def _segsum(x):
+    """Stable 'segment sum': out[..., i, j] = sum_{j<k<=i} x[..., k].
+
+    Returns (..., Q, Q) with -inf above the diagonal (j > i).
+    """
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,Cd), w: (W,Cd)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # W is tiny (4): unrolled taps
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_chunked(x, dt, A, Bc, Cc, D, *, chunk: int, h0=None):
+    """SSD forward.
+
+    x:  (B, S, H, P) values
+    dt: (B, S, H)    positive step sizes
+    A:  (H,)         negative decay rates
+    Bc: (B, S, G, N) input projections
+    Cc: (B, S, G, N) output projections
+    D:  (H,)         skip
+    h0: optional initial state (B, H, P, N)
+    Returns y (B, S, H, P), h_final (B, H, P, N).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bc.shape[2], Bc.shape[3]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nC = S // Q
+    rep = H // G
+
+    f32 = jnp.float32
+    xb = (x * dt[..., None]).astype(f32)                  # fold dt into x
+    dA = (dt.astype(f32) * A.astype(f32)).astype(f32)     # (B,S,H) negative
+
+    # chunked views
+    xc = xb.reshape(Bsz, nC, Q, H, P)
+    dAc = dA.reshape(Bsz, nC, Q, H).transpose(0, 1, 3, 2)   # (B,C,H,Q)
+    Bcc = Bc.reshape(Bsz, nC, Q, G, N).astype(f32)
+    Ccc = Cc.reshape(Bsz, nC, Q, G, N).astype(f32)
+
+    dA_cum = jnp.cumsum(dAc, axis=-1)                       # (B,C,H,Q)
+    dA_tot = dA_cum[..., -1]                                # (B,C,H)
+
+    # group -> head broadcast for B/C projections
+    Bh = jnp.repeat(Bcc, rep, axis=3)                       # (B,C,Q,H,N)
+    Ch = jnp.repeat(Ccc, rep, axis=3)                       # (B,C,Q,H,N)
+
+    # ---- intra-chunk (diagonal blocks): quadratic masked product ----
+    L = jnp.exp(_segsum(dAc))                               # (B,C,H,Q,Q)
+    CB = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)           # (B,C,H,Q,Q)
+    M = CB * L                                              # masked decay
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", M, xc)
+
+    # ---- chunk states: B^T x with decay-to-end ----
+    decay_end = jnp.exp(dA_tot[..., None] - dA_cum)         # (B,C,H,Q)
+    Bx = jnp.einsum("bcshn,bcshp,bchs->bchpn",
+                    Bh, xc, decay_end)                      # (B,C,H,P,N)
+
+    # ---- inter-chunk recurrence over chunk states ----
+    def step(h, inp):
+        Bx_c, dA_tot_c = inp                                # (B,H,P,N),(B,H)
+        h_new = h * jnp.exp(dA_tot_c)[..., None, None] + Bx_c
+        return h_new, h                                     # emit state BEFORE chunk
+
+    h_init = (jnp.zeros((Bsz, H, P, N), f32) if h0 is None
+              else h0.astype(f32))
+    h_last, h_prevs = jax.lax.scan(
+        step, h_init,
+        (Bx.transpose(1, 0, 2, 3, 4), dA_tot.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)              # (B,C,H,P,N)
+
+    # ---- inter-chunk output: C h_prev with decay-from-start ----
+    decay_in = jnp.exp(dA_cum)                              # (B,C,H,Q)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp",
+                       Ch, h_prevs, decay_in)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    y = y + (D.astype(f32)[None, None, :, None] * x.astype(f32))
+    return y.astype(x.dtype), h_last
+
+
+def mamba2_block(p, x, cfg, *, h0=None, conv0=None, return_state=False):
+    """Full Mamba2 block (no outer norm/residual).
+
+    x: (B, S, d_model) -> (B, S, d_model)
+    """
+    B, S, d = x.shape
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    nh, hd = cfg.ssm_nheads, cfg.ssm_head_dim
+
+    from repro.distributed.actctx import constrain
+    zxbcdt = constrain(
+        jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype)), "ffn")
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+
+    if conv0 is not None:
+        # decode path stitches conv state; training uses zero left-context
+        xbc_ext = jnp.concatenate([conv0.astype(xbc.dtype), xbc], axis=1)
+        conv_out = _causal_conv(xbc_ext, p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype))
+        xbc_conv = conv_out[:, conv0.shape[1]:, :]
+        new_conv = xbc_ext[:, -(cfg.ssm_conv - 1):, :]
+    else:
+        xbc_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype))
+        new_conv = xbc[:, -(cfg.ssm_conv - 1):, :]
+    xbc_conv = jax.nn.silu(xbc_conv)
+
+    xs, Bc, Cc = jnp.split(xbc_conv, [di, di + g * n], axis=-1)
+    xs = xs.reshape(B, S, nh, hd)
+    Bc = Bc.reshape(B, S, g, n)
+    Cc = Cc.reshape(B, S, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, h_last = ssd_chunked(xs, dt, A, Bc, Cc, p["D"],
+                            chunk=cfg.ssm_chunk, h0=h0)
+    y = y.reshape(B, S, di)
+
+    # gated RMSNorm (mamba2 uses norm(y * silu(z)))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6)
+         * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        return out, (h_last, new_conv)
+    return out
+
+
+def mamba2_decode(p, x, cfg, state):
+    """O(1) single-token decode. x: (B, 1, d); state = (h, conv_buf).
+
+    h: (B, H, P, N); conv_buf: (B, ssm_conv-1, conv_dim).
+    """
+    h, conv_buf = state
+    out, (h_new, conv_new) = mamba2_block(
+        p, x, cfg, h0=h, conv0=conv_buf, return_state=True)
+    return out, (h_new, conv_new)
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    h = jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                  jnp.float32)
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype)
+    return h, conv

@@ -1,0 +1,518 @@
+"""Unified model assembly for all assigned architectures.
+
+A config is compiled into a *layer plan*: an ordered list of homogeneous
+segments, each scanned with ``jax.lax.scan`` over stacked parameters
+(keeping HLO size O(#segments), not O(#layers)).  Segment kinds:
+
+  attn        -- GQA attention + MLP block   (dense / vlm; window per segment)
+  moe         -- GQA attention + MoE block
+  mamba       -- Mamba2 (SSD) block
+  shared_attn -- zamba2's parameter-shared attention+MLP block
+  enc_attn    -- bidirectional encoder block (whisper)
+  xattn       -- decoder block with self + cross attention (whisper)
+
+Three entry points (used by train/prefill/decode steps and the dry-run):
+  forward_train   full-sequence causal LM loss
+  forward_prefill full-sequence forward that also builds the KV/SSM cache
+  forward_decode  single-token step against the cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.actctx import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models.params import spec, tree_map_specs
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Segment:
+    kind: str
+    count: int
+    window: int = 0          # 0 = full attention
+    causal: bool = True
+    shared_index: int = -1   # invocation index for shared_attn
+
+
+def build_plan(cfg: ModelConfig) -> list[Segment]:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.global_every > 0:
+            # gemma3-style local:global pattern -> runs of equal window
+            segs: list[Segment] = []
+            run_w, run_n = None, 0
+            for i in range(cfg.num_layers):
+                w = 0 if (i + 1) % cfg.global_every == 0 else cfg.sliding_window
+                if w == run_w:
+                    run_n += 1
+                else:
+                    if run_n:
+                        segs.append(Segment("attn", run_n, window=run_w))
+                    run_w, run_n = w, 1
+            if run_n:
+                segs.append(Segment("attn", run_n, window=run_w))
+            return segs
+        return [Segment("attn", cfg.num_layers, window=cfg.sliding_window)]
+    if fam == "moe":
+        return [Segment("moe", cfg.num_layers, window=cfg.sliding_window)]
+    if fam == "ssm":
+        return [Segment("mamba", cfg.num_layers)]
+    if fam == "hybrid":
+        segs = []
+        remaining = cfg.num_layers
+        idx = 0
+        every = cfg.hybrid_attn_every
+        while remaining > 0:
+            segs.append(Segment("shared_attn", 1, shared_index=idx))
+            idx += 1
+            n = min(every, remaining)
+            segs.append(Segment("mamba", n))
+            remaining -= n
+        return segs
+    if fam == "audio":
+        return [Segment("xattn", cfg.num_layers)]
+    raise ValueError(fam)
+
+
+def num_shared_invocations(cfg) -> int:
+    return sum(1 for s in build_plan(cfg) if s.kind == "shared_attn")
+
+
+# ---------------------------------------------------------------------------
+# Per-block param specs
+# ---------------------------------------------------------------------------
+def _block_spec(cfg: ModelConfig, kind: str):
+    if kind in ("attn", "enc_attn"):
+        return {"ln1": L.norm_spec(cfg.norm, cfg.d_model),
+                "attn": L.attn_spec(cfg),
+                "ln2": L.norm_spec(cfg.norm, cfg.d_model),
+                "mlp": L.mlp_spec(cfg)}
+    if kind == "moe":
+        return {"ln1": L.norm_spec(cfg.norm, cfg.d_model),
+                "attn": L.attn_spec(cfg),
+                "ln2": L.norm_spec(cfg.norm, cfg.d_model),
+                "moe": MOE.moe_spec(cfg)}
+    if kind == "mamba":
+        return {"ln": L.norm_spec("rmsnorm", cfg.d_model),
+                "mixer": M2.mamba2_spec(cfg)}
+    if kind == "xattn":
+        return {"ln1": L.norm_spec(cfg.norm, cfg.d_model),
+                "attn": L.attn_spec(cfg),
+                "lnx": L.norm_spec(cfg.norm, cfg.d_model),
+                "xattn": L.attn_spec(cfg),
+                "ln2": L.norm_spec(cfg.norm, cfg.d_model),
+                "mlp": L.mlp_spec(cfg)}
+    raise ValueError(kind)
+
+
+def _stack_spec(tree, n: int):
+    return tree_map_specs(
+        lambda s: dataclasses.replace(s, shape=(n,) + s.shape,
+                                      axes=(None,) + s.axes), tree)
+
+
+def param_spec(cfg: ModelConfig):
+    """Full parameter spec tree for an architecture."""
+    d = cfg.d_model
+    p: dict[str, Any] = {
+        "embed": spec((cfg.vocab_size, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": L.norm_spec(cfg.norm, d),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = spec((d, cfg.vocab_size), ("embed", "vocab"))
+    segs = []
+    for s in build_plan(cfg):
+        if s.kind == "shared_attn":
+            segs.append({})
+        else:
+            segs.append(_stack_spec(_block_spec(cfg, s.kind), s.count))
+    p["segments"] = segs
+    if cfg.family == "hybrid":
+        p["shared"] = _block_spec(cfg, "attn")
+    if cfg.family == "audio":
+        p["encoder"] = {
+            "segments": [_stack_spec(_block_spec(cfg, "enc_attn"),
+                                     cfg.encoder_layers)],
+            "final_norm": L.norm_spec(cfg.norm, d),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block bodies (full-sequence mode)
+# ---------------------------------------------------------------------------
+def _attn_body(bp, x, cfg, seg: Segment, positions, impl, memory=None):
+    h = L.apply_norm(bp["ln1"], x, cfg.norm)
+    a, kv = L.attention_block(bp["attn"], h, cfg, positions=positions,
+                              causal=seg.causal, window=seg.window, impl=impl)
+    x = x + a
+    extras = {"k": kv[0], "v": kv[1]}
+    if seg.kind == "xattn":
+        h = L.apply_norm(bp["lnx"], x, cfg.norm)
+        a, xkv = L.attention_block(bp["xattn"], h, cfg, positions=positions,
+                                   impl=impl, kv=memory)
+        x = x + a
+        extras.update({"xk": xkv[0], "xv": xkv[1]})
+    h = L.apply_norm(bp["ln2"], x, cfg.norm)
+    aux = {}
+    if seg.kind == "moe":
+        m, aux = MOE.apply_moe(bp["moe"], h, cfg)
+    else:
+        m = L.apply_mlp(bp["mlp"], h, cfg)
+    return x + m, extras, aux
+
+
+def _mamba_body(bp, x, cfg):
+    h = L.apply_norm(bp["ln"], x, "rmsnorm")
+    out, (h_last, conv) = M2.mamba2_block(bp["mixer"], h, cfg,
+                                          return_state=True)
+    return x + out, {"h": h_last, "conv": conv}, {}
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _zero_aux(cfg):
+    if cfg.family == "moe":
+        return {"moe_lb_loss": jnp.float32(0), "moe_z_loss": jnp.float32(0),
+                "moe_drop_frac": jnp.float32(0)}
+    return {}
+
+
+def _run_segments(params, cfg, x, positions, *, impl, remat, want_cache,
+                  cache_window, memory=None):
+    """Run the layer plan over full-sequence x. Returns x, caches, aux."""
+    plan = build_plan(cfg)
+    caches = []
+    aux_tot = _zero_aux(cfg)
+
+    for si, seg in enumerate(plan):
+        if seg.kind == "shared_attn":
+            x, extras, _ = _attn_body(params["shared"], x, cfg, seg,
+                                      positions, impl)
+            caches.append(_clip_cache(extras, seg, cfg, cache_window)
+                          if want_cache else {})
+            continue
+
+        seg_params = params["segments"][si]
+
+        def inner(carry, lp, seg=seg):
+            x, aux = carry
+            if seg.kind == "mamba":
+                x, extras, a = _mamba_body(lp, x, cfg)
+            else:
+                x, extras, a = _attn_body(lp, x, cfg, seg, positions, impl,
+                                          memory=memory)
+            for k in aux:
+                aux = dict(aux)
+                aux[k] = aux[k] + a.get(k, 0.0)
+            if not want_cache:
+                extras = {}
+            else:
+                extras = _clip_cache(extras, seg, cfg, cache_window)
+            return (x, aux), extras
+
+        if remat:
+            inner = jax.checkpoint(inner, prevent_cse=False)
+
+        def body(carry, lp):
+            # constraints OUTSIDE the remat boundary: the value autodiff
+            # saves per layer is this constrained tensor, so the stacked
+            # residual buffer inherits batch+seq (SP) sharding.
+            x, aux = carry
+            x = constrain(x, "resid")
+            (x, aux), extras = inner((x, aux), lp)
+            x = constrain(x, "resid")
+            return (x, aux), extras
+
+        (x, aux_tot), seg_cache = jax.lax.scan(body, (x, aux_tot), seg_params)
+        caches.append(seg_cache if want_cache else {})
+
+    return x, caches, aux_tot
+
+
+def _clip_cache(extras, seg: Segment, cfg, cache_window: bool):
+    """Keep only the window-relevant tail of k/v for SWA segments."""
+    out = {}
+    for name, t in extras.items():
+        if name in ("k", "v", "xk", "xv") and cache_window and seg.window > 0 \
+                and seg.kind != "xattn" and t.shape[1] > seg.window:
+            t = t[:, -seg.window:]
+        out[name] = t
+    return out
+
+
+def _embed(params, cfg, tokens, extras=None):
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype) if cfg.family == "dense" \
+        and cfg.global_every > 0 else x  # gemma-style embed scaling
+    if cfg.family == "vlm" and extras is not None and "vis_embeds" in extras:
+        x = jnp.concatenate([extras["vis_embeds"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def _encode_audio(params, cfg, enc_embeds, impl, remat):
+    x = enc_embeds.astype(jnp.bfloat16)
+    pos = jnp.arange(x.shape[1])
+    enc = params["encoder"]
+    seg = Segment("enc_attn", cfg.encoder_layers, causal=False)
+
+    def body(carry, lp):
+        h, _e, _a = _attn_body(lp, carry, cfg, seg, pos, impl)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=True)
+    x, _ = jax.lax.scan(body, x, enc["segments"][0])
+    return L.apply_norm(enc["final_norm"], x, cfg.norm)
+
+
+def _logits(params, cfg, x):
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype)          # (V, d)
+        return jnp.einsum("bsd,vd->bsv", x, w)
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+
+
+def _chunked_ce(params, cfg, x, tokens, vis: int, chunk: int = 512):
+    """Next-token CE with the vocab projection scanned over seq chunks.
+
+    Avoids materializing the full (B, S, V) fp32 logits tensor (gemma3's
+    262k vocab would otherwise need ~8 GB/device at the loss).  The seq
+    length is kept at S (targets rolled, last position masked) so the
+    chunk reshape never crosses shard boundaries, and each chunk body is
+    rematted so backward recomputes its logits instead of stacking them.
+    """
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    xt = x[:, vis:, :]                               # (B, S, d)
+    tgt = jnp.roll(tokens, -1, axis=1)               # (B, S); last is garbage
+    B, S, d = xt.shape
+    c = L._pick_chunk(S, chunk)
+    n = S // c
+    xc = xt.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    tc = tgt.reshape(B, n, c).transpose(1, 0, 2)
+    wc = (jnp.arange(S) < S - 1).astype(jnp.float32).reshape(n, c)
+    if cfg.tie_embeddings:
+        w = params["embed"]
+        proj = lambda h: jnp.einsum("bsd,vd->bsv", h, w.astype(h.dtype))
+    else:
+        w = params["lm_head"]
+        proj = lambda h: jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+
+    def body(acc, inp):
+        xx, tt, ww = inp
+        lg = proj(xx).astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tt[..., None], axis=-1)[..., 0]
+        return acc + ((logz - gold) * ww).sum(), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    tot, _ = jax.lax.scan(body, jnp.float32(0), (xc, tc, wc))
+    return tot / (B * (S - 1))
+
+
+def forward_train(params, cfg: ModelConfig, batch, *, impl="chunked",
+                  remat=True):
+    """Causal-LM loss. batch: tokens (B,S) [+ enc_embeds / vis_embeds]."""
+    tokens = batch["tokens"]
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+    memory = None
+    if cfg.family == "audio":
+        memory = _encode_audio(params, cfg, batch["enc_embeds"], impl, remat)
+
+    x = _embed(params, cfg, tokens, extras)
+    x = constrain(x, "resid")
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = _run_segments(params, cfg, x, positions, impl=impl,
+                              remat=remat, want_cache=False,
+                              cache_window=False, memory=memory)
+
+    # next-token CE over text positions (skip prepended vision tokens)
+    vis = cfg.vision_tokens if cfg.family == "vlm" else 0
+    ce = _chunked_ce(params, cfg, x, tokens, vis)
+    loss = ce
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux["moe_lb_loss"] + 1e-3 * aux["moe_z_loss"]
+    metrics = {"ce": ce, **aux}
+    return loss, metrics
+
+
+def forward_prefill(params, cfg: ModelConfig, batch, *, impl="chunked"):
+    """Full-sequence forward building the decode cache.
+
+    Returns (last-position logits, cache).  Cache layout mirrors the plan:
+    one entry per segment (see init_cache for shapes).
+    """
+    tokens = batch["tokens"]
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+    memory = None
+    if cfg.family == "audio":
+        memory = _encode_audio(params, cfg, batch["enc_embeds"], impl,
+                               remat=False)
+    x = _embed(params, cfg, tokens, extras)
+    positions = jnp.arange(x.shape[1])
+    x, caches, _ = _run_segments(params, cfg, x, positions, impl=impl,
+                                 remat=False, want_cache=True,
+                                 cache_window=True, memory=memory)
+    logits = _logits(params, cfg, x[:, -1:, :])
+    return logits, {"segments": caches, "pos": jnp.int32(tokens.shape[1])}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, ctx_len: int,
+               dtype=jnp.bfloat16):
+    """Zero-initialized decode cache (also used abstractly by the dry-run).
+
+    Full-attention segments get (L, B, ctx, KH, D) ring-free buffers
+    written at ``pos``; SWA segments get (L, B, window, KH, D) shift
+    buffers; mamba segments get O(1) recurrent state.
+    """
+    plan = build_plan(cfg)
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    segs = []
+    for seg in plan:
+        if seg.kind in ("attn", "moe", "shared_attn", "xattn"):
+            wlen = seg.window if seg.window > 0 else ctx_len
+            wlen = min(wlen, ctx_len)
+            n = 1 if seg.kind == "shared_attn" else seg.count
+            lead = () if seg.kind == "shared_attn" else (n,)
+            c = {"k": jnp.zeros(lead + (batch, wlen, kh, hd), dtype),
+                 "v": jnp.zeros(lead + (batch, wlen, kh, hd), dtype)}
+            if seg.kind == "xattn":
+                c["xk"] = jnp.zeros(lead + (batch, cfg.encoder_seq, kh, hd),
+                                    dtype)
+                c["xv"] = jnp.zeros(lead + (batch, cfg.encoder_seq, kh, hd),
+                                    dtype)
+            segs.append(c)
+        elif seg.kind == "mamba":
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            segs.append({
+                "h": jnp.zeros((seg.count, batch, cfg.ssm_nheads,
+                                cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((seg.count, batch, cfg.ssm_conv - 1,
+                                   conv_dim), dtype),
+            })
+        else:
+            raise ValueError(seg.kind)
+    return {"segments": segs, "pos": jnp.int32(0)}
+
+
+def _decode_attn(bp, x, cfg, seg: Segment, pos, ck, cv):
+    """One decode step of an attention block against its cache."""
+    kh = cfg.num_kv_heads
+    g = cfg.num_heads // kh
+    B = x.shape[0]
+    h = L.apply_norm(bp["ln1"], x, cfg.norm)
+    q, k, v = L.attn_qkv(bp["attn"], h, cfg,
+                         jnp.full((1,), pos, jnp.int32))
+    q = q.reshape(B, 1, kh, g, cfg.head_dim)
+    W = ck.shape[1]
+    if seg.window > 0 and W == seg.window:
+        # SWA shift buffer: slot j holds absolute position pos-W+1+j
+        ck = jnp.concatenate([ck[:, 1:], k.astype(ck.dtype)], axis=1)
+        cv = jnp.concatenate([cv[:, 1:], v.astype(cv.dtype)], axis=1)
+        k_pos = pos - W + 1 + jnp.arange(W)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 pos, axis=1)
+        k_pos = jnp.arange(W)
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * (cfg.head_dim ** -0.5)
+    if cfg.attn_logit_softcap:
+        s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+    s = jnp.where(valid[None, None, None, None, :], s, L.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv)
+    o = o.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    x = x + L.attn_out(bp["attn"], o, x.dtype)
+    return x, ck, cv
+
+
+def _decode_xattn(bp, x, cfg, xk, xv):
+    kh = cfg.num_kv_heads
+    g = cfg.num_heads // kh
+    B = x.shape[0]
+    h = L.apply_norm(bp["lnx"], x, cfg.norm)
+    q = jnp.einsum("bsd,dhe->bshe", h, bp["xattn"]["wq"].astype(h.dtype))
+    q = q.reshape(B, 1, kh, g, cfg.head_dim)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   xk.astype(jnp.float32)) * (cfg.head_dim ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(xv.dtype), xv)
+    o = o.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    return x + L.attn_out(bp["xattn"], o, x.dtype)
+
+
+def forward_decode(params, cfg: ModelConfig, tokens, cache, *, pos=None):
+    """One decode step. tokens: (B, 1) -> logits (B, 1, V), updated cache."""
+    plan = build_plan(cfg)
+    pos = cache["pos"] if pos is None else pos
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    if cfg.family == "dense" and cfg.global_every > 0:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    new_segs = []
+    for si, seg in enumerate(plan):
+        c = cache["segments"][si]
+        if seg.kind == "shared_attn":
+            x, ck, cv = _decode_attn(params["shared"], x, cfg, seg, pos,
+                                     c["k"], c["v"])
+            h = L.apply_norm(params["shared"]["ln2"], x, cfg.norm)
+            x = x + L.apply_mlp(params["shared"]["mlp"], h, cfg)
+            new_segs.append({"k": ck, "v": cv})
+            continue
+
+        seg_params = params["segments"][si]
+
+        if seg.kind == "mamba":
+            def body(carry, inp):
+                xx = carry
+                lp, hs, conv = inp
+                h = L.apply_norm(lp["ln"], xx, "rmsnorm")
+                out, (h_new, conv_new) = M2.mamba2_decode(
+                    lp["mixer"], h, cfg, (hs, conv))
+                return xx + out, {"h": h_new, "conv": conv_new}
+            x, cc = jax.lax.scan(body, x, (seg_params, c["h"], c["conv"]))
+            new_segs.append(cc)
+            continue
+
+        # attention-family segment
+        def body(carry, inp, seg=seg):
+            xx = carry
+            lp, cc = inp
+            xx, ck, cv = _decode_attn(lp, xx, cfg, seg, pos,
+                                      cc["k"], cc["v"])
+            out_c = {"k": ck, "v": cv}
+            if seg.kind == "xattn":
+                xx = _decode_xattn(lp, xx, cfg, cc["xk"], cc["xv"])
+                out_c.update({"xk": cc["xk"], "xv": cc["xv"]})
+            h = L.apply_norm(lp["ln2"], xx, cfg.norm)
+            if seg.kind == "moe":
+                m, _ = MOE.apply_moe(lp["moe"], h, cfg)
+            else:
+                m = L.apply_mlp(lp["mlp"], h, cfg)
+            return xx + m, out_c
+
+        x, cc = jax.lax.scan(body, x, (seg_params, c))
+        new_segs.append(cc)
+
+    logits = _logits(params, cfg, x)
+    return logits, {"segments": new_segs, "pos": pos + 1}

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer: top-k routing with GShard einsum dispatch.
+
+Experts are sharded over the "model" mesh axis (expert parallelism).
+Tokens are grouped by batch row; per-group capacity bounds the dispatch
+tensors so all shapes stay static under pjit.  The one-hot dispatch /
+combine einsums are the canonical TPU formulation (GShard/Switch): under
+a (data=batch, model=experts) mesh GSPMD turns them into slice +
+all-reduce pairs; the ragged all-to-all variant is a recorded perf
+iteration (EXPERIMENTS.md SPerf).
+
+Aux losses (load-balance + router z-loss) follow Switch Transformer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import spec
+
+
+def moe_spec(cfg):
+    """Expert weights are 2-D sharded AT REST: experts over "model" (EP) x
+    expert-ffn over "data".  Unlike ZeRO-3 (embed-dim over data), this
+    layout never all-gathers expert weights - under gradient accumulation
+    ZeRO-3 re-gathers per microbatch (measured 16.7 TB/step wire for
+    dbrx train, EXPERIMENTS SPerf iteration 4); here the weights stay
+    put and the (tokens, d) partial sums are reduced instead (~60x less).
+    """
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {
+        "router": spec((d, e), ("embed", "experts"), scale=0.02),
+        "wi": spec((e, d, f), ("experts", None, "moe_ffn")),
+        "wo": spec((e, f, d), ("experts", "moe_ffn", None),
+                   scale=0.02 / max(1, cfg.num_layers) ** 0.5),
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = spec((e, d, f), ("experts", None, "moe_ffn"))
+    return p
+
+
+def _capacity(tokens_per_group: int, num_experts: int, k: int, factor: float) -> int:
+    c = int(tokens_per_group * k * factor / num_experts)
+    return max(c, 1)
+
+
+def apply_moe(p, x, cfg, *, capacity_factor=None, group_size=256):
+    """x: (B, S, d) -> (B, S, d), aux dict.
+
+    Tokens are regrouped to (G, group_size, d) before the dispatch
+    einsums: the (G, S_g, E, C) dispatch/combine tensors scale as
+    tokens * E * C, so small groups keep them a fraction of the residual
+    stream.  ``group_size`` matches the SP shard (S / TP) so the reshape
+    never crosses shard boundaries.  Top-k gating with per-expert
+    capacity; overflow tokens drop (GShard semantics).
+    """
+    B0, S0, d = x.shape
+    gs = min(group_size, S0)
+    if S0 % gs == 0:
+        x = x.reshape(B0 * (S0 // gs), gs, d)
+    B, S, _ = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    C = _capacity(S, E, K, capacity_factor or cfg.capacity_factor)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B,S,E)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                  # (B,S,K)
+    # renormalize selected gates (mixtral/dbrx convention)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # one-hot (B,S,K,E); position of each token within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)        # (B,S,K,E)
+    # priority: earlier tokens first, k=0 before k=1 (flatten S,K)
+    flat = onehot.reshape(B, S * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat                # (B,S*K,E)
+    within_cap = pos_in_expert < C
+    flat = flat * within_cap
+    slot = jnp.einsum("bte,btec->btec", flat,
+                      jax.nn.one_hot(pos_in_expert, C, dtype=jnp.float32))
+    dispatch = slot.reshape(B, S, K, E, C).sum(axis=2)             # (B,S,E,C) 0/1
+    gate_w = jnp.einsum("bske,bsk->bse", onehot, gate_vals)        # (B,S,E)
+    combine = dispatch * gate_w[..., None]                         # (B,S,E,C)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(x.dtype), x)  # (E,B,C,d)
+
+    # expert FFN, vectorized over E (sharded over "model")
+    wi = p["wi"].astype(x.dtype)
+    wo = p["wo"].astype(x.dtype)
+    h = jnp.einsum("ebcd,edf->ebcf", xin, wi)
+    if "wg" in p:
+        g = jnp.einsum("ebcd,edf->ebcf", xin, p["wg"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    out_e = jnp.einsum("ebcf,efd->ebcd", h, wo)                    # (E,B,C,d)
+
+    y = jnp.einsum("ebcd,bsec->bsd", out_e, combine.astype(x.dtype))
+
+    # --- aux losses (fp32) ---
+    # load-balance: E * sum_e mean_prob_e * frac_tokens_e (Switch eq. 4)
+    me = probs.mean(axis=(0, 1))                                   # (E,)
+    ce = onehot.sum(axis=2).mean(axis=(0, 1))                      # (E,) frac routed
+    lb_loss = E * jnp.sum(me * ce / K)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - dispatch.sum(axis=(2, 3)).mean() / K
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_drop_frac": dropped}
+    return y.reshape(B0, S0, d), aux

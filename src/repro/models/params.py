@@ -1,0 +1,146 @@
+"""Parameter-spec system: declare shapes + logical axes once, derive
+materialized params, ShapeDtypeStructs (dry-run) and NamedShardings from
+the same tree.
+
+A model definition builds a pytree of ``ParamSpec`` leaves.  From it we
+can (a) initialize real weights, (b) produce ShapeDtypeStruct stand-ins
+for AOT lowering without touching device memory, and (c) resolve logical
+axes to mesh axes for pjit in_shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]          # logical axis name per dim (or None)
+    init: str = "normal"                     # normal | zeros | ones | small_normal
+    scale: float = 0.02
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, init="normal", scale=0.02, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def init_params(spec_tree, key):
+    """Materialize a spec tree into real fp32 parameters."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(s: ParamSpec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        if s.init == "arange_neg":  # mamba A_log init: log(arange(1, n+1))
+            n = s.shape[-1]
+            base = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+            return jnp.broadcast_to(base, s.shape).astype(s.dtype)
+        std = s.scale
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype)
+
+    return jax.tree.unflatten(treedef, [make(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree for AOT lowering (no allocation)."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree
+    )
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> mesh-axis resolution
+# ---------------------------------------------------------------------------
+
+# Default rules for the production 2D/3D mesh.  "fsdp" (embed dim) shards
+# parameters over the data axis (ZeRO-3 style); "tp" dims shard over model.
+DEFAULT_RULES: dict[str, str] = {
+    "embed": "data",        # FSDP axis (ZeRO-3)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "moe_ffn": "data",      # 2-D expert sharding: no weight gathers
+    "experts": "model",     # expert parallelism
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "enc_seq": None,
+}
+
+
+def resolve_axes(s: ParamSpec, rules: dict, mesh: jax.sharding.Mesh):
+    """Map logical axes to mesh axes.
+
+    Argument shardings must divide evenly (jit in_shardings rejects
+    padding), so a dim that is not a multiple of the mesh-axis size is
+    replicated instead - e.g. qwen2.5's 40 heads or odd vocab sizes on a
+    16-wide model axis.  The padded-sharding variant for such dims is a
+    recorded perf iteration (EXPERIMENTS.md SPerf).
+    """
+    out = []
+    for dim, name in zip(s.shape, s.axes):
+        mesh_axis = rules.get(name) if name else None
+        if mesh_axis is None or mesh_axis not in mesh.shape:
+            out.append(None)
+            continue
+        size = mesh.shape[mesh_axis]
+        if dim % size == 0:
+            out.append(mesh_axis)
+        else:
+            out.append(None)
+    # A mesh axis may appear at most once in a partition spec.
+    seen = set()
+    dedup = []
+    for a in out:
+        if a is not None and a in seen:
+            dedup.append(None)
+        else:
+            dedup.append(a)
+            if a is not None:
+                seen.add(a)
+    return tuple(dedup)
+
+
+def param_shardings(spec_tree, mesh: jax.sharding.Mesh, rules: Optional[dict] = None):
+    """NamedSharding tree matching the spec tree."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    P = jax.sharding.PartitionSpec
+
+    def one(s: ParamSpec):
+        return jax.sharding.NamedSharding(mesh, P(*resolve_axes(s, rules, mesh)))
+
+    return tree_map_specs(one, spec_tree)
+
+
+def replicated_sharding(mesh: jax.sharding.Mesh):
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())

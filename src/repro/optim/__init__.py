@@ -1,0 +1,17 @@
+from repro.optim.adamw import (
+    OptState,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+
+__all__ = [
+    "OptState",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "init_opt_state",
+    "lr_schedule",
+]

@@ -1,0 +1,144 @@
+"""Jaxpr-walking FLOP/byte counter with static scan trip counts.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+independent of trip count, so any scanned program (all of ours: layers,
+attention chunks, CE chunks) is undercounted by the scan lengths.  All
+loops in this framework are ``lax.scan`` with static length, so walking
+the jaxpr gives EXACT logical FLOPs:
+
+  * dot_general: 2 * prod(batch) * prod(lhs_free) * prod(rhs_free)
+                   * prod(contract)
+  * scan: length * cost(body)  (recursive; handles nesting)
+  * remat/pjit/custom_vjp wrappers: recurse into sub-jaxprs
+  * elementwise / reductions: prod(output shape) (second-order; reported
+    in a separate counter)
+
+Bytes are estimated as sum of operand+result sizes per eqn (an upper
+bound on HBM traffic that ignores fusion; the XLA number is reported
+alongside).  These are LOGICAL (pre-SPMD) totals: divide by device count
+for per-device terms, which assumes even sharding - padding waste from
+uneven head counts is called out separately in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+
+@dataclass
+class Cost:
+    matmul_flops: float = 0.0
+    elementwise_flops: float = 0.0
+    bytes_touched: float = 0.0
+
+    def __iadd__(self, other):
+        self.matmul_flops += other.matmul_flops
+        self.elementwise_flops += other.elementwise_flops
+        self.bytes_touched += other.bytes_touched
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.matmul_flops * k, self.elementwise_flops * k,
+                    self.bytes_touched * k)
+
+    @property
+    def total_flops(self) -> float:
+        return self.matmul_flops + self.elementwise_flops
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 0
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    (lhs, rhs) = (eqn.invars[0].aval, eqn.invars[1].aval)
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    contract = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    lfree = math.prod(lhs.shape[i] for i in range(len(lhs.shape))
+                      if i not in lc and i not in lb)
+    rfree = math.prod(rhs.shape[i] for i in range(len(rhs.shape))
+                      if i not in rc and i not in rb)
+    return 2.0 * batch * contract * lfree * rfree
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # flops = 2 * out_elems * (kernel_spatial * in_channels)
+    kernel = math.prod(rhs.shape[:-1]) if rhs.shape else 1
+    return 2.0 * _size(out) * kernel
+
+
+_SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr",
+                    "body_jaxpr")
+
+
+def _sub_jaxprs(eqn):
+    for name in _SUBJAXPR_PARAMS:
+        if name in eqn.params:
+            yield name, eqn.params[name]
+    if "branches" in eqn.params:
+        for b in eqn.params["branches"]:
+            yield "branch", b
+
+
+def _as_jaxpr(j):
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def count_jaxpr(jaxpr) -> Cost:
+    cost = Cost()
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            cost.matmul_flops += _dot_flops(eqn)
+            cost.bytes_touched += sum(_bytes(v.aval) for v in eqn.invars)
+            cost.bytes_touched += sum(_bytes(v.aval) for v in eqn.outvars)
+        elif prim == "conv_general_dilated":
+            cost.matmul_flops += _conv_flops(eqn)
+            cost.bytes_touched += sum(_bytes(v.aval) for v in eqn.invars)
+            cost.bytes_touched += sum(_bytes(v.aval) for v in eqn.outvars)
+        elif prim == "scan":
+            body = count_jaxpr(_as_jaxpr(eqn.params["jaxpr"]))
+            cost += body.scaled(eqn.params["length"])
+        elif prim == "while":
+            # not used by this framework; count body once and flag
+            cost += count_jaxpr(_as_jaxpr(eqn.params["body_jaxpr"]))
+        elif prim == "cond":
+            branches = [count_jaxpr(_as_jaxpr(b))
+                        for b in eqn.params["branches"]]
+            if branches:
+                worst = max(branches, key=lambda c: c.total_flops)
+                cost += worst
+        elif any(n in eqn.params for n in ("jaxpr", "call_jaxpr",
+                                           "fun_jaxpr")):
+            for _, sj in _sub_jaxprs(eqn):
+                cost += count_jaxpr(_as_jaxpr(sj))
+        else:
+            out_elems = sum(_size(v.aval) for v in eqn.outvars)
+            cost.elementwise_flops += out_elems
+            cost.bytes_touched += sum(_bytes(v.aval) for v in eqn.invars)
+            cost.bytes_touched += out_elems and sum(
+                _bytes(v.aval) for v in eqn.outvars)
+    return cost
+
+
+def count_fn(fn, *args, **kwargs) -> Cost:
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return count_jaxpr(closed.jaxpr)

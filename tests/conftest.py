@@ -1,0 +1,32 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose - tests see the
+real device count; multi-device tests spawn subprocesses with
+--xla_force_host_platform_device_count set explicitly."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a subprocess with N fake host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:{r.stdout[-3000:]}\n"
+            f"STDERR:{r.stderr[-3000:]}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

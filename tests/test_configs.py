@@ -1,0 +1,53 @@
+"""Config registry: param counts vs published sizes, shape assignment."""
+
+import pytest
+
+from repro.configs.base import LM_SHAPES, shapes_for
+from repro.configs.registry import ARCHS, all_cells, skipped_cells, \
+    smoke_config
+
+PUBLISHED_B = {
+    "dbrx-132b": (132, 0.05), "phi3.5-moe-42b-a6.6b": (41.9, 0.05),
+    "mamba2-1.3b": (1.3, 0.1), "h2o-danube-3-4b": (4.0, 0.1),
+    "gemma3-27b": (27.0, 0.10), "qwen2.5-32b": (32.5, 0.05),
+    "tinyllama-1.1b": (1.1, 0.05), "whisper-small": (0.244, 0.25),
+    "internvl2-1b": (0.5, 0.25), "zamba2-7b": (7.0, 0.10),
+}
+
+ACTIVE_B = {"dbrx-132b": (36, 0.10), "phi3.5-moe-42b-a6.6b": (6.6, 0.05)}
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_param_counts_match_published(name):
+    cfg = ARCHS[name]
+    target, tol = PUBLISHED_B[name]
+    total = cfg.params_total() / 1e9
+    assert abs(total - target) / target < tol, (name, total, target)
+
+
+@pytest.mark.parametrize("name", list(ACTIVE_B))
+def test_active_params_moe(name):
+    cfg = ARCHS[name]
+    target, tol = ACTIVE_B[name]
+    active = cfg.params_active() / 1e9
+    assert abs(active - target) / target < tol, (name, active, target)
+
+
+def test_cell_assignment_covers_40():
+    assert len(all_cells()) + len(skipped_cells()) == 10 * len(LM_SHAPES)
+    # only long_500k may be skipped, only for full-attention archs
+    for arch, shape, reason in skipped_cells():
+        assert shape == "long_500k"
+        assert not ARCHS[arch].supports_long_context
+
+
+def test_long_context_archs_run_long_500k():
+    for name in ("mamba2-1.3b", "zamba2-7b", "gemma3-27b", "h2o-danube-3-4b"):
+        assert "long_500k" in {s.name for s in shapes_for(ARCHS[name])}
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_smoke_configs_are_small(name):
+    cfg = smoke_config(name)
+    assert cfg.params_total() < 5e6
+    assert cfg.family == ARCHS[name].family

@@ -1,0 +1,141 @@
+"""Graph engine vs oracles (networkx / numpy), single partition in-process
+and 8 partitions via subprocess."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+import networkx as nx
+
+from repro.core import GraphEngine, partition_graph
+from repro.graphs import generate_edges, rmat_edges, urand_edges
+from repro.launch.mesh import make_graph_mesh
+
+INT_INF = 2 ** 30
+
+
+def pr_oracle(edges, n, iters=100, alpha=0.85):
+    outdeg = np.bincount(edges[:, 0], minlength=n).astype(np.float64)
+    r = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        contrib = np.where(outdeg > 0, r / np.maximum(outdeg, 1), 0.0)
+        z = np.zeros(n)
+        np.add.at(z, edges[:, 1], contrib[edges[:, 0]])
+        r = (1 - alpha) / n + alpha * z
+    return r
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    n, e = 1500, 12000
+    edges = urand_edges(n, e, seed=11)
+    g = partition_graph(edges, n, parts=1)
+    eng = GraphEngine(g, make_graph_mesh(1))
+    G = nx.DiGraph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(edges.tolist())
+    return n, edges, eng, eng.device_graph(), G
+
+
+@pytest.mark.parametrize("mode", ["bsp", "fast"])
+def test_bfs_vs_networkx(small_graph, mode):
+    n, edges, eng, garr, G = small_graph
+    root = 5
+    dist = nx.single_source_shortest_path_length(G, root)
+    parents, levels = eng.bfs(mode=mode)(garr, jnp.int32(root))
+    par = eng.gather_vertex_field(parents)
+    reached = {v for v in range(n) if par[v] < INT_INF}
+    assert reached == set(dist)
+    # every parent sits exactly one level above its child
+    for v in list(reached)[:400]:
+        if v != root:
+            assert dist[int(par[v])] == dist[v] - 1
+
+
+@pytest.mark.parametrize("mode,compress", [("bsp", False), ("fast", False),
+                                           ("fast", True)])
+def test_pagerank_vs_power_iteration(small_graph, mode, compress):
+    n, edges, eng, garr, G = small_graph
+    ref = pr_oracle(edges, n)
+    rank, err, it = eng.pagerank(mode=mode, iters=100, tol=1e-10,
+                                 compress=compress)(garr)
+    r = eng.gather_vertex_field(rank)
+    rel = np.abs(r - ref).max() / ref.max()
+    assert rel < (5e-3 if compress else 1e-5), rel
+
+
+def test_pagerank_mass_conservation(small_graph):
+    """No-dangling graph conserves total rank mass = 1."""
+    n = 1024
+    rng = np.random.default_rng(3)
+    # ensure every vertex has >= 1 out-edge
+    src = np.repeat(np.arange(n), 4)
+    dst = rng.integers(0, n, src.size)
+    edges = np.stack([src, dst], 1)
+    g = partition_graph(edges, n, parts=1)
+    eng = GraphEngine(g, make_graph_mesh(1))
+    rank, _, _ = eng.pagerank(mode="fast", iters=60, tol=1e-12,
+                              compress=False)(eng.device_graph())
+    total = float(eng.gather_vertex_field(rank).sum())
+    assert abs(total - 1.0) < 1e-3, total
+
+
+def test_sssp_vs_dijkstra(small_graph):
+    n, edges, eng, garr, G = small_graph
+    dist, rounds = eng.sssp()(garr, jnp.int32(5))
+    d = eng.gather_vertex_field(dist)
+    su = edges[:, 0].astype(np.uint32)
+    du = edges[:, 1].astype(np.uint32)
+    w = 1.0 + ((su * np.uint32(2654435761) ^ du * np.uint32(40503))
+               % np.uint32(1 << 16)).astype(np.float64) / (1 << 16)
+    Gw = nx.DiGraph()
+    Gw.add_nodes_from(range(n))
+    Gw.add_weighted_edges_from(
+        [(int(a), int(b), float(ww)) for (a, b), ww in zip(edges, w)])
+    dref = nx.single_source_dijkstra_path_length(Gw, 5)
+    for v, dv in list(dref.items())[:500]:
+        assert abs(d[v] - dv) < 1e-3
+
+
+def test_cc_vs_networkx(small_graph):
+    n, edges, eng, garr, G = small_graph
+    labels, _ = eng.cc()(garr)
+    lab = eng.gather_vertex_field(labels)
+    for comp in nx.weakly_connected_components(G):
+        assert len({int(lab[v]) for v in comp}) == 1
+
+
+def test_rmat_generator_skew():
+    edges = rmat_edges(12, 4096 * 8, seed=1)
+    deg = np.bincount(edges[:, 0], minlength=1 << 12)
+    # rmat should be much more skewed than uniform
+    assert deg.max() > 8 * deg.mean()
+
+
+def test_multi_partition_parity(run_with_devices=None):
+    from conftest import run_with_devices as rwd
+    out = rwd("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.graphs import urand_edges
+from repro.core import GraphEngine, partition_graph
+from repro.launch.mesh import make_graph_mesh
+n, e = 2048, 16384
+edges = urand_edges(n, e, seed=3)
+res = {}
+for parts in (1, 8):
+    g = partition_graph(edges, n, parts=parts)
+    eng = GraphEngine(g, make_graph_mesh(parts))
+    garr = eng.device_graph()
+    parents, _ = eng.bfs(mode='fast')(garr, jnp.int32(1))
+    rank, _, _ = eng.pagerank(mode='fast', iters=40, tol=1e-12,
+                              compress=False)(garr)
+    res[parts] = (eng.gather_vertex_field(parents),
+                  eng.gather_vertex_field(rank))
+reach1 = res[1][0] < 2**30
+reach8 = res[8][0] < 2**30
+assert (reach1 == reach8).all()
+np.testing.assert_allclose(res[1][1], res[8][1], rtol=1e-5, atol=1e-9)
+print('PARITY OK')
+""", devices=8)
+    assert "PARITY OK" in out

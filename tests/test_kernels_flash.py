@@ -1,0 +1,68 @@
+"""Flash attention Pallas kernel: shape/dtype/mask sweep vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.models.layers import attention_naive
+
+
+@pytest.mark.parametrize("bh,s,d,bq,bk", [
+    (2, 256, 128, 128, 128), (4, 512, 128, 256, 128), (1, 128, 256, 64, 64),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_kernel_sweep(bh, s, d, bq, bk, causal, window):
+    q, k, v = [jax.random.normal(jax.random.key(i), (bh, s, d), jnp.float32)
+               for i in range(3)]
+    got = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_kernel_dtypes(dtype, tol):
+    q, k, v = [jax.random.normal(jax.random.key(i), (2, 256, 128),
+                                 jnp.float32).astype(dtype)
+               for i in range(3)]
+    got = flash_attention_fwd(q, k, v, causal=True, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_kernel_cross_lengths():
+    """Sq != Sk (cross-attention shape)."""
+    q = jax.random.normal(jax.random.key(0), (2, 128, 128))
+    k = jax.random.normal(jax.random.key(1), (2, 512, 128))
+    v = jax.random.normal(jax.random.key(2), (2, 512, 128))
+    got = flash_attention_fwd(q, k, v, causal=False, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_ops_wrapper_pads_odd_head_dim():
+    """danube3's head_dim=120 path: pad to 128 + scale correction."""
+    q, k, v = [jax.random.normal(jax.random.key(i), (2, 128, 4, 120))
+               for i in range(3)]
+    got = flash_attention(q, k, v, causal=True, force_kernel=True,
+                          interpret=True)
+    ref = attention_naive(q, k, v, q_pos=jnp.arange(128),
+                          k_pos=jnp.arange(128), causal=True, window=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=5e-5)
+
+
+def test_flash_softcap():
+    q, k, v = [jax.random.normal(jax.random.key(i), (1, 128, 128))
+               for i in range(3)]
+    got = flash_attention_fwd(q, k, v, causal=True, softcap=20.0,
+                              interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,84 @@
+"""Layer-level unit tests: norms, rope, flash attention vs naive oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def test_rmsnorm_matches_manual():
+    x = jax.random.normal(jax.random.key(0), (2, 5, 16))
+    p = {"scale": jnp.full((16,), 2.0)}
+    got = L.apply_norm(p, x, "rmsnorm")
+    ref = x / np.sqrt((np.asarray(x) ** 2).mean(-1, keepdims=True) + 1e-6) * 2
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-5)
+
+
+def test_layernorm_zero_mean_unit_var():
+    x = jax.random.normal(jax.random.key(1), (3, 7, 32)) * 5 + 3
+    p = {"scale": jnp.ones((32,)), "bias": jnp.zeros((32,))}
+    y = np.asarray(L.apply_norm(p, x, "layernorm"))
+    np.testing.assert_allclose(y.mean(-1), 0, atol=1e-4)
+    np.testing.assert_allclose(y.var(-1), 1, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    d = 32
+    x = jax.random.normal(jax.random.key(2), (1, 8, 2, d))
+    pos = jnp.arange(8)
+    y = L.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.key(3), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.key(4), (1, 1, 1, d))
+    def dot_at(i, j):
+        qi = L.apply_rope(q, jnp.array([i]), 1e4)
+        kj = L.apply_rope(k, jnp.array([j]), 1e4)
+        return float((qi * kj).sum())
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 16, 0.0), (False, 0, 0.0), (True, 0, 20.0)])
+def test_flash_xla_matches_naive(causal, window, softcap):
+    B, S, H, D = 2, 64, 2, 16
+    q, k, v = [jax.random.normal(jax.random.key(i), (B, S, H, D))
+               for i in range(3)]
+    o1 = L.flash_attention_xla(q, k, v, causal, window, softcap, 32, 32)
+    o2 = L.attention_naive(q, k, v, q_pos=jnp.arange(S), k_pos=jnp.arange(S),
+                           causal=causal, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_flash_xla_grads_match_naive():
+    B, S, H, D = 1, 32, 2, 8
+    q, k, v = [jax.random.normal(jax.random.key(i), (B, S, H, D))
+               for i in range(3)]
+    f1 = lambda q, k, v: L.flash_attention_xla(
+        q, k, v, True, 0, 0.0, 16, 16).sum()
+    f2 = lambda q, k, v: L.attention_naive(
+        q, k, v, q_pos=jnp.arange(S), k_pos=jnp.arange(S), causal=True,
+        window=0).astype(jnp.float32).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+def test_sliding_window_masks_far_past():
+    S = 32
+    m = L.attn_mask(jnp.arange(S), jnp.arange(S), causal=True, window=4)
+    m = np.asarray(m)
+    assert m[10, 10] and m[10, 7] and not m[10, 6] and not m[5, 9]
+
+
+def test_repeat_kv():
+    k = jnp.arange(2 * 3 * 2 * 4).reshape(2, 3, 2, 4)
+    r = L.repeat_kv(k, 2)
+    assert r.shape == (2, 3, 4, 4)
+    np.testing.assert_array_equal(np.asarray(r[:, :, 0]),
+                                  np.asarray(r[:, :, 1]))

@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config
+of the same family, one forward/train step on CPU, output shapes + no
+NaNs; plus decode-path and grad-accumulation consistency checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCHS, SMOKE_SHAPE, smoke_config
+from repro.launch.steps import make_train_step
+from repro.models import (
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_cache,
+    init_params,
+    param_spec,
+)
+from repro.optim import init_opt_state
+
+
+def _batch(cfg, B=2, S=64, key=1):
+    b = {"tokens": jax.random.randint(jax.random.key(key), (B, S), 0,
+                                      cfg.vocab_size)}
+    if cfg.family == "audio":
+        b["enc_embeds"] = 0.1 * jax.random.normal(
+            jax.random.key(2), (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        b["vis_embeds"] = 0.02 * jax.random.normal(
+            jax.random.key(2), (B, cfg.vision_tokens, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_train_step_smoke(name):
+    cfg = smoke_config(name)
+    params = init_params(param_spec(cfg), jax.random.key(0))
+    opt = init_opt_state(params)
+    tc = TrainConfig(total_steps=10, warmup_steps=2)
+    step = jax.jit(make_train_step(cfg, tc))
+    b = _batch(cfg, SMOKE_SHAPE.global_batch, SMOKE_SHAPE.seq_len)
+    params2, opt2, metrics = step(params, opt, b)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and 1.0 < loss < 20.0, (name, loss)
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l2 = jax.tree.leaves(params2)[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l2))
+    # all outputs finite
+    for leaf in jax.tree.leaves(params2):
+        assert np.isfinite(np.asarray(leaf)).all(), name
+
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "gemma3-27b",
+                                  "h2o-danube-3-4b", "zamba2-7b",
+                                  "mamba2-1.3b", "qwen2.5-32b"])
+def test_prefill_decode_equivalence(name):
+    """Decode step-by-step reproduces prefill logits at the last position."""
+    cfg = smoke_config(name)
+    params = init_params(param_spec(cfg), jax.random.key(0))
+    S = 16
+    toks = jax.random.randint(jax.random.key(1), (2, S), 0, cfg.vocab_size)
+    lg_p, _ = jax.jit(lambda p, b: forward_prefill(p, cfg, b))(
+        params, {"tokens": toks})
+    cache = init_cache(cfg, 2, S)
+    dec = jax.jit(lambda p, t, c: forward_decode(p, cfg, t, c))
+    for t in range(S):
+        lg_d, cache = dec(params, toks[:, t:t + 1], cache)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_d),
+                               atol=0.05, rtol=0.05)
+
+
+def test_grad_accum_equivalence():
+    """accum=2 matches accum=1 on the same global batch (same grads)."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(param_spec(cfg), jax.random.key(0))
+    b = _batch(cfg, B=4, S=32)
+
+    outs = {}
+    for accum in (1, 2):
+        tc = TrainConfig(total_steps=10, warmup_steps=2, grad_accum=accum)
+        opt = init_opt_state(params)
+        step = jax.jit(make_train_step(cfg, tc))
+        p2, _, m = step(params, opt, b)
+        outs[accum] = (p2, float(m["loss"]))
+    assert abs(outs[1][1] - outs[2][1]) < 1e-3
+    for a, b_ in zip(jax.tree.leaves(outs[1][0]),
+                     jax.tree.leaves(outs[2][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=2e-4, rtol=2e-3)
+
+
+def test_loss_decreases_over_steps():
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(param_spec(cfg), jax.random.key(0))
+    opt = init_opt_state(params)
+    tc = TrainConfig(learning_rate=3e-3, total_steps=60, warmup_steps=5)
+    step = jax.jit(make_train_step(cfg, tc))
+    from repro.data import TokenStream
+    stream = TokenStream(global_batch=4, seq_len=64,
+                         vocab_size=cfg.vocab_size)
+    losses = []
+    for i in range(60):
+        params, opt, m = step(params, opt, stream.next())
+        losses.append(float(m["loss"]))
+    first = sum(losses[:8]) / 8
+    last = sum(losses[-8:]) / 8
+    assert last < first - 0.1, (first, last)

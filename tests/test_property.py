@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bfs import _pack_bits, _test_bits
+from repro.distributed.compression import quantize_int8
+from repro.graphs import urand_edges
+from repro.core.graph import partition_graph
+from repro.models import layers as L
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_pack_unpack_bits_roundtrip(nwords, seed):
+    rng = np.random.default_rng(seed)
+    bits = jnp.asarray(rng.integers(0, 2, nwords * 32, dtype=np.int32)
+                       .astype(bool))
+    packed = _pack_bits(bits)
+    idx = jnp.arange(nwords * 32, dtype=jnp.int32)
+    recovered = _test_bits(packed, idx) == 1
+    np.testing.assert_array_equal(np.asarray(recovered), np.asarray(bits))
+
+
+@given(st.integers(2, 64), st.integers(1, 6), st.integers(0, 2 ** 20))
+@settings(**SETTINGS)
+def test_partition_conserves_edges(nv_exp, deg, seed):
+    """Sum of valid edges across partitions == |E| for both layouts."""
+    n = 32 * nv_exp
+    e = n * deg
+    edges = urand_edges(n, e, seed=seed)
+    for parts in (1, 2, 4):
+        g = partition_graph(edges, n, parts=parts)
+        out_valid = (g.out_dst_global < g.n).sum()
+        in_valid = (g.in_src_global < g.n).sum()
+        assert out_valid == e, (parts, out_valid, e)
+        assert in_valid == e, (parts, in_valid, e)
+        # degree fields consistent
+        assert g.out_degree.sum() == e
+        assert g.in_degree.sum() == e
+
+
+@given(st.integers(1, 8), st.integers(4, 32), st.integers(0, 2 ** 20))
+@settings(**SETTINGS)
+def test_flash_matches_naive_property(heads, seq4, seed):
+    s = 4 * seq4
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 3)
+    q, k, v = [jax.random.normal(kk, (1, s, heads, 8)) for kk in ks]
+    o1 = L.flash_attention_xla(q, k, v, True, 0, 0.0, 16, 16)
+    o2 = L.attention_naive(q, k, v, q_pos=jnp.arange(s), k_pos=jnp.arange(s),
+                           causal=True, window=0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5)
+
+
+@given(st.integers(0, 2 ** 20))
+@settings(**SETTINGS)
+def test_softmax_rows_sum_to_one(seed):
+    s = 32
+    q, k, v = [jax.random.normal(jax.random.key(seed + i), (1, s, 2, 8))
+               for i in range(3)]
+    # with v = ones, attention output must be exactly ones (row-stochastic)
+    ones = jnp.ones_like(v)
+    o = L.attention_naive(q, k, ones, q_pos=jnp.arange(s),
+                          k_pos=jnp.arange(s), causal=True, window=0)
+    np.testing.assert_allclose(np.asarray(o), 1.0, atol=1e-5)
+
+
+@given(st.integers(0, 2 ** 16), st.floats(0.01, 100.0))
+@settings(**SETTINGS)
+def test_int8_error_feedback_bounded(seed, scale):
+    """Quantization residual is bounded by one quantization step."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=256).astype(np.float32)) * scale
+    resid = jnp.zeros_like(x)
+    q, s, r = quantize_int8(x, resid)
+    assert float(jnp.abs(r).max()) <= float(s) * 0.5 + 1e-6
+    # dequantized + residual reconstructs exactly
+    np.testing.assert_allclose(
+        np.asarray(q.astype(jnp.float32) * s + r), np.asarray(x),
+        rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_bfs_parents_form_valid_tree(seed):
+    """Random small graph: BFS parents always one level apart (oracle-free
+    invariant: parent of v was reached before v)."""
+    import networkx as nx
+    from repro.core import GraphEngine
+    from repro.launch.mesh import make_graph_mesh
+    n = 256
+    edges = urand_edges(n, 1024, seed=seed)
+    g = partition_graph(edges, n, parts=1)
+    eng = GraphEngine(g, make_graph_mesh(1))
+    parents, _ = eng.bfs(mode="fast")(eng.device_graph(), jnp.int32(0))
+    par = eng.gather_vertex_field(parents)
+    G = nx.DiGraph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(edges.tolist())
+    dist = nx.single_source_shortest_path_length(G, 0)
+    reached = {v for v in range(n) if par[v] < 2 ** 30}
+    assert reached == set(dist)
+    for v in reached:
+        if v != 0:
+            assert dist[int(par[v])] == dist[v] - 1
