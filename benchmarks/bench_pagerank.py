@@ -1,11 +1,13 @@
 """Figure 2: distributed PageRank runtime, BSP baseline (Boost-like) vs
-the HPX-adapted implementation, across partition counts on urand graphs."""
+the HPX-adapted implementation, across partition counts on urand graphs.
+Variants are enumerated from the algorithm registry."""
 
 from __future__ import annotations
 
 import json
 import pathlib
 
+from benchmarks.bench_bfs import print_speedup_table
 from benchmarks.graph_scaling import scaling_table
 
 
@@ -15,13 +17,7 @@ def main(graph: str = "urand16", parts=(1, 2, 4, 8), reps: int = 3,
     rows = scaling_table(graph, "pagerank", parts_list=parts, reps=reps)
     pathlib.Path(out).parent.mkdir(parents=True, exist_ok=True)
     pathlib.Path(out).write_text(json.dumps(rows, indent=2))
-    by = {(r["mode"], r["parts"]): r for r in rows}
-    print("parts,bsp_ms,fast_ms,speedup,wire_ratio")
-    for p in parts:
-        b, f = by[("bsp", p)], by[("fast", p)]
-        wr = b["wire_bytes_per_part"] / max(f["wire_bytes_per_part"], 1)
-        print(f"{p},{b['ms']:.1f},{f['ms']:.1f},"
-              f"{b['ms']/f['ms']:.2f},{wr:.1f}x")
+    print_speedup_table(rows, parts)
     return rows
 
 

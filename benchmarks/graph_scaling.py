@@ -1,9 +1,12 @@
 """Shared machinery for the paper's two figures (BFS / PageRank scaling).
 
-Each (algorithm, partitions) point runs in a subprocess with that many
-forced host devices, times the jitted program (median of reps), and
-reports the per-partition collective wire bytes parsed from the compiled
-HLO - wall time on emulated devices is indicative; wire bytes are exact.
+Each (algorithm, variant, partitions) point runs in a subprocess with
+that many forced host devices, times the jitted program (median of
+reps), and reports the per-partition collective wire bytes parsed from
+the compiled HLO - wall time on emulated devices is indicative; wire
+bytes are exact.  Programs are resolved through the algorithm registry
+(``repro.core.registry``) so new variants show up in the figures without
+editing the harness.
 """
 
 from __future__ import annotations
@@ -16,48 +19,50 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# per-(algo, variant) parameter overrides for the bench points
+_BENCH_PARAMS = {
+    # fast mode benches the steady-state compressed exchange ("always");
+    # the adaptive variant's HLO contains both branches and the parser
+    # prices the worst one, hiding the bf16 win
+    ("pagerank", "fast"): {"iters": 30, "tol": 1e-12, "compress": "always"},
+    ("pagerank", "bsp"): {"iters": 30, "tol": 1e-12},
+}
+
 _POINT_CODE = r"""
 import json, time
 import jax, jax.numpy as jnp
 from repro.graphs import generate_edges
 from repro.configs import graph_workloads
-from repro.core import GraphEngine, partition_graph
+from repro.core import GraphEngine, partition_graph, registry
 from repro.launch.mesh import make_graph_mesh
 from repro.roofline import analysis as RA
 
-graph, algo, mode, parts, reps = {graph!r}, {algo!r}, {mode!r}, {parts}, {reps}
+graph, algo, variant, parts, reps = {graph!r}, {algo!r}, {variant!r}, {parts}, {reps}
+params = {params!r}
 gcfg = graph_workloads.ALL[graph]
 edges = generate_edges(gcfg, seed=42)
 g = partition_graph(edges, gcfg.num_vertices, parts)
 eng = GraphEngine(g, make_graph_mesh(parts))
 garr = eng.device_graph()
-if algo == "bfs":
-    fn = eng.bfs(mode=mode)
-    args = (garr, jnp.int32(0))
-else:
-    # fast mode benches the steady-state compressed exchange ("always");
-    # the adaptive variant's HLO contains both branches and the parser
-    # prices the worst one, hiding the bf16 win
-    fn = eng.pagerank(mode=mode, iters=30, tol=1e-12,
-                      compress=("always" if mode == "fast" else False))
-    args = (garr,)
-lowered = fn.lower(*args)
-compiled = lowered.compile()
+spec = registry.get_spec(algo, variant)
+prog = eng.program(algo, variant, **params)
+args = (garr,) + (jnp.int32(0),) * len(spec.inputs)
+compiled = prog.aot()
 stats = RA.parse_collectives(compiled.as_text())
 wire = stats.total_wire_bytes
-if algo == "pagerank" and mode == "fast":
+if (algo, variant) == ("pagerank", "fast"):
     # bf16 payload promoted to f32 by the host backend (see DESIGN S7)
     rs = stats.wire_bytes.get("reduce-scatter", 0.0)
     wire -= rs / 2.0
-out = fn(*args); jax.block_until_ready(out)   # warm
+out = prog(*args); jax.block_until_ready(out)   # warm
 times = []
 for _ in range(reps):
     t0 = time.perf_counter()
-    out = fn(*args); jax.block_until_ready(out)
+    out = prog(*args); jax.block_until_ready(out)
     times.append(time.perf_counter() - t0)
 times.sort()
 print("RESULT " + json.dumps({{
-    "graph": graph, "algo": algo, "mode": mode, "parts": parts,
+    "graph": graph, "algo": algo, "mode": variant, "parts": parts,
     "ms": times[len(times)//2] * 1e3,
     "wire_bytes_per_part": wire,
     "collective_counts": stats.counts,
@@ -65,10 +70,26 @@ print("RESULT " + json.dumps({{
 """
 
 
-def run_point(graph: str, algo: str, mode: str, parts: int,
+def algo_variants(algo: str) -> list[str]:
+    """Registered variants of ``algo``, read in a subprocess so the
+    harness process never imports jax (each bench point must set its own
+    XLA_FLAGS device count before first jax import)."""
+    code = ("import json\nfrom repro.core import registry\n"
+            f"print(json.dumps(registry.variants({algo!r})))")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=120)
+    if r.returncode != 0:
+        raise RuntimeError(f"registry peek failed:\n{r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def run_point(graph: str, algo: str, variant: str, parts: int,
               reps: int = 3, timeout: int = 900) -> dict:
-    code = _POINT_CODE.format(graph=graph, algo=algo, mode=mode,
-                              parts=parts, reps=reps)
+    params = _BENCH_PARAMS.get((algo, variant), {})
+    code = _POINT_CODE.format(graph=graph, algo=algo, variant=variant,
+                              parts=parts, reps=reps, params=params)
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={parts}"
     env["PYTHONPATH"] = SRC
@@ -78,17 +99,17 @@ def run_point(graph: str, algo: str, mode: str, parts: int,
         if line.startswith("RESULT "):
             return json.loads(line[len("RESULT "):])
     raise RuntimeError(
-        f"bench point failed ({graph},{algo},{mode},{parts}):\n"
+        f"bench point failed ({graph},{algo},{variant},{parts}):\n"
         f"{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
 
 
 def scaling_table(graph: str, algo: str, parts_list=(1, 2, 4, 8),
-                  reps: int = 3) -> list[dict]:
+                  reps: int = 3, variants=None) -> list[dict]:
     rows = []
-    for mode in ("bsp", "fast"):
+    for variant in (variants or algo_variants(algo)):
         for p in parts_list:
-            rows.append(run_point(graph, algo, mode, p, reps=reps))
+            rows.append(run_point(graph, algo, variant, p, reps=reps))
             r = rows[-1]
-            print(f"  {algo}/{mode:4s} parts={p:2d} {r['ms']:9.1f} ms  "
+            print(f"  {algo}/{variant:4s} parts={p:2d} {r['ms']:9.1f} ms  "
                   f"wire/part {r['wire_bytes_per_part']/1e6:8.2f} MB")
     return rows

@@ -2,14 +2,39 @@
 
   PYTHONPATH=src python -m benchmarks.run [--fast]
 
-Outputs CSV-ish lines per benchmark and writes JSON artifacts under
-artifacts/.
+Outputs CSV-ish lines per benchmark, writes JSON artifacts under
+artifacts/, and writes a machine-readable ``BENCH_graph.json`` at the
+repo root (one row per algorithm x variant x partition count with the
+measured ms) so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def write_bench_artifact(rows: list[dict], meta: dict,
+                         path=None) -> pathlib.Path:
+    """Write BENCH_graph.json: {meta, rows: [{algo, variant, parts, ms,
+    wire_mb}]}.  ``meta`` records graph/reps/mode so cross-PR comparisons
+    never silently mix measurement configurations."""
+    out = path or (REPO_ROOT / "BENCH_graph.json")
+    slim = [{
+        "algo": r["algo"],
+        "variant": r["mode"],
+        "parts": r["parts"],
+        "ms": round(r["ms"], 2),
+        "wire_mb_per_part": round(r["wire_bytes_per_part"] / 1e6, 3),
+    } for r in rows]
+    pathlib.Path(out).write_text(
+        json.dumps({"meta": meta, "rows": slim}, indent=2) + "\n")
+    print(f"[bench] wrote {out} ({len(slim)} rows)")
+    return pathlib.Path(out)
 
 
 def main() -> None:
@@ -21,22 +46,29 @@ def main() -> None:
     args = ap.parse_args()
 
     graph = "urand16"
-    parts = (1, 2, 4) if args.fast else (1, 2, 4, 8)
+    parts = (1, 2) if args.fast else (1, 2, 4, 8)
     reps = 2 if args.fast else 3
+
+    graph_rows: list[dict] = []
 
     print("=" * 72)
     print("Figure 1: distributed BFS, BSP(Boost-like) vs HPX-adapted")
     print("=" * 72)
     if not args.skip_scaling:
         from benchmarks.bench_bfs import main as bfs_main
-        bfs_main(graph=graph, parts=parts, reps=reps)
+        graph_rows += bfs_main(graph=graph, parts=parts, reps=reps)
 
     print("=" * 72)
     print("Figure 2: distributed PageRank, BSP(Boost-like) vs HPX-adapted")
     print("=" * 72)
     if not args.skip_scaling:
         from benchmarks.bench_pagerank import main as pr_main
-        pr_main(graph=graph, parts=parts, reps=reps)
+        graph_rows += pr_main(graph=graph, parts=parts, reps=reps)
+
+    if graph_rows:
+        write_bench_artifact(graph_rows, {
+            "graph": graph, "parts": list(parts), "reps": reps,
+            "mode": "fast" if args.fast else "full"})
 
     print("=" * 72)
     print("Kernel micro-benchmarks (CPU oracle time + TPU roofline bound)")

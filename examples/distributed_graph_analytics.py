@@ -1,6 +1,8 @@
 """End-to-end driver (the paper's kind of workload at benchmark scale):
-urand20 (1M vertices, 16M edges) partitioned over 8 localities, full
-algorithm suite with verification, BSP vs HPX-adapted comparison.
+urand20 (1M vertices, 16M edges) partitioned over 8 localities, the full
+registered algorithm suite with verification, BSP vs HPX-adapted
+comparison, plus batched multi-source traversal (16 roots per launch) —
+the serve-many-queries scenario.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/distributed_graph_analytics.py
@@ -13,4 +15,4 @@ from repro.launch.graph_analytics import run
 if __name__ == "__main__":
     parts = len(jax.devices())
     graph = "urand18" if parts == 1 else "urand20"
-    run(graph, parts=parts, pr_iters=30)
+    run(graph, parts=parts, pr_iters=30, multi_source=16)

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 test suite + fast benchmark smoke.
+#
+#   bash scripts/ci.sh
+#
+# The fast bench writes BENCH_graph.json at the repo root so the perf
+# trajectory (algo, parts, ms) is tracked across PRs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== bench smoke: benchmarks.run --fast =="
+python -m benchmarks.run --fast
+
+test -f BENCH_graph.json || { echo "BENCH_graph.json missing" >&2; exit 1; }
+echo "== CI OK =="

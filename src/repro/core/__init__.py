@@ -1,8 +1,18 @@
 """The paper's primary contribution: a distributed graph-analytics engine
-(NWGraph+HPX adapted to JAX SPMD).  See core/bfs.py, core/pagerank.py for
-the algorithm-level adaptation notes and DESIGN.md for the system view."""
+(NWGraph+HPX adapted to JAX SPMD).
 
-from repro.core.api import GraphEngine
+The public surface is the superstep-program API: algorithms are
+``SuperstepProgram`` definitions (core/superstep.py) registered in
+core/registry.py and compiled/cached through ``GraphEngine.program``.
+See core/bfs.py, core/pagerank.py for the algorithm-level adaptation
+notes and DESIGN.md for the system view."""
+
+from repro.core import registry
+from repro.core.api import CompiledProgram, GraphEngine
 from repro.core.graph import GraphShards, abstract_graph, partition_graph
+from repro.core.superstep import SuperstepProgram, run_program
 
-__all__ = ["GraphEngine", "GraphShards", "abstract_graph", "partition_graph"]
+__all__ = [
+    "CompiledProgram", "GraphEngine", "GraphShards", "SuperstepProgram",
+    "abstract_graph", "partition_graph", "registry", "run_program",
+]

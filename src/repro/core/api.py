@@ -1,26 +1,39 @@
-"""Public graph-engine API: jitted shard_map programs over a 1-D mesh.
+"""Public graph-engine API: registry-driven superstep programs compiled
+as jitted shard_map executables over a 1-D mesh.
 
-``GraphEngine`` binds a partitioned graph to a mesh and exposes
-BFS / PageRank / SSSP / CC in both BSP-baseline and optimized variants.
-The same builders lower against abstract inputs for the multi-pod
-dry-run (core/dryrun.py).
+``GraphEngine`` binds a partitioned graph to a mesh.  The single entry
+point is :meth:`GraphEngine.program`:
+
+    prog = engine.program("bfs", "fast", max_levels=32)
+    parents, levels = prog(engine.device_graph(), jnp.int32(root))
+
+``program()`` resolves the (algo, variant) pair through
+``core/registry.py``, wraps the program's ``init/step/halt/outputs``
+with the ONE shared superstep driver (``core/superstep.py``), and caches
+the resulting compiled callable keyed on algorithm + params + graph
+shapes + mesh — repeated calls return the SAME object, so nothing
+re-traces.  ``batch=B`` builds the multi-source variant (roots shaped
+(B,), vmapped inside the shard program).  The legacy ``bfs()/pagerank()/
+sssp()/cc()`` methods are thin delegating wrappers.
+
+The same callables lower against abstract inputs for the multi-pod
+dry-run (core/dryrun.py) via :meth:`CompiledProgram.lower` /
+:meth:`CompiledProgram.aot`.
 """
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bfs as BFS
-from repro.core import cc as CC
-from repro.core import pagerank as PR
-from repro.core import sssp as SSSP
+from repro.core import registry
+from repro.core.compat import shard_map
 from repro.core.graph import GraphShards
+from repro.core.superstep import run_program, run_program_batched
 
 P = jax.sharding.PartitionSpec
 
@@ -29,77 +42,134 @@ def _graph_specs(g: GraphShards):
     return {k: P("parts", None) for k in g.abstract_arrays()}
 
 
+class CompiledProgram:
+    """A cached, callable, AOT-lowerable superstep program.
+
+    ``__call__`` runs the jitted executable (jit's trace cache makes
+    repeated calls free); ``lower()``/``aot()`` expose the AOT path the
+    dry-run and roofline tooling use.  Instances are interned by
+    :meth:`GraphEngine.program`, so object identity doubles as the
+    compile-cache hit test.
+    """
+
+    def __init__(self, spec, program, fn, abstract_args):
+        self.spec = spec                  # registry ProgramSpec
+        self.program = program            # SuperstepProgram instance
+        self.fn = fn                      # jitted shard_map callable
+        self.abstract_args = abstract_args
+        self._aot = None
+
+    def __call__(self, garr, *inputs):
+        return self.fn(garr, *inputs)
+
+    def lower(self, *args):
+        """AOT-lower; defaults to the engine's abstract arg shapes."""
+        return self.fn.lower(*(args if args else self.abstract_args))
+
+    def aot(self):
+        """Lowered + compiled executable against abstract args (cached)."""
+        if self._aot is None:
+            self._aot = self.lower().compile()
+        return self._aot
+
+    def trace_cache_size(self) -> int:
+        """Number of traces jit holds for this callable (1 after warmup)."""
+        return self.fn._cache_size()
+
+    def __repr__(self):
+        return (f"CompiledProgram({self.program.key}, "
+                f"inputs={self.spec.inputs})")
+
+
 @dataclass
 class GraphEngine:
     g: GraphShards
     mesh: jax.sharding.Mesh
+    _cache: dict = field(default_factory=dict, repr=False, compare=False)
 
-    def _wrap(self, fn, extra_in_specs=(), out_specs=None):
-        in_specs = (_graph_specs(self.g),) + tuple(extra_in_specs)
-        return jax.jit(jax.shard_map(
-            fn, mesh=self.mesh, in_specs=in_specs,
-            out_specs=out_specs, check_vma=False))
+    # -- the program API ----------------------------------------------------
+    def program(self, algo: str, variant: str | None = None, *,
+                static_iters: int = 0, batch: int | None = None,
+                **params) -> CompiledProgram:
+        """Resolve, build, wrap and cache an algorithm program.
 
-    # -- BFS ------------------------------------------------------------
-    def bfs(self, mode: str = "fast", max_levels: int = 64,
-            static_iters: int = 0):
-        g, m = self.g, self.mesh
-        shard_fn = (BFS.bfs_fast_shard if mode == "fast"
-                    else BFS.bfs_bsp_shard)
-
-        def fn(garr, root):
-            garr = {k: v[0] for k, v in garr.items()}
-            parents, levels = shard_fn(garr, root, g.n, g.n_local,
-                                       max_levels,
-                                       static_iters=static_iters)
-            return parents[None], levels
-
-        return self._wrap(fn, extra_in_specs=(P(),),
-                          out_specs=(P("parts", None), P()))
-
-    # -- PageRank ---------------------------------------------------------
-    def pagerank(self, mode: str = "fast", iters: int = 50,
-                 tol: float = 1e-6, compress: bool = True,
-                 static_iters: int = 0):
+        ``static_iters > 0`` replaces the early-exit while loop with a
+        fixed-trip scan (dry-run/roofline path).  ``batch=B`` compiles
+        the multi-source variant: every ("root",)-style input becomes a
+        (B,) array and vertex outputs gain a leading (P, B, ...) batch
+        axis.  The cache key covers algo, variant, params, loop mode,
+        graph shapes and mesh, so repeated calls return the same object
+        and never re-trace.
+        """
+        spec = registry.get_spec(algo, variant)
+        if batch is not None and not spec.inputs:
+            raise ValueError(
+                f"{spec.key} takes no per-query inputs; batch="
+                f"{batch} has nothing to vmap over")
         g = self.g
+        key = (spec.algo, spec.variant, static_iters, batch,
+               tuple(sorted(params.items())),
+               (g.n, g.n_orig, g.parts, g.n_local, g.e_max),
+               (tuple(self.mesh.shape.items()), self.mesh.devices.shape))
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
 
-        def fn(garr):
+        prog = spec.build(g, **params)
+        n_inputs = len(spec.inputs)
+
+        def fn(garr, *inputs):
             garr = {k: v[0] for k, v in garr.items()}
-            if mode == "fast":
-                rank, err, it = PR.pagerank_fast_shard(
-                    garr, g.n, g.n_local, g.n_orig, iters, tol,
-                    compress=compress, static_iters=static_iters)
+            if batch is None:
+                outs, rounds = run_program(prog, garr, *inputs,
+                                           static_iters=static_iters)
             else:
-                rank, err, it = PR.pagerank_bsp_shard(
-                    garr, g.n, g.n_local, g.n_orig, iters, tol,
-                    static_iters=static_iters)
-            return rank[None], err, it
+                outs, rounds = run_program_batched(
+                    prog, garr, *inputs, static_iters=static_iters)
+            shaped = tuple(o[None] if is_v else o
+                           for o, is_v in zip(outs, prog.output_is_vertex))
+            return shaped + (rounds,)
 
-        return self._wrap(fn, out_specs=(P("parts", None), P(), P()))
+        vspec = P("parts", None) if batch is None else P("parts", None, None)
+        out_specs = tuple(vspec if is_v else P()
+                          for is_v in prog.output_is_vertex) + (P(),)
+        in_specs = (_graph_specs(g),) + (P(),) * n_inputs
+        jitted = jax.jit(shard_map(
+            fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False))
 
-    # -- SSSP -------------------------------------------------------------
-    def sssp(self, max_rounds: int = 64):
-        g = self.g
+        root_shape = () if batch is None else (batch,)
+        abstract_args = (g.abstract_arrays(),) + tuple(
+            jax.ShapeDtypeStruct(root_shape, jnp.int32)
+            for _ in range(n_inputs))
+        compiled = CompiledProgram(spec, prog, jitted, abstract_args)
+        self._cache[key] = compiled
+        return compiled
 
-        def fn(garr, root):
-            garr = {k: v[0] for k, v in garr.items()}
-            dist, rounds = SSSP.sssp_shard(garr, root, g.n, g.n_local,
-                                           max_rounds)
-            return dist[None], rounds
+    # -- thin legacy wrappers -----------------------------------------------
+    def bfs(self, mode: str = "fast", max_levels: int = 64,
+            static_iters: int = 0) -> CompiledProgram:
+        return self.program("bfs", mode, static_iters=static_iters,
+                            max_levels=max_levels)
 
-        return self._wrap(fn, extra_in_specs=(P(),),
-                          out_specs=(P("parts", None), P()))
+    def pagerank(self, mode: str = "fast", iters: int = 50,
+                 tol: float = 1e-6, compress=True,
+                 static_iters: int = 0) -> CompiledProgram:
+        params = {"iters": iters, "tol": tol}
+        if mode == "fast":
+            params["compress"] = compress
+        return self.program("pagerank", mode, static_iters=static_iters,
+                            **params)
 
-    # -- Connected components ----------------------------------------------
-    def cc(self, max_rounds: int = 64):
-        g = self.g
+    def sssp(self, max_rounds: int = 64,
+             static_iters: int = 0) -> CompiledProgram:
+        return self.program("sssp", static_iters=static_iters,
+                            max_rounds=max_rounds)
 
-        def fn(garr):
-            garr = {k: v[0] for k, v in garr.items()}
-            labels, rounds = CC.cc_shard(garr, g.n, g.n_local, max_rounds)
-            return labels[None], rounds
-
-        return self._wrap(fn, out_specs=(P("parts", None), P()))
+    def cc(self, max_rounds: int = 64,
+           static_iters: int = 0) -> CompiledProgram:
+        return self.program("cc", static_iters=static_iters,
+                            max_rounds=max_rounds)
 
     # -- helpers -------------------------------------------------------------
     def device_graph(self):
@@ -110,3 +180,9 @@ class GraphEngine:
     def gather_vertex_field(self, arr) -> np.ndarray:
         """(P, n_local) sharded -> (n_orig,) numpy."""
         return np.asarray(arr).reshape(-1)[: self.g.n_orig]
+
+    def gather_batched_vertex_field(self, arr) -> np.ndarray:
+        """(P, B, n_local) batched sharded -> (B, n_orig) numpy."""
+        a = np.asarray(arr)                       # (P, B, n_local)
+        b = a.transpose(1, 0, 2).reshape(a.shape[1], -1)
+        return b[:, : self.g.n_orig]

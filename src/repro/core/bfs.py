@@ -7,28 +7,31 @@ Paper mapping (SS4.1):
     adaptation aggregates all remote discoveries of a superstep into ONE
     fused exchange, and replaces CAS with an idempotent MIN-combine
     (smallest-id parent wins deterministically).
-  * ``bfs_bsp``  -- level-synchronous push; every level exchanges a full
+  * ``bfs/bsp``  -- level-synchronous push; every level exchanges a full
     (n,) int32 parent-proposal vector (all_to_all MIN) + a separate
     frontier-count all-reduce: the rigid-barrier BGL analogue.
-  * ``bfs_fast`` -- direction-optimizing (Beamer-style push/pull chosen
+  * ``bfs/fast`` -- direction-optimizing (Beamer-style push/pull chosen
     per level by frontier occupancy = the paper's runtime adaptivity),
     BIT-PACKED frontier exchange (n/32 u32 words: 32x less wire than the
     baseline), and parents derived owner-side from in-edges (no parent
     traffic at all).
 
-Both run inside ``shard_map`` over the 1-D "parts" axis and use only
-static shapes + lax.while_loop, so the same program lowers for the
-256/512-chip production meshes (see core/dryrun.py).
+Both are expressed as :class:`~repro.core.superstep.SuperstepProgram`
+factories (``init / step / halt / outputs`` over per-shard arrays); the
+shared driver in core/superstep.py supplies the while/scan loop, so the
+same program lowers for the 256/512-chip production meshes (see
+core/dryrun.py) and vmaps over batched roots for multi-source queries.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import axis_size
 from repro.core.partitioned import AXIS, broadcast_global, psum_scalar
+from repro.core.superstep import SuperstepProgram
+
 
 INT_INF = jnp.int32(2 ** 30)
 
@@ -68,7 +71,7 @@ def _derive_parents(g, gf_packed, unvisited, n):
 
 def _bsp_level(g, n, n_local, parents, frontier):
     """One BSP level: full (n,) parent-proposal exchange via a2a MIN."""
-    parts = jax.lax.axis_size(AXIS)
+    parts = axis_size(AXIS)
     lo = jax.lax.axis_index(AXIS) * n_local
     srcl = g["out_src_local"]
     dst = g["out_dst_global"]
@@ -92,7 +95,7 @@ def _bsp_level(g, n, n_local, parents, frontier):
 
 def _fast_level(g, n, n_local, parents, gf_packed):
     """One direction-optimizing level with bit-packed exchange."""
-    parts = jax.lax.axis_size(AXIS)
+    parts = axis_size(AXIS)
     unvisited = parents == INT_INF
     new_mask, prop = _derive_parents(g, gf_packed, unvisited, n)
     parents = jnp.where(new_mask, prop, parents)
@@ -106,7 +109,7 @@ def _fast_level(g, n, n_local, parents, gf_packed):
 def _fast_level_push(g, n, n_local, parents, frontier_local, gf_packed):
     """Push variant: scatter candidate bits from active out-edges, then
     OR-exchange only the packed candidate bitmap (n/32 u32)."""
-    parts = jax.lax.axis_size(AXIS)
+    parts = axis_size(AXIS)
     srcl = g["out_src_local"]
     dst = g["out_dst_global"]
     valid = dst < n
@@ -133,65 +136,53 @@ def _fast_level_push(g, n, n_local, parents, frontier_local, gf_packed):
     return parents, new_mask, gf_next, count
 
 
-def bfs_bsp_shard(g, root, n, n_local, max_levels, static_iters: int = 0):
-    """Per-partition BSP BFS driver (call inside shard_map).
+def _seed_state(root, n_local):
+    """(parents0, frontier0) with only the owner's root slot set."""
+    lo = jax.lax.axis_index(AXIS) * n_local
+    owned = (root >= lo) & (root < lo + n_local)
+    at_root = owned & (jnp.arange(n_local) == root - lo)
+    parents0 = jnp.where(at_root, root,
+                         jnp.full((n_local,), INT_INF, jnp.int32))
+    return parents0, at_root
 
-    ``static_iters > 0`` runs a fixed-length scan instead of the
-    early-exit while loop (levels past convergence are natural no-ops:
-    empty frontier proposes nothing).  Used by the dry-run so trip counts
-    are static and the roofline accounting is exact.
+
+def bfs_bsp_program(n: int, n_local: int,
+                    max_levels: int = 64) -> SuperstepProgram:
+    """Level-synchronous BSP BFS (the rigid-barrier BGL analogue).
+
+    Levels past convergence are natural no-ops (an empty frontier
+    proposes nothing), so the program is safe under the driver's
+    fixed-trip ``static_iters`` scan.
     """
-    lo = jax.lax.axis_index(AXIS) * n_local
-    owned = (root >= lo) & (root < lo + n_local)
-    parents0 = jnp.full((n_local,), INT_INF, jnp.int32)
-    parents0 = jnp.where(
-        owned & (jnp.arange(n_local) == root - lo), root, parents0)
-    frontier0 = owned & (jnp.arange(n_local) == root - lo)
+    def init(g, root):
+        parents0, frontier0 = _seed_state(root, n_local)
+        return parents0, frontier0, jnp.int32(1)
 
-    if static_iters:
-        def sbody(state, _):
-            parents, frontier, cnt = state
-            parents, frontier, count = _bsp_level(g, n, n_local, parents,
-                                                  frontier)
-            return (parents, frontier, count), None
-        (parents, _, _), _ = jax.lax.scan(
-            sbody, (parents0, frontier0, jnp.int32(1)), None,
-            length=static_iters)
-        return parents, jnp.int32(static_iters)
+    def step(g, state):
+        parents, frontier, _ = state
+        return _bsp_level(g, n, n_local, parents, frontier)
 
-    def cond(state):
-        _, _, count, lvl = state
-        return (count > 0) & (lvl < max_levels)
-
-    def body(state):
-        parents, frontier, _, lvl = state
-        parents, frontier, count = _bsp_level(g, n, n_local, parents,
-                                              frontier)
-        return parents, frontier, count, lvl + 1
-
-    parents, _, _, levels = jax.lax.while_loop(
-        cond, body, (parents0, frontier0, jnp.int32(1), jnp.int32(0)))
-    return parents, levels
+    return SuperstepProgram(
+        name="bfs", variant="bsp", inputs=("root",),
+        init=init, step=step,
+        halt=lambda state: state[2] <= 0,
+        outputs=lambda state: (state[0],),
+        output_names=("parents",), output_is_vertex=(True,),
+        max_rounds=max_levels)
 
 
-def bfs_fast_shard(g, root, n, n_local, max_levels, pull_threshold=0.02,
-                   static_iters: int = 0):
-    """Direction-optimizing BFS driver (call inside shard_map)."""
-    lo = jax.lax.axis_index(AXIS) * n_local
-    owned = (root >= lo) & (root < lo + n_local)
-    parents0 = jnp.full((n_local,), INT_INF, jnp.int32)
-    parents0 = jnp.where(
-        owned & (jnp.arange(n_local) == root - lo), root, parents0)
-    frontier0 = owned & (jnp.arange(n_local) == root - lo)
-    gf0 = broadcast_global(_pack_bits(frontier0))
+def bfs_fast_program(n: int, n_local: int, max_levels: int = 64,
+                     pull_threshold: float = 0.02) -> SuperstepProgram:
+    """Direction-optimizing BFS with bit-packed frontier exchange."""
     thresh = jnp.int32(max(1, int(n * pull_threshold)))
 
-    def cond(state):
-        _, _, _, count, lvl = state
-        return (count > 0) & (lvl < max_levels)
+    def init(g, root):
+        parents0, frontier0 = _seed_state(root, n_local)
+        gf0 = broadcast_global(_pack_bits(frontier0))
+        return parents0, frontier0, gf0, jnp.int32(1)
 
-    def body(state):
-        parents, frontier, gf, count, lvl = state
+    def step(g, state):
+        parents, frontier, gf, count = state
 
         def push(_):
             p, f, g2, c = _fast_level_push(g, n, n_local, parents,
@@ -208,19 +199,12 @@ def bfs_fast_shard(g, root, n, n_local, max_levels, pull_threshold=0.02,
                  ).astype(bool)
             return p, f, g2, c
 
-        parents, frontier, gf, count = jax.lax.cond(
-            count < thresh, push, pull, operand=None)
-        return parents, frontier, gf, count, lvl + 1
+        return jax.lax.cond(count < thresh, push, pull, operand=None)
 
-    if static_iters:
-        def sbody(state, _):
-            parents, frontier, gf, count, lvl = body(state)
-            return (parents, frontier, gf, count, lvl), None
-        (parents, _, _, _, levels), _ = jax.lax.scan(
-            sbody, (parents0, frontier0, gf0, jnp.int32(1), jnp.int32(0)),
-            None, length=static_iters)
-        return parents, levels
-
-    parents, _, _, _, levels = jax.lax.while_loop(
-        cond, body, (parents0, frontier0, gf0, jnp.int32(1), jnp.int32(0)))
-    return parents, levels
+    return SuperstepProgram(
+        name="bfs", variant="fast", inputs=("root",),
+        init=init, step=step,
+        halt=lambda state: state[3] <= 0,
+        outputs=lambda state: (state[0],),
+        output_names=("parents",), output_is_vertex=(True,),
+        max_rounds=max_levels)

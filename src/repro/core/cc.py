@@ -2,7 +2,10 @@
 style hooking) - another paper "future work" algorithm.
 
 Treats the graph as undirected by propagating labels along BOTH edge
-directions; converges when no label changes.
+directions; converges when no label changes.  Expressed as a
+:class:`~repro.core.superstep.SuperstepProgram`; rounds past
+convergence are no-ops (labels are already fixed points of min-combine),
+so the program is safe under the driver's ``static_iters`` scan.
 """
 
 from __future__ import annotations
@@ -10,30 +13,30 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import axis_size
 from repro.core.partitioned import AXIS, psum_scalar
+from repro.core.superstep import SuperstepProgram
 
 INT_INF = jnp.int32(2 ** 30)
 
 
-def cc_shard(g, n, n_local, max_rounds):
-    """Per-partition label-propagation driver (call inside shard_map)."""
-    parts = jax.lax.axis_size(AXIS)
-    lo = jax.lax.axis_index(AXIS) * n_local
-    labels0 = jnp.arange(n_local, dtype=jnp.int32) + lo
+def cc_program(n: int, n_local: int, max_rounds: int = 64) -> SuperstepProgram:
+    """Label propagation over both edge directions as a superstep program."""
 
-    srcl = g["out_src_local"]
-    dst = g["out_dst_global"]
-    valid = dst < n
-    in_src = g["in_src_global"]
-    in_dstl = g["in_dst_local"]
-    in_valid = in_src < n
+    def init(g, *_):
+        lo = jax.lax.axis_index(AXIS) * n_local
+        labels0 = jnp.arange(n_local, dtype=jnp.int32) + lo
+        return labels0, jnp.int32(1)
 
-    def cond(state):
-        _, cnt, r = state
-        return (cnt > 0) & (r < max_rounds)
-
-    def body(state):
-        labels, _, r = state
+    def step(g, state):
+        labels, _ = state
+        parts = axis_size(AXIS)
+        srcl = g["out_src_local"]
+        dst = g["out_dst_global"]
+        valid = dst < n
+        in_src = g["in_src_global"]
+        in_dstl = g["in_dst_local"]
+        in_valid = in_src < n
         # propose my label to out-neighbors (push direction)
         prop = jnp.full((n + 1,), INT_INF, jnp.int32).at[
             jnp.where(valid, dst, n)].min(
@@ -52,8 +55,12 @@ def cc_shard(g, n, n_local, max_rounds):
         mine2 = rows2.min(axis=(0, 1))
         new_labels = jnp.minimum(new_labels, mine2)
         cnt = psum_scalar((new_labels < labels).sum(dtype=jnp.int32))
-        return new_labels, cnt, r + 1
+        return new_labels, cnt
 
-    labels, _, rounds = jax.lax.while_loop(
-        cond, body, (labels0, jnp.int32(1), jnp.int32(0)))
-    return labels, rounds
+    return SuperstepProgram(
+        name="cc", variant="default", inputs=(),
+        init=init, step=step,
+        halt=lambda state: state[1] <= 0,
+        outputs=lambda state: (state[0],),
+        output_names=("labels",), output_is_vertex=(True,),
+        max_rounds=max_rounds)

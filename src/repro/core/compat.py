@@ -1,0 +1,78 @@
+"""Version compatibility shims for the JAX APIs the engine layers on.
+
+The engine targets the modern spellings (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh`` with ``axis_types``); older installs
+(jax 0.4.x) only ship ``jax.experimental.shard_map.shard_map`` with the
+``check_rep`` keyword and a ``make_mesh`` without ``axis_types``.  All
+engine code goes through this module so the rest of the tree never
+branches on the JAX version.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = ("check_vma"
+                 if "check_vma" in inspect.signature(_shard_map).parameters
+                 else "check_rep")
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across JAX versions (``check_vma``/``check_rep``)."""
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: check_vma})
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:  # jax <= 0.4.x: psum of a literal constant-folds to the axis size
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``Compiled.cost_analysis()``: jax <= 0.4.x returns a
+    one-element list of dicts, newer versions the dict itself."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the CompilerParams rename."""
+    import jax.experimental.pallas.tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+_MAKE_MESH_PARAMS = (inspect.signature(jax.make_mesh).parameters
+                     if hasattr(jax, "make_mesh") else {})
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types where supported; falls back
+    to a plain ``Mesh`` on jax builds without ``make_mesh``."""
+    if not hasattr(jax, "make_mesh"):
+        import numpy as _np
+        need = 1
+        for s in axis_shapes:
+            need *= s
+        devs = list(devices) if devices is not None else jax.devices()[:need]
+        return jax.sharding.Mesh(
+            _np.asarray(devs).reshape(axis_shapes), axis_names)
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None and "axis_types" in _MAKE_MESH_PARAMS:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)

@@ -1,10 +1,14 @@
-"""Graph-engine dry-run: lower + compile BFS and PageRank for paper-scale
-urand graphs on the production mesh (flattened to a 1-D "parts" axis:
-256 chips single-pod, 512 multi-pod).
+"""Graph-engine dry-run: lower + compile every registered algorithm
+program for paper-scale urand graphs on the production mesh (flattened
+to a 1-D "parts" axis: 256 chips single-pod, 512 multi-pod).
 
 This is the paper-side counterpart of the LM dry-run: it proves the
 graph engine's collective schedule and per-partition memory are coherent
 at production scale without touching real edges (abstract GraphShards).
+Programs are enumerated from ``core/registry.py`` — every registered
+algorithm x variant lowers with a fixed-trip ``static_iters`` scan so
+trip counts are static and the roofline accounting is exact (SSSP and
+CC inherit this from the shared superstep driver).
 """
 
 from __future__ import annotations
@@ -17,22 +21,44 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import graph_workloads
+from repro.core import registry
 from repro.core.api import GraphEngine
 from repro.core.graph import abstract_graph
+from repro.core.registry import program_label
 from repro.launch.mesh import make_graph_mesh
 from repro.roofline import analysis as RA
+
+# static trip counts per algorithm (documented in EXPERIMENTS): typical
+# ER BFS depth is ~8; Bellman-Ford/label-prop converge in a few more
+# rounds than the BFS depth; PageRank runs its full iteration budget.
+# Algorithms registered without an entry fall back to DEFAULT_STATIC_ITERS
+# so extending the registry never breaks the dry-run.
+STATIC_ITERS = {"bfs": 8, "pagerank": 50, "sssp": 12, "cc": 8}
+DEFAULT_STATIC_ITERS = 12
+
+# dry-run parameter overrides per (algo, variant)
+DRYRUN_PARAMS = {
+    # steady-state compressed exchange: no precision-switch branches in
+    # the HLO, so the parsed wire bytes reflect the bf16 payload
+    ("pagerank", "fast"): {"compress": "always"},
+}
 
 
 def _graph_model_flops(g, algo: str, iters: int) -> float:
     e_total = g.e_max * g.parts
-    if algo.startswith("pagerank"):
+    if algo == "pagerank":
         return 2.0 * e_total * iters      # multiply-add per edge per iter
-    return 2.0 * e_total                  # one relax pass over all edges
+    if algo == "sssp":
+        return 2.0 * e_total * iters      # relax (add+min) per edge per round
+    if algo == "cc":
+        return 4.0 * e_total * iters      # min-combine both edge directions
+    return 2.0 * e_total                  # bfs: one relax pass over all edges
 
 
 def lower_graph_programs(graph_name: str, mesh_name: str, out_dir=None,
-                         algos=("bfs_fast", "bfs_bsp",
-                                "pagerank_fast", "pagerank_bsp")) -> list[dict]:
+                         algos=None) -> list[dict]:
+    """Lower + compile programs; ``algos`` is a list of "algo_variant"
+    labels (default: everything in the registry)."""
     cfg = graph_workloads.ALL[graph_name]
     parts = 512 if mesh_name == "multipod" else 256
     if len(jax.devices()) < parts:
@@ -42,41 +68,25 @@ def lower_graph_programs(graph_name: str, mesh_name: str, out_dir=None,
     mesh = make_graph_mesh(parts)
     g = abstract_graph(cfg.num_vertices, cfg.avg_degree, parts)
     eng = GraphEngine(g, mesh)
-    garr_abs = g.abstract_arrays()
-    root_abs = jax.ShapeDtypeStruct((), jnp.int32)
-    iters = 50
 
+    cells = [(a, v) for a, v in registry.available()
+             if algos is None or program_label(a, v) in algos]
     records = []
-    for algo in algos:
-        bfs_levels = 8   # typical ER BFS depth (documented in EXPERIMENTS)
-        if algo == "bfs_fast":
-            fn = eng.bfs(mode="fast", static_iters=bfs_levels)
-            args = (garr_abs, root_abs)
-            it_count = bfs_levels
-        elif algo == "bfs_bsp":
-            fn = eng.bfs(mode="bsp", static_iters=bfs_levels)
-            args = (garr_abs, root_abs)
-            it_count = bfs_levels
-        elif algo == "pagerank_fast":
-            fn = eng.pagerank(mode="fast", iters=iters, static_iters=iters,
-                              compress="always")
-            args = (garr_abs,)
-            it_count = iters
-        else:
-            fn = eng.pagerank(mode="bsp", iters=iters, static_iters=iters)
-            args = (garr_abs,)
-            it_count = iters
+    for algo, variant in cells:
+        label = program_label(algo, variant)
+        it_count = STATIC_ITERS.get(algo, DEFAULT_STATIC_ITERS)
+        params = dict(DRYRUN_PARAMS.get((algo, variant), {}))
+        prog = eng.program(algo, variant, static_iters=it_count, **params)
 
         t0 = time.time()
-        lowered = fn.lower(*args)
-        compiled = lowered.compile()
+        compiled = prog.aot()
         dt = time.time() - t0
         mem = compiled.memory_analysis()
         roof = RA.analyze(
-            compiled, arch=f"graph-{algo}", shape_name=graph_name,
+            compiled, arch=f"graph-{label}", shape_name=graph_name,
             mesh_name=mesh_name, devices=parts,
             model_flops_total=_graph_model_flops(g, algo, it_count))
-        if algo == "pagerank_fast":
+        if (algo, variant) == ("pagerank", "fast"):
             # The exchanged payload is bf16 (error-feedback compression);
             # the CPU host backend promotes bf16 collectives to f32 in the
             # dumped HLO (convert fused ahead of the reduce-scatter), so
@@ -89,7 +99,7 @@ def lower_graph_programs(graph_name: str, mesh_name: str, out_dir=None,
             roof.finalize()
         # jaxpr-exact compute/bytes (scan trip counts are static now)
         from repro.roofline.jaxpr_cost import count_fn
-        cost = count_fn(fn, *args)
+        cost = count_fn(prog.fn, *prog.abstract_args)
         roof.flops_per_device = cost.total_flops / parts
         roof.bytes_per_device = cost.bytes_touched / parts / 3.0  # fusion est.
         roof.finalize()
@@ -98,7 +108,7 @@ def lower_graph_programs(graph_name: str, mesh_name: str, out_dir=None,
         rec["jaxpr_elementwise_flops_total"] = cost.elementwise_flops
         rec["jaxpr_bytes_unfused_total"] = cost.bytes_touched
         rec.update({
-            "program": algo,
+            "program": label,
             "lower_compile_s": round(dt, 2),
             "arg_bytes_per_device": mem.argument_size_in_bytes,
             "temp_bytes_per_device": mem.temp_size_in_bytes,
@@ -106,14 +116,14 @@ def lower_graph_programs(graph_name: str, mesh_name: str, out_dir=None,
             "n_vertices": g.n, "e_max_per_part": g.e_max,
         })
         hbm = (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 1e9
-        print(f"[graph {algo} x {graph_name} x {mesh_name}] "
+        print(f"[graph {label} x {graph_name} x {mesh_name}] "
               f"HBM/dev {hbm:.2f} GB | bottleneck {roof.bottleneck} "
               f"(c={roof.compute_s*1e3:.2f}ms m={roof.memory_s*1e3:.2f}ms "
               f"x={roof.collective_s*1e3:.2f}ms)")
         if out_dir:
             out = pathlib.Path(out_dir)
             out.mkdir(parents=True, exist_ok=True)
-            (out / f"graph-{algo}__{graph_name}__{mesh_name}.json").write_text(
+            (out / f"graph-{label}__{graph_name}__{mesh_name}.json").write_text(
                 json.dumps(rec, indent=2))
         records.append(rec)
     return records

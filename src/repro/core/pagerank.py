@@ -7,10 +7,14 @@ Paper mapping (SS4.2) - the three phases per iteration:
   2. Rank update: rank[i] = base + alpha * z.
   3. Error computation: sum |rank_new - rank_old| (convergence).
 
-``pagerank_bsp``  -- pull over in-edges after ALL-GATHERING the full (n,)
+Both variants are :class:`~repro.core.superstep.SuperstepProgram`
+factories; the shared driver in core/superstep.py owns the while/scan
+loop.
+
+``pagerank/bsp``  -- pull over in-edges after ALL-GATHERING the full (n,)
     f32 contribution vector every iteration (the ghost-replication
     pattern of distributed BGL), plus a separate error all-reduce.
-``pagerank_fast`` -- push-aggregate: each partition segment-sums its
+``pagerank/fast`` -- push-aggregate: each partition segment-sums its
     local edges' contributions into a length-n accumulator and ONE fused
     reduce-scatter delivers owner slices (the paper's "remote
     contribution applied atomically at the owner", batched).  The
@@ -24,13 +28,13 @@ used here on other backends).
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.partitioned import AXIS, broadcast_global, exchange_sum, \
     psum_scalar
+from repro.core.superstep import SuperstepProgram
+
 
 ALPHA = 0.85
 
@@ -40,22 +44,20 @@ def _local_contrib(rank, out_degree):
                      0.0)
 
 
-def pagerank_bsp_shard(g, n, n_local, n_orig, iters, tol,
-                       static_iters: int = 0):
-    """BGL-style pull PageRank (call inside shard_map)."""
+def pagerank_bsp_program(n: int, n_local: int, n_orig: int, iters: int = 50,
+                         tol: float = 1e-6) -> SuperstepProgram:
+    """BGL-style pull PageRank (ghost replication via all-gather)."""
     base = (1.0 - ALPHA) / n_orig
-    rank0 = jnp.full((n_local,), 1.0 / n_orig, jnp.float32)
 
-    src = g["in_src_global"]                        # (E,) sentinel n
-    dstl = g["in_dst_local"]
-    valid = (src < n)
+    def init(g, *_):
+        rank0 = jnp.full((n_local,), 1.0 / n_orig, jnp.float32)
+        return rank0, jnp.float32(1.0)
 
-    def cond(state):
-        _, err, it = state
-        return (err > tol) & (it < iters)
-
-    def body(state):
-        rank, _, it = state
+    def step(g, state):
+        rank, _ = state
+        src = g["in_src_global"]                    # (E,) sentinel n
+        dstl = g["in_dst_local"]
+        valid = src < n
         contrib = _local_contrib(rank, g["out_degree"])
         cg = broadcast_global(contrib)              # all-gather (n,) f32
         gathered = jnp.where(valid, cg[jnp.where(valid, src, 0)], 0.0)
@@ -63,26 +65,23 @@ def pagerank_bsp_shard(g, n, n_local, n_orig, iters, tol,
             gathered, mode="drop")
         new_rank = base + ALPHA * z
         err = psum_scalar(jnp.abs(new_rank - rank).sum())  # extra barrier
-        return new_rank, err, it + 1
+        return new_rank, err
 
-    if static_iters:
-        def sbody(state, _):
-            return body(state), None
-        (rank, err, it), _ = jax.lax.scan(
-            sbody, (rank0, jnp.float32(1.0), jnp.int32(0)), None,
-            length=static_iters)
-        return rank, err, it
-
-    rank, err, it = jax.lax.while_loop(
-        cond, body, (rank0, jnp.float32(1.0), jnp.int32(0)))
-    return rank, err, it
+    return SuperstepProgram(
+        name="pagerank", variant="bsp", inputs=(),
+        init=init, step=step,
+        halt=lambda state: state[1] <= tol,
+        outputs=lambda state: (state[0], state[1]),
+        output_names=("rank", "err"), output_is_vertex=(True, False),
+        max_rounds=iters)
 
 
-def pagerank_fast_shard(g, n, n_local, n_orig, iters, tol,
-                        compress: bool = True, switch_factor: float = 1e3,
-                        static_iters: int = 0, err_every: int = 5):
+def pagerank_fast_program(n: int, n_local: int, n_orig: int, iters: int = 50,
+                          tol: float = 1e-6, compress=True,
+                          switch_factor: float = 1e3,
+                          err_every: int = 5) -> SuperstepProgram:
     """Push-aggregate PageRank with fused reduce-scatter exchange and
-    ADAPTIVE bf16 error-feedback compression (call inside shard_map).
+    ADAPTIVE bf16 error-feedback compression.
 
     While the iteration error is far from tol, the exchange ships bf16
     (2x less wire, error-feedback residual keeps the average unbiased);
@@ -94,22 +93,22 @@ def pagerank_fast_shard(g, n, n_local, n_orig, iters, tol,
     iterations instead of every iteration - the BSP baseline's
     per-iteration error all-reduce is exactly the synchronization cost
     the paper calls out; batching it removes 80% of the barriers at the
-    cost of up to err_every-1 extra (cheap) iterations.
+    cost of up to err_every-1 extra (cheap) iterations.  The iteration
+    counter rides in the program state (not the driver) because
+    ``err_every`` is an algorithm policy, not loop control.
     """
     base = (1.0 - ALPHA) / n_orig
-    rank0 = jnp.full((n_local,), 1.0 / n_orig, jnp.float32)
-    resid0 = jnp.zeros((n + 1,), jnp.float32)
 
-    srcl = g["out_src_local"]                       # (E,) local
-    dst = g["out_dst_global"]                       # (E,) sentinel n
-    valid = dst < n
+    def init(g, *_):
+        rank0 = jnp.full((n_local,), 1.0 / n_orig, jnp.float32)
+        resid0 = jnp.zeros((n + 1,), jnp.float32)
+        return rank0, resid0, jnp.float32(1.0), jnp.int32(0)
 
-    def cond(state):
-        _, _, err, it = state
-        return (err > tol) & (it < iters)
-
-    def body(state):
+    def step(g, state):
         rank, resid, err_prev, it = state
+        srcl = g["out_src_local"]                   # (E,) local
+        dst = g["out_dst_global"]                   # (E,) sentinel n
+        valid = dst < n
         contrib = _local_contrib(rank, g["out_degree"])
         # local segment-sum into a length-(n+1) accumulator (SpMV push);
         # the Pallas spmv kernel implements this contraction on TPU.
@@ -145,14 +144,10 @@ def pagerank_fast_shard(g, n, n_local, n_orig, iters, tol,
             operand=None)
         return new_rank, new_resid, err, it + 1
 
-    if static_iters:
-        def sbody(state, _):
-            return body(state), None
-        (rank, _, err, it), _ = jax.lax.scan(
-            sbody, (rank0, resid0, jnp.float32(1.0), jnp.int32(0)), None,
-            length=static_iters)
-        return rank, err, it
-
-    rank, _, err, it = jax.lax.while_loop(
-        cond, body, (rank0, resid0, jnp.float32(1.0), jnp.int32(0)))
-    return rank, err, it
+    return SuperstepProgram(
+        name="pagerank", variant="fast", inputs=(),
+        init=init, step=step,
+        halt=lambda state: state[2] <= tol,
+        outputs=lambda state: (state[0], state[2]),
+        output_names=("rank", "err"), output_is_vertex=(True, False),
+        max_rounds=iters)

@@ -26,6 +26,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import axis_size
+
 AXIS = "parts"
 
 
@@ -42,7 +44,7 @@ def exchange_sum(acc_global, axis_name: str = AXIS):
     Returns (n_local,) combined updates for the vertices THIS partition
     owns.  One reduce-scatter on the wire: (P-1)/P * n elements.
     """
-    parts = jax.lax.axis_size(axis_name)
+    parts = axis_size(axis_name)
     blocks = acc_global.reshape(parts, -1)
     return jax.lax.psum_scatter(blocks, axis_name, scatter_dimension=0,
                                 tiled=False).reshape(-1)
@@ -60,7 +62,7 @@ def exchange_min_int(val_global, axis_name: str = AXIS, big=None):
     all_to_all moves each partition's (P, n_local) proposal matrix so
     that owners receive P candidate rows; min over the row axis.
     """
-    parts = jax.lax.axis_size(axis_name)
+    parts = axis_size(axis_name)
     blocks = val_global.reshape(parts, 1, -1)
     rows = jax.lax.all_to_all(blocks, axis_name, split_axis=0,
                               concat_axis=1)          # (1, P, n_local)

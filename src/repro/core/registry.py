@@ -1,0 +1,156 @@
+"""Algorithm registry: ``(algo, variant) -> SuperstepProgram`` factory
+resolution, mirroring ``configs/registry.py`` for model architectures.
+
+Every engine entry point (``GraphEngine.program``, the dry-run, the
+launcher, the benchmark harness) enumerates programs from here instead
+of hard-coding algorithm names, so adding a workload is ONE registration
+plus an algorithm module — no per-layer edits.
+
+Registered pairs: ``bfs/bsp``, ``bfs/fast``, ``pagerank/bsp``,
+``pagerank/fast``, ``sssp``, ``cc`` (single-variant algorithms use the
+``"default"`` variant and may be addressed by bare algo name).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from repro.core import bfs as _bfs
+from repro.core import cc as _cc
+from repro.core import pagerank as _pr
+from repro.core import sssp as _sssp
+from repro.core.graph import GraphShards
+from repro.core.superstep import SuperstepProgram
+
+
+@dataclass(frozen=True)
+class ProgramSpec:
+    """One algorithm x variant entry.
+
+    ``make(g, **params)`` builds the SuperstepProgram against a graph's
+    shape metadata; ``params`` beyond ``defaults`` are rejected up front
+    so typos fail fast rather than silently re-tracing.
+    """
+
+    algo: str
+    variant: str
+    make: Callable[..., SuperstepProgram]
+    inputs: tuple[str, ...]              # per-query inputs ("root",) or ()
+    defaults: dict = field(default_factory=dict)
+    doc: str = ""
+
+    @property
+    def key(self) -> str:
+        return (self.algo if self.variant == "default"
+                else f"{self.algo}/{self.variant}")
+
+    @property
+    def label(self) -> str:
+        """Filesystem/record-safe spelling: "bfs_fast", "sssp"."""
+        return program_label(self.algo, self.variant)
+
+    def build(self, g: GraphShards, **params) -> SuperstepProgram:
+        unknown = set(params) - set(self.defaults)
+        if unknown:
+            raise TypeError(
+                f"{self.key}: unknown params {sorted(unknown)}; "
+                f"accepted: {sorted(self.defaults)}")
+        merged = {**self.defaults, **params}
+        return self.make(g, **merged)
+
+
+def program_label(algo: str, variant: str) -> str:
+    """Canonical "algo_variant" label ("bfs_fast"; bare algo for the
+    default-only variant) used in records, artifacts, and result keys."""
+    return algo if variant == "default" else f"{algo}_{variant}"
+
+
+_REGISTRY: dict[tuple[str, str], ProgramSpec] = {}
+_DEFAULT_VARIANT: dict[str, str] = {}
+
+
+def register(spec: ProgramSpec, *, default: bool = False) -> ProgramSpec:
+    key = (spec.algo, spec.variant)
+    if key in _REGISTRY:
+        raise ValueError(f"duplicate program registration: {key}")
+    _REGISTRY[key] = spec
+    if default or spec.algo not in _DEFAULT_VARIANT:
+        _DEFAULT_VARIANT[spec.algo] = spec.variant
+    return spec
+
+
+def get_spec(algo: str, variant: str | None = None) -> ProgramSpec:
+    """Resolve an (algo, variant) pair; ``"bfs/fast"`` shorthand works."""
+    if variant is None and "/" in algo:
+        algo, variant = algo.split("/", 1)
+    if variant is None:
+        if algo not in _DEFAULT_VARIANT:
+            raise KeyError(
+                f"unknown algorithm {algo!r}; available: {available()}")
+        variant = _DEFAULT_VARIANT[algo]
+    key = (algo, variant)
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown program {algo}/{variant}; available: {available()}")
+    return _REGISTRY[key]
+
+
+def available() -> list[tuple[str, str]]:
+    """All registered (algo, variant) pairs, registration order."""
+    return list(_REGISTRY)
+
+
+def variants(algo: str) -> list[str]:
+    return [v for (a, v) in _REGISTRY if a == algo]
+
+
+# ---------------------------------------------------------------------------
+# Built-in programs.  Factories receive the GraphShards for its shape
+# metadata only — no device arrays are touched at build time.
+# ---------------------------------------------------------------------------
+
+register(ProgramSpec(
+    algo="bfs", variant="bsp",
+    make=lambda g, **p: _bfs.bfs_bsp_program(g.n, g.n_local, **p),
+    inputs=("root",), defaults={"max_levels": 64},
+    doc="level-synchronous push BFS; full parent-proposal exchange "
+        "(the rigid-barrier Boost/PBGL baseline)"))
+
+register(ProgramSpec(
+    algo="bfs", variant="fast",
+    make=lambda g, **p: _bfs.bfs_fast_program(g.n, g.n_local, **p),
+    inputs=("root",),
+    defaults={"max_levels": 64, "pull_threshold": 0.02},
+    doc="direction-optimizing BFS with bit-packed frontier exchange "
+        "(the HPX-adapted implementation)"), default=True)
+
+register(ProgramSpec(
+    algo="pagerank", variant="bsp",
+    make=lambda g, **p: _pr.pagerank_bsp_program(g.n, g.n_local, g.n_orig,
+                                                 **p),
+    inputs=(), defaults={"iters": 50, "tol": 1e-6},
+    doc="pull PageRank with full contribution all-gather (ghost "
+        "replication baseline)"))
+
+register(ProgramSpec(
+    algo="pagerank", variant="fast",
+    make=lambda g, **p: _pr.pagerank_fast_program(g.n, g.n_local, g.n_orig,
+                                                  **p),
+    inputs=(),
+    defaults={"iters": 50, "tol": 1e-6, "compress": True,
+              "switch_factor": 1e3, "err_every": 5},
+    doc="push-aggregate PageRank: fused reduce-scatter + adaptive bf16 "
+        "error-feedback compression"), default=True)
+
+register(ProgramSpec(
+    algo="sssp", variant="default",
+    make=lambda g, **p: _sssp.sssp_program(g.n, g.n_local, **p),
+    inputs=("root",), defaults={"max_rounds": 64},
+    doc="frontier-pruned Bellman-Ford with MIN-combine exchange"))
+
+register(ProgramSpec(
+    algo="cc", variant="default",
+    make=lambda g, **p: _cc.cc_program(g.n, g.n_local, **p),
+    inputs=(), defaults={"max_rounds": 64},
+    doc="label propagation over both edge directions"))

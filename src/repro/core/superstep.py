@@ -1,0 +1,126 @@
+"""Superstep programs: the engine's declarative algorithm abstraction.
+
+"The Anatomy of Large-Scale Distributed Graph Algorithms" (Firoz et al.)
+decomposes distributed graph algorithms into reusable runtime pieces —
+a work bundle (what one superstep does), an ordering/termination policy,
+and a synchronization strategy.  This module makes that decomposition
+the public API: an algorithm is a :class:`SuperstepProgram` (pure
+``init / step / halt / outputs`` callables over per-partition graph
+arrays + the ``partitioned.py`` exchange primitives), and ONE shared
+driver (:func:`run_program`) supplies the loop machinery every
+hand-rolled driver used to duplicate:
+
+  * early-exit ``lax.while_loop`` when termination is data-dependent
+    (the production path),
+  * fixed-trip ``lax.scan`` when ``static_iters > 0`` (the dry-run /
+    roofline path: static trip counts make the cost model exact; steps
+    past convergence are natural no-ops by construction), and
+  * round accounting (the returned round count is driver state, not
+    program state).
+
+Programs never call collectives for loop control themselves — ``halt``
+reads a count/error scalar the step already reduced — so swapping the
+driver (BSP scan vs early-exit, single- vs multi-source) never touches
+algorithm code.  All callables run INSIDE ``shard_map`` over the
+1-D "parts" axis; ``core/api.py`` owns the jit/shard_map wrapping and
+the compile cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SuperstepProgram:
+    """A distributed graph algorithm as data.
+
+    The per-shard callables (all traced inside ``shard_map``):
+
+      prepare(g) -> g        optional: derive loop-invariant edge data
+                             (e.g. SSSP weights) once, outside the loop
+      init(g, *inputs) -> state
+                             build the initial state pytree from the
+                             per-query inputs (e.g. a root vertex)
+      step(g, state) -> state
+                             ONE superstep: local compute + exchange;
+                             must fold any convergence scalar (frontier
+                             count, residual error) into the state
+      halt(state) -> bool    True when converged (driver also stops at
+                             ``max_rounds``); ignored under static_iters
+      outputs(state) -> tuple
+                             final per-shard outputs, aligned with
+                             ``output_names`` / ``output_is_vertex``
+    """
+
+    name: str
+    variant: str
+    inputs: tuple[str, ...]           # per-query input names, e.g. ("root",)
+    init: Callable[..., Any]
+    step: Callable[[dict, Any], Any]
+    halt: Callable[[Any], Any]
+    outputs: Callable[[Any], tuple]
+    output_names: tuple[str, ...]
+    output_is_vertex: tuple[bool, ...]  # True: (n_local,) field -> sharded
+    max_rounds: int = 64
+    prepare: Callable[[dict], dict] = field(default=lambda g: g)
+
+    @property
+    def key(self) -> str:
+        return f"{self.name}/{self.variant}"
+
+
+def run_program(prog: SuperstepProgram, g: dict, *inputs,
+                static_iters: int = 0):
+    """The ONE shared superstep driver (call inside shard_map).
+
+    Returns ``(outputs_tuple, rounds)`` where ``rounds`` is the number of
+    supersteps executed (== ``static_iters`` on the scan path).
+    """
+    g = prog.prepare(g)
+    state0 = prog.init(g, *inputs)
+
+    if static_iters:
+        def sbody(carry, _):
+            state, r = carry
+            return (prog.step(g, state), r + 1), None
+
+        (state, rounds), _ = jax.lax.scan(
+            sbody, (state0, jnp.int32(0)), None, length=static_iters)
+        return prog.outputs(state), rounds
+
+    def cond(carry):
+        state, r = carry
+        return jnp.logical_not(prog.halt(state)) & (r < prog.max_rounds)
+
+    def body(carry):
+        state, r = carry
+        return prog.step(g, state), r + 1
+
+    state, rounds = jax.lax.while_loop(cond, body, (state0, jnp.int32(0)))
+    return prog.outputs(state), rounds
+
+
+def run_program_batched(prog: SuperstepProgram, g: dict, *batched_inputs,
+                        static_iters: int = 0):
+    """Multi-source driver: vmap :func:`run_program` over (B,)-batched
+    query inputs (e.g. BFS/SSSP roots), amortizing one graph residency
+    across B traversals — the serve-many-queries path.
+
+    Vertex outputs gain a leading (B,) axis; ``rounds`` becomes (B,).
+    """
+    g = prog.prepare(g)
+    stripped = dataclasses.replace(prog, prepare=lambda garr: garr)
+
+    def one(*ins):
+        outs, rounds = run_program(stripped, g, *ins,
+                                   static_iters=static_iters)
+        return (*outs, rounds)
+
+    res = jax.vmap(one)(*batched_inputs)
+    return res[:-1], res[-1]

@@ -1,13 +1,16 @@
 """Graph-analytics driver: the paper's workload end to end.
 
 Generates a urand/rmat graph, partitions it over the available devices,
-runs BFS + PageRank (+ SSSP, CC) in both BSP-baseline and HPX-adapted
-modes, verifies results, and reports timings.
+runs EVERY algorithm program in the registry (BFS + PageRank in both
+BSP-baseline and HPX-adapted modes, SSSP, CC), verifies results, and
+reports timings.  ``--multi-source B`` additionally runs the batched
+multi-source BFS/SSSP programs (B roots per launch) and reports
+per-query amortized time — the serve-many-queries scenario.
 
   PYTHONPATH=src python -m repro.launch.graph_analytics --graph urand18
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.graph_analytics \
-      --graph urand20 --parts 8
+      --graph urand20 --parts 8 --multi-source 16
 """
 
 from __future__ import annotations
@@ -21,13 +24,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import graph_workloads
-from repro.core import GraphEngine, partition_graph
+from repro.core import GraphEngine, partition_graph, registry
+from repro.core.registry import program_label
 from repro.graphs import generate_edges
 from repro.launch.mesh import make_graph_mesh
 
+def _timed(fn, args):
+    out = fn(*args)               # compile
+    jax.block_until_ready(out)
+    t0 = time.time()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, time.time() - t0
+
 
 def run(graph_name: str, parts: int, *, pr_iters: int = 50,
-        verify: bool = True, seed: int = 42):
+        verify: bool = True, seed: int = 42, multi_source: int = 0):
     gcfg = graph_workloads.ALL[graph_name]
     print(f"[graph] generating {graph_name}: 2^{gcfg.scale} vertices, "
           f"{gcfg.num_edges:,} edges ({gcfg.generator})")
@@ -41,22 +53,28 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
     root = jnp.int32(0)
     results = {}
 
-    for name, fn, args in [
-        ("bfs_bsp", eng.bfs(mode="bsp"), (garr, root)),
-        ("bfs_fast", eng.bfs(mode="fast"), (garr, root)),
-        ("pagerank_bsp", eng.pagerank(mode="bsp", iters=pr_iters), (garr,)),
-        ("pagerank_fast", eng.pagerank(mode="fast", iters=pr_iters), (garr,)),
-        ("sssp", eng.sssp(), (garr, root)),
-        ("cc", eng.cc(), (garr,)),
-    ]:
-        out = fn(*args)           # compile
-        jax.block_until_ready(out)
-        t0 = time.time()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        dt = time.time() - t0
+    for algo, variant in registry.available():
+        spec = registry.get_spec(algo, variant)
+        params = {"iters": pr_iters} if algo == "pagerank" else {}
+        prog = eng.program(algo, variant, **params)
+        args = (garr,) + (root,) * len(spec.inputs)
+        name = program_label(algo, variant)
+        out, dt = _timed(prog, args)
         results[name] = (out, dt)
         print(f"[graph] {name:14s} {dt*1e3:9.1f} ms")
+
+    if multi_source:
+        roots = jnp.arange(multi_source, dtype=jnp.int32)
+        for algo, variant in registry.available():
+            spec = registry.get_spec(algo, variant)
+            if not spec.inputs or variant == "bsp":
+                continue          # batch only the traversal fast paths
+            prog = eng.program(algo, variant, batch=multi_source)
+            name = f"{program_label(algo, variant)}_x{multi_source}"
+            out, dt = _timed(prog, (garr, roots))
+            results[name] = (out, dt)
+            print(f"[graph] {name:14s} {dt*1e3:9.1f} ms "
+                  f"({dt*1e3/multi_source:7.1f} ms/query)")
 
     if verify:
         p_bsp = eng.gather_vertex_field(results["bfs_bsp"][0][0])
@@ -67,6 +85,12 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
         r_fast = eng.gather_vertex_field(results["pagerank_fast"][0][0])
         rel = np.abs(r_bsp - r_fast).max() / r_bsp.max()
         print(f"[verify] PageRank bsp-vs-fast max rel diff: {rel:.2e}")
+        if multi_source:
+            mb = eng.gather_batched_vertex_field(
+                results[f"bfs_fast_x{multi_source}"][0][0])
+            same = ((mb[0] < 2 ** 30) == (p_fast < 2 ** 30)).all()
+            print(f"[verify] multi-source BFS root0 == single-source: "
+                  f"{bool(same)}")
     return results
 
 
@@ -75,10 +99,13 @@ def main():
     ap.add_argument("--graph", default="urand16")
     ap.add_argument("--parts", type=int, default=len(jax.devices()))
     ap.add_argument("--pr-iters", type=int, default=50)
+    ap.add_argument("--multi-source", type=int, default=0,
+                    help="also run batched multi-source traversals "
+                         "with this many roots")
     ap.add_argument("--no-verify", action="store_true")
     args = ap.parse_args()
     run(args.graph, args.parts, pr_iters=args.pr_iters,
-        verify=not args.no_verify)
+        verify=not args.no_verify, multi_source=args.multi_source)
 
 
 if __name__ == "__main__":

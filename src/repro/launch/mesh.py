@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -25,22 +27,17 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
         raise RuntimeError(
             f"production mesh needs {need} devices, found {len(devices)}; "
             "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512")
-    return jax.make_mesh(
-        shape, axes, devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devices)
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / examples)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def make_graph_mesh(parts: int) -> jax.sharding.Mesh:
     """1D mesh for the graph engine: vertex partitions over all chips."""
-    return jax.make_mesh(
-        (parts,), ("parts",), axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((parts,), ("parts",))
 
 
 def batch_axes(mesh: jax.sharding.Mesh, batch: int):

@@ -314,7 +314,8 @@ def model_flops(cfg, shape) -> float:
 
 def analyze(compiled, *, arch: str, shape_name: str, mesh_name: str,
             devices: int, model_flops_total: float) -> Roofline:
-    ca = compiled.cost_analysis()
+    from repro.core.compat import cost_analysis
+    ca = cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     nbytes = float(ca.get("bytes accessed", 0.0))
     stats = parse_collectives(compiled.as_text())

@@ -1,0 +1,125 @@
+"""The superstep-program API: registry coverage, compile-cache behaviour,
+and batched multi-source traversal vs per-root single-source runs."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import GraphEngine, partition_graph, registry
+from repro.graphs import urand_edges
+from repro.launch.mesh import make_graph_mesh
+
+INT_INF = 2 ** 30
+
+EXPECTED = {("bfs", "bsp"), ("bfs", "fast"), ("pagerank", "bsp"),
+            ("pagerank", "fast"), ("sssp", "default"), ("cc", "default")}
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    n, e = 512, 4096
+    edges = urand_edges(n, e, seed=7)
+    g = partition_graph(edges, n, parts=1)
+    eng = GraphEngine(g, make_graph_mesh(1))
+    return n, edges, eng, eng.device_graph()
+
+
+def test_all_programs_registered():
+    assert set(registry.available()) == EXPECTED
+
+
+@pytest.mark.parametrize("algo,variant", sorted(EXPECTED))
+def test_every_program_runs(tiny_engine, algo, variant):
+    n, edges, eng, garr = tiny_engine
+    spec = registry.get_spec(algo, variant)
+    prog = eng.program(algo, variant)
+    args = (garr,) + (jnp.int32(3),) * len(spec.inputs)
+    *outs, rounds = prog(*args)
+    assert int(rounds) > 0
+    field = eng.gather_vertex_field(outs[0])
+    assert field.shape == (n,)
+    if algo == "bfs":
+        assert field[3] == 3                      # root is its own parent
+    elif algo == "sssp":
+        assert field[3] == 0.0
+    elif algo == "cc":
+        assert field.min() >= 0
+    elif algo == "pagerank":
+        assert abs(field.sum() - 1.0) < 0.2       # rank mass ~conserved
+
+
+def test_shorthand_and_default_variants(tiny_engine):
+    _, _, eng, _ = tiny_engine
+    assert registry.get_spec("bfs").variant == "fast"
+    assert registry.get_spec("pagerank").variant == "fast"
+    assert registry.get_spec("bfs/bsp").variant == "bsp"
+    with pytest.raises(KeyError):
+        registry.get_spec("bfs", "nope")
+    with pytest.raises(KeyError):
+        registry.get_spec("nope")
+    with pytest.raises(TypeError):
+        eng.program("bfs", "fast", bogus_param=1)
+
+
+def test_program_compile_cache(tiny_engine):
+    _, _, eng, garr = tiny_engine
+    p1 = eng.program("bfs", "fast", max_levels=32)
+    p2 = eng.program("bfs", "fast", max_levels=32)
+    assert p1 is p2                               # same cached object
+    p1(garr, jnp.int32(0))
+    p1(garr, jnp.int32(1))
+    assert p1.trace_cache_size() == 1             # no re-trace across calls
+    # different params / loop modes are distinct cache entries
+    assert eng.program("bfs", "fast", max_levels=16) is not p1
+    assert eng.program("bfs", "fast", max_levels=32,
+                       static_iters=4) is not p1
+    assert p1.aot() is p1.aot()                   # AOT executable cached too
+
+
+def test_batched_multi_source_bfs_matches_single(tiny_engine):
+    n, _, eng, garr = tiny_engine
+    roots = [0, 3, 250, 499]
+    batched = eng.program("bfs", "fast", batch=len(roots))
+    parents_b, levels_b = batched(garr, jnp.asarray(roots, jnp.int32))
+    single = eng.program("bfs", "fast")
+    all_parents = eng.gather_batched_vertex_field(parents_b)
+    assert all_parents.shape == (len(roots), n)
+    for i, r in enumerate(roots):
+        p, lv = single(garr, jnp.int32(r))
+        np.testing.assert_array_equal(all_parents[i],
+                                      eng.gather_vertex_field(p))
+        assert int(levels_b[i]) == int(lv)
+
+
+def test_batched_multi_source_sssp_matches_single(tiny_engine):
+    n, _, eng, garr = tiny_engine
+    roots = [0, 77]
+    dist_b, _ = eng.program("sssp", batch=len(roots))(
+        garr, jnp.asarray(roots, jnp.int32))
+    for i, r in enumerate(roots):
+        d, _ = eng.program("sssp")(garr, jnp.int32(r))
+        np.testing.assert_allclose(eng.gather_batched_vertex_field(dist_b)[i],
+                                   eng.gather_vertex_field(d))
+
+
+def test_batch_rejected_for_inputless_programs(tiny_engine):
+    _, _, eng, _ = tiny_engine
+    with pytest.raises(ValueError):
+        eng.program("pagerank", "fast", batch=4)
+
+
+def test_static_iters_matches_early_exit(tiny_engine):
+    """SSSP/CC under the driver's fixed-trip scan converge to the same
+    fixed point as the early-exit while loop (rounds past convergence
+    are no-ops)."""
+    _, _, eng, garr = tiny_engine
+    d0, _ = eng.program("sssp")(garr, jnp.int32(0))
+    d1, rs = eng.program("sssp", static_iters=24)(garr, jnp.int32(0))
+    assert int(rs) == 24
+    np.testing.assert_allclose(eng.gather_vertex_field(d1),
+                               eng.gather_vertex_field(d0))
+    c0, _ = eng.program("cc")(garr)
+    c1, _ = eng.program("cc", static_iters=16)(garr)
+    np.testing.assert_array_equal(eng.gather_vertex_field(c1),
+                                  eng.gather_vertex_field(c0))
