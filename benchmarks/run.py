@@ -20,13 +20,15 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 def write_bench_artifact(rows: list[dict], meta: dict,
                          path=None) -> pathlib.Path:
-    """Write BENCH_graph.json: {meta, rows: [{algo, variant, parts, ms,
-    wire_mb}]}.  ``meta`` records graph/reps/mode so cross-PR comparisons
-    never silently mix measurement configurations."""
+    """Write BENCH_graph.json: {meta, rows: [{algo, variant, graph,
+    parts, ms, wire_mb}]}.  ``meta`` records graphs/reps/mode — and each
+    row carries its own graph — so cross-PR comparisons never silently
+    mix measurement configurations."""
     out = path or (REPO_ROOT / "BENCH_graph.json")
     slim = [{
         "algo": r["algo"],
         "variant": r["mode"],
+        "graph": r["graph"],
         "parts": r["parts"],
         "ms": round(r["ms"], 2),
         "wire_mb_per_part": round(r["wire_bytes_per_part"] / 1e6, 3),
@@ -65,9 +67,24 @@ def main() -> None:
         from benchmarks.bench_pagerank import main as pr_main
         graph_rows += pr_main(graph=graph, parts=parts, reps=reps)
 
+    # the registry's post-paper programs (ROADMAP: "full NWGraph set").
+    # Benchmarked on urand12: triangle counting's rotation exchange is
+    # O(n^2/P) memory/compute, so its bench point is a graph inside its
+    # n_budget; kcore/betweenness ride the same graph for comparability.
+    graph_extra = "urand12"
+    print("=" * 72)
+    print(f"New algorithms: triangles / kcore / betweenness ({graph_extra})")
+    print("=" * 72)
+    if not args.skip_scaling:
+        from benchmarks.graph_scaling import scaling_table
+        for algo in ("triangles", "kcore", "betweenness"):
+            graph_rows += scaling_table(graph_extra, algo,
+                                        parts_list=parts, reps=reps)
+
     if graph_rows:
         write_bench_artifact(graph_rows, {
-            "graph": graph, "parts": list(parts), "reps": reps,
+            "graph": graph, "graph_new_algos": graph_extra,
+            "parts": list(parts), "reps": reps,
             "mode": "fast" if args.fast else "full"})
 
     print("=" * 72)

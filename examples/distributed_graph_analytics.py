@@ -1,8 +1,13 @@
 """End-to-end driver (the paper's kind of workload at benchmark scale):
 urand20 (1M vertices, 16M edges) partitioned over 8 localities, the full
-registered algorithm suite with verification, BSP vs HPX-adapted
-comparison, plus batched multi-source traversal (16 roots per launch) —
-the serve-many-queries scenario.
+registered algorithm suite with verification — BFS + PageRank in BSP vs
+HPX-adapted modes, SSSP, CC, k-core, Brandes betweenness (the two-phase
+program); triangle counting is skipped here because its O(n^2/P)
+neighbor-set bitmap exceeds its n_budget at this scale (for the full
+nine-program suite run the launcher CLI on a small graph:
+``python -m repro.launch.graph_analytics --graph urand12``) — plus
+batched multi-source traversal (16 roots per launch), the
+serve-many-queries scenario.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/distributed_graph_analytics.py

@@ -1,17 +1,30 @@
 #!/usr/bin/env bash
 # CI gate: tier-1 test suite + fast benchmark smoke.
 #
-#   bash scripts/ci.sh
+#   bash scripts/ci.sh             # full suite (tier-1 + slow) + bench
+#   bash scripts/ci.sh --markers   # tiered: fast lane first, then slow
+#
+# The tier split uses the pytest marker `slow` (subprocess / multi-device
+# tests).  The oracle-conformance suite is deliberately NOT marked slow:
+# it is the correctness gate every registered program must pass, so it
+# runs in tier-1 in both modes.
 #
 # The fast bench writes BENCH_graph.json at the repo root so the perf
-# trajectory (algo, parts, ms) is tracked across PRs.
+# trajectory (algo, graph, parts, ms) is tracked across PRs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+if [[ "${1:-}" == "--markers" ]]; then
+    echo "== tier-1: pytest -m 'not slow' (fast lane, incl. oracle conformance) =="
+    python -m pytest -x -q -m "not slow"
+    echo "== tier-2: pytest -m slow (subprocess / multi-device) =="
+    python -m pytest -q -m "slow"
+else
+    echo "== tier-1: pytest =="
+    python -m pytest -x -q
+fi
 
 echo "== bench smoke: benchmarks.run --fast =="
 python -m benchmarks.run --fast

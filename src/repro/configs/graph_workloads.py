@@ -7,10 +7,18 @@ benchmark harness (Figures 1 and 2) and the graph-engine dry-run.
 
 from repro.configs.base import GraphConfig
 
-# Benchmark-scale graphs (runnable on this container)
+# Benchmark-scale graphs (runnable on this container).  urand12 is the
+# bench point for the dense-bitmap algorithms (triangle counting is
+# O(n^2/P) memory; see ProgramSpec.n_budget).
+URAND12 = GraphConfig("urand12", scale=12)
 URAND16 = GraphConfig("urand16", scale=16)
 URAND18 = GraphConfig("urand18", scale=18)
 URAND20 = GraphConfig("urand20", scale=20)
+
+# Small-world (Watts-Strogatz): the high-clustering family of the
+# oracle-conformance gate, at benchmark scale for the launcher.
+SW12 = GraphConfig("sw12", scale=12, generator="smallworld")
+SW16 = GraphConfig("sw16", scale=16, generator="smallworld")
 
 # Paper-scale graphs (dry-run / production targets)
 URAND22 = GraphConfig("urand22", scale=22)
@@ -23,5 +31,6 @@ RMAT20 = GraphConfig("rmat20", scale=20, generator="rmat")
 
 ALL = {
     g.name: g
-    for g in (URAND16, URAND18, URAND20, URAND22, URAND25, URAND28, RMAT18, RMAT20)
+    for g in (URAND12, URAND16, URAND18, URAND20, URAND22, URAND25,
+              URAND28, RMAT18, RMAT20, SW12, SW16)
 }

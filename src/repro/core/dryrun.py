@@ -30,10 +30,14 @@ from repro.roofline import analysis as RA
 
 # static trip counts per algorithm (documented in EXPERIMENTS): typical
 # ER BFS depth is ~8; Bellman-Ford/label-prop converge in a few more
-# rounds than the BFS depth; PageRank runs its full iteration budget.
+# rounds than the BFS depth; PageRank runs its full iteration budget;
+# k-core peels in ~(degeneracy + wave) rounds; betweenness runs its
+# static count PER PHASE (forward + backward).  "parts" means one
+# superstep per partition (the triangle rotation runs exactly P rounds).
 # Algorithms registered without an entry fall back to DEFAULT_STATIC_ITERS
 # so extending the registry never breaks the dry-run.
-STATIC_ITERS = {"bfs": 8, "pagerank": 50, "sssp": 12, "cc": 8}
+STATIC_ITERS = {"bfs": 8, "pagerank": 50, "sssp": 12, "cc": 8,
+                "triangles": "parts", "kcore": 30, "betweenness": 8}
 DEFAULT_STATIC_ITERS = 12
 
 # dry-run parameter overrides per (algo, variant)
@@ -52,6 +56,14 @@ def _graph_model_flops(g, algo: str, iters: int) -> float:
         return 2.0 * e_total * iters      # relax (add+min) per edge per round
     if algo == "cc":
         return 4.0 * e_total * iters      # min-combine both edge directions
+    if algo == "triangles":
+        # dense masked-matmul intersection: (n_local, n) x (n, n_local)
+        # per round x P rounds = one n x n x n_local contraction total
+        return 2.0 * float(g.n) * g.n * g.n_local
+    if algo == "kcore":
+        return 4.0 * e_total * iters      # decrement scan, both directions
+    if algo == "betweenness":
+        return 4.0 * e_total * iters      # forward push + backward pull
     return 2.0 * e_total                  # bfs: one relax pass over all edges
 
 
@@ -75,6 +87,8 @@ def lower_graph_programs(graph_name: str, mesh_name: str, out_dir=None,
     for algo, variant in cells:
         label = program_label(algo, variant)
         it_count = STATIC_ITERS.get(algo, DEFAULT_STATIC_ITERS)
+        if it_count == "parts":
+            it_count = parts
         params = dict(DRYRUN_PARAMS.get((algo, variant), {}))
         prog = eng.program(algo, variant, static_iters=it_count, **params)
 

@@ -1,0 +1,96 @@
+"""Distributed k-core decomposition: iterative peeling with a
+degree-threshold halt scalar.
+
+Semantics: core numbers of the UNDIRECTED MULTIGRAPH underlying the edge
+list (parallel edges each contribute a degree unit; self-loops are
+dropped) — the NumPy oracle in ``tests/oracle.py`` peels the same
+multigraph, so conformance is exact integer equality.
+
+The peeling recurrence (Batagelj-Zaversnik, threshold form): hold a
+current threshold ``k``; every superstep removes ALL alive vertices with
+induced degree <= k and assigns them ``core = k`` (correct even when
+earlier removals at this k dropped their degree below k: surviving the
+(k-1)-peel proves membership in the k-core).  Removal decrements are
+message-aggregated exactly like PageRank contributions — each killed
+endpoint posts one decrement per incident edge into a length-n
+accumulator and ONE fused ``exchange_sum`` delivers owner slices.  When
+a superstep kills nothing, the threshold advances.  The halt scalar is
+the global alive count.
+
+Rounds past convergence only advance ``k`` (core assignments are
+frozen), so the program is safe under the driver's fixed-trip
+``static_iters`` scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partitioned import AXIS, exchange_sum, psum_scalar
+from repro.core.superstep import SuperstepProgram
+
+
+def _undirected_degree(g, n, n_local):
+    """out_degree + in_degree - 2 * self_loops (multigraph, loops dropped)."""
+    lo = jax.lax.axis_index(AXIS) * n_local
+    srcl, dst = g["out_src_local"], g["out_dst_global"]
+    is_loop = (dst < n) & (dst == srcl + lo)
+    loops = jnp.zeros((n_local,), jnp.int32).at[
+        jnp.where(is_loop, srcl, 0)].add(is_loop.astype(jnp.int32))
+    return g["out_degree"] + g["in_degree"] - 2 * loops
+
+
+def kcore_program(n: int, n_local: int,
+                  max_rounds: int = 512) -> SuperstepProgram:
+    """Iterative peeling as a superstep program.
+
+    Outputs: per-vertex core numbers (vertex field) and the degeneracy
+    (max core number, replicated scalar).
+    """
+
+    def prepare(g):
+        g = dict(g)
+        g["und_degree"] = _undirected_degree(g, n, n_local)
+        return g
+
+    def init(g, *_):
+        alive0 = jnp.ones((n_local,), bool)
+        core0 = jnp.zeros((n_local,), jnp.int32)
+        return alive0, core0, g["und_degree"], jnp.int32(0), jnp.int32(1)
+
+    def step(g, state):
+        alive, core, deg, k, _ = state
+        lo = jax.lax.axis_index(AXIS) * n_local
+        kills = alive & (deg <= k)
+        n_killed = psum_scalar(kills.sum(dtype=jnp.int32))
+        core = jnp.where(kills, k, core)
+        alive = alive & ~kills
+        # aggregate degree decrements: each removed edge notifies its
+        # surviving endpoint (dead receivers are harmless)
+        srcl, dst = g["out_src_local"], g["out_dst_global"]
+        dec_out = kills[srcl] & (dst < n) & (dst != srcl + lo)
+        src, dstl = g["in_src_global"], g["in_dst_local"]
+        dec_in = kills[dstl] & (src < n) & (src != dstl + lo)
+        acc = jnp.zeros((n + 1,), jnp.int32)
+        acc = acc.at[jnp.where(dec_out, dst, n)].add(dec_out.astype(jnp.int32))
+        acc = acc.at[jnp.where(dec_in, src, n)].add(dec_in.astype(jnp.int32))
+        deg = deg - exchange_sum(acc[:n])
+        # no kills at this threshold -> the (k+1)-core remains: advance k
+        k = jnp.where(n_killed > 0, k, k + 1)
+        n_alive = psum_scalar(alive.sum(dtype=jnp.int32))
+        return alive, core, deg, k, n_alive
+
+    def outputs(state):
+        _, core, _, _, _ = state
+        kmax = jax.lax.pmax(core.max(), AXIS)
+        return core, kmax
+
+    return SuperstepProgram(
+        name="kcore", variant="default", inputs=(),
+        prepare=prepare, init=init, step=step,
+        halt=lambda state: state[4] <= 0,
+        outputs=outputs,
+        output_names=("core", "kmax"),
+        output_is_vertex=(True, False),
+        max_rounds=max_rounds)

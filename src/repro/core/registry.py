@@ -7,8 +7,9 @@ of hard-coding algorithm names, so adding a workload is ONE registration
 plus an algorithm module — no per-layer edits.
 
 Registered pairs: ``bfs/bsp``, ``bfs/fast``, ``pagerank/bsp``,
-``pagerank/fast``, ``sssp``, ``cc`` (single-variant algorithms use the
-``"default"`` variant and may be addressed by bare algo name).
+``pagerank/fast``, ``sssp``, ``cc``, ``triangles``, ``kcore``,
+``betweenness`` (single-variant algorithms use the ``"default"``
+variant and may be addressed by bare algo name).
 """
 
 from __future__ import annotations
@@ -16,10 +17,13 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable
 
+from repro.core import betweenness as _bc
 from repro.core import bfs as _bfs
 from repro.core import cc as _cc
+from repro.core import kcore as _kcore
 from repro.core import pagerank as _pr
 from repro.core import sssp as _sssp
+from repro.core import triangles as _tri
 from repro.core.graph import GraphShards
 from repro.core.superstep import SuperstepProgram
 
@@ -39,6 +43,10 @@ class ProgramSpec:
     inputs: tuple[str, ...]              # per-query inputs ("root",) or ()
     defaults: dict = field(default_factory=dict)
     doc: str = ""
+    # largest padded vertex count the implementation is sized for, or 0
+    # for unbounded.  The launcher skips over-budget programs (e.g. the
+    # O(n^2/P) triangle-counting bitmap); the dry-run still lowers them.
+    n_budget: int = 0
 
     @property
     def key(self) -> str:
@@ -68,16 +76,40 @@ def program_label(algo: str, variant: str) -> str:
 
 _REGISTRY: dict[tuple[str, str], ProgramSpec] = {}
 _DEFAULT_VARIANT: dict[str, str] = {}
+_EXPLICIT_DEFAULT: set[str] = set()
 
 
 def register(spec: ProgramSpec, *, default: bool = False) -> ProgramSpec:
+    """Register an (algo, variant) pair.
+
+    The algo's FIRST registered variant becomes its implicit default
+    until some variant claims ``default=True`` explicitly; a second
+    explicit claim for the same algo is a registration-order bug and
+    raises (it used to be silently ignored when the loser registered
+    first).
+    """
     key = (spec.algo, spec.variant)
     if key in _REGISTRY:
         raise ValueError(f"duplicate program registration: {key}")
+    if default and spec.algo in _EXPLICIT_DEFAULT:
+        # validate BEFORE mutating: a rejected claim must not leave a
+        # half-registered program behind
+        raise ValueError(
+            f"{spec.algo}: default variant already claimed by "
+            f"{_DEFAULT_VARIANT[spec.algo]!r}; cannot also claim "
+            f"{spec.variant!r}")
     _REGISTRY[key] = spec
-    if default or spec.algo not in _DEFAULT_VARIANT:
+    if default:
+        _EXPLICIT_DEFAULT.add(spec.algo)
+        _DEFAULT_VARIANT[spec.algo] = spec.variant
+    elif spec.algo not in _DEFAULT_VARIANT:
         _DEFAULT_VARIANT[spec.algo] = spec.variant
     return spec
+
+
+def default_variant(algo: str) -> str:
+    """The variant bare-name resolution picks for ``algo``."""
+    return _DEFAULT_VARIANT[algo]
 
 
 def get_spec(algo: str, variant: str | None = None) -> ProgramSpec:
@@ -147,10 +179,65 @@ register(ProgramSpec(
     algo="sssp", variant="default",
     make=lambda g, **p: _sssp.sssp_program(g.n, g.n_local, **p),
     inputs=("root",), defaults={"max_rounds": 64},
-    doc="frontier-pruned Bellman-Ford with MIN-combine exchange"))
+    doc="frontier-pruned Bellman-Ford with MIN-combine exchange"),
+    default=True)
 
 register(ProgramSpec(
     algo="cc", variant="default",
     make=lambda g, **p: _cc.cc_program(g.n, g.n_local, **p),
     inputs=(), defaults={"max_rounds": 64},
-    doc="label propagation over both edge directions"))
+    doc="label propagation over both edge directions"), default=True)
+
+register(ProgramSpec(
+    algo="triangles", variant="default",
+    make=lambda g, **p: _tri.triangles_program(g.n, g.n_local, **p),
+    inputs=(), defaults={},
+    doc="rotation triangle counting: bit-packed neighbor-set exchange "
+        "(ppermute ring, P supersteps), intersection as masked matmul",
+    n_budget=1 << 13), default=True)
+
+register(ProgramSpec(
+    algo="kcore", variant="default",
+    make=lambda g, **p: _kcore.kcore_program(g.n, g.n_local, **p),
+    inputs=(), defaults={"max_rounds": 512},
+    doc="iterative peeling (threshold form) with fused degree-decrement "
+        "exchange; degeneracy rides as a scalar output"), default=True)
+
+register(ProgramSpec(
+    algo="betweenness", variant="default",
+    make=lambda g, **p: _bc.betweenness_program(g.n, g.n_local, **p),
+    inputs=("root",), defaults={"max_levels": 64},
+    doc="Brandes single-source dependencies: path-counting forward BFS "
+        "then a dependency-accumulation backward sweep (the first "
+        "two-phase program; sum over batched sources for centrality)"),
+    default=True)
+
+
+# ---------------------------------------------------------------------------
+# Docs generation: the algorithms table in docs/API.md is this function's
+# verbatim output (asserted by tests/test_registry.py), so it can't drift.
+# ---------------------------------------------------------------------------
+
+def algorithms_markdown_table() -> str:
+    """Markdown table of every registered program, derived from the
+    registry AND the built programs (outputs come from the program
+    object itself, not a parallel description)."""
+    from repro.core.graph import abstract_graph
+    g = abstract_graph(256, 8, 1)
+    lines = [
+        "| program | inputs | params (defaults) | outputs | description |",
+        "| --- | --- | --- | --- | --- |",
+    ]
+    for algo, variant in available():
+        spec = _REGISTRY[(algo, variant)]
+        prog = spec.build(g)
+        mark = (" *(default)*"
+                if _DEFAULT_VARIANT[algo] == variant
+                and len(variants(algo)) > 1 else "")
+        ins = ", ".join(spec.inputs) or "—"
+        params = ", ".join(
+            f"{k}={spec.defaults[k]!r}" for k in sorted(spec.defaults)) or "—"
+        outs = ", ".join(prog.output_names) + ", rounds"
+        lines.append(f"| `{spec.key}`{mark} | {ins} | {params} | {outs} "
+                     f"| {spec.doc} |")
+    return "\n".join(lines)

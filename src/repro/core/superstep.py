@@ -75,13 +75,60 @@ class SuperstepProgram:
         return f"{self.name}/{self.variant}"
 
 
-def run_program(prog: SuperstepProgram, g: dict, *inputs,
-                static_iters: int = 0):
+@dataclass(frozen=True)
+class PhasedProgram:
+    """A multi-phase algorithm: a tuple of :class:`SuperstepProgram`s run
+    back to back, each phase's ``outputs`` threaded into the next phase's
+    ``init`` (after the per-query ``inputs`` of phase 0).
+
+    Brandes betweenness is the motivating case: a forward
+    shortest-path-counting BFS, then a dependency-accumulation backward
+    sweep seeded with the forward (dist, sigma) fields.  The driver is
+    still :func:`run_program` — it dispatches to :func:`run_phases` — so
+    every engine layer (compile cache, batching, dry-run static_iters)
+    works on phased programs with no extra plumbing.
+
+    ``output_names`` / ``output_is_vertex`` describe the LAST phase's
+    outputs, which are the program's outputs.
+    """
+
+    name: str
+    variant: str
+    inputs: tuple[str, ...]
+    phases: tuple[SuperstepProgram, ...]
+    output_names: tuple[str, ...]
+    output_is_vertex: tuple[bool, ...]
+
+    @property
+    def key(self) -> str:
+        return f"{self.name}/{self.variant}"
+
+
+def run_phases(prog: PhasedProgram, g: dict, *inputs,
+               static_iters: int = 0):
+    """Chain the phases of a :class:`PhasedProgram`: phase ``i+1`` is
+    initialized with phase ``i``'s outputs.  Returns the last phase's
+    outputs and the TOTAL round count (each phase runs ``static_iters``
+    supersteps on the scan path, so the total is ``len(phases) *
+    static_iters`` there)."""
+    chained = inputs
+    total = jnp.int32(0)
+    for phase in prog.phases:
+        chained, rounds = run_program(phase, g, *chained,
+                                      static_iters=static_iters)
+        total = total + rounds
+    return chained, total
+
+
+def run_program(prog, g: dict, *inputs, static_iters: int = 0):
     """The ONE shared superstep driver (call inside shard_map).
 
     Returns ``(outputs_tuple, rounds)`` where ``rounds`` is the number of
-    supersteps executed (== ``static_iters`` on the scan path).
+    supersteps executed (== ``static_iters`` on the scan path).  A
+    :class:`PhasedProgram` dispatches to :func:`run_phases`.
     """
+    if isinstance(prog, PhasedProgram):
+        return run_phases(prog, g, *inputs, static_iters=static_iters)
     g = prog.prepare(g)
     state0 = prog.init(g, *inputs)
 
@@ -106,19 +153,24 @@ def run_program(prog: SuperstepProgram, g: dict, *inputs,
     return prog.outputs(state), rounds
 
 
-def run_program_batched(prog: SuperstepProgram, g: dict, *batched_inputs,
+def run_program_batched(prog, g: dict, *batched_inputs,
                         static_iters: int = 0):
     """Multi-source driver: vmap :func:`run_program` over (B,)-batched
     query inputs (e.g. BFS/SSSP roots), amortizing one graph residency
     across B traversals — the serve-many-queries path.
 
     Vertex outputs gain a leading (B,) axis; ``rounds`` becomes (B,).
+    Works for :class:`PhasedProgram` too (batched betweenness: B forward
+    sweeps then B backward sweeps, vmapped as one phased traversal).
     """
-    g = prog.prepare(g)
-    stripped = dataclasses.replace(prog, prepare=lambda garr: garr)
+    if not isinstance(prog, PhasedProgram):
+        # hoist the loop-invariant prepare out of the vmap so per-query
+        # traversals share one derived-edge-data computation
+        g = prog.prepare(g)
+        prog = dataclasses.replace(prog, prepare=lambda garr: garr)
 
     def one(*ins):
-        outs, rounds = run_program(stripped, g, *ins,
+        outs, rounds = run_program(prog, g, *ins,
                                    static_iters=static_iters)
         return (*outs, rounds)
 

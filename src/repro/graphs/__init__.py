@@ -1,3 +1,5 @@
-from repro.graphs.generate import generate_edges, rmat_edges, urand_edges
+from repro.graphs.generate import generate_edges, rmat_edges, \
+    smallworld_edges, urand_edges
 
-__all__ = ["generate_edges", "rmat_edges", "urand_edges"]
+__all__ = ["generate_edges", "rmat_edges", "smallworld_edges",
+           "urand_edges"]

@@ -1,11 +1,14 @@
 """Graph-analytics driver: the paper's workload end to end.
 
-Generates a urand/rmat graph, partitions it over the available devices,
-runs EVERY algorithm program in the registry (BFS + PageRank in both
-BSP-baseline and HPX-adapted modes, SSSP, CC), verifies results, and
-reports timings.  ``--multi-source B`` additionally runs the batched
-multi-source BFS/SSSP programs (B roots per launch) and reports
-per-query amortized time — the serve-many-queries scenario.
+Generates a urand/rmat/smallworld graph, partitions it over the
+available devices, runs EVERY algorithm program in the registry (BFS +
+PageRank in both BSP-baseline and HPX-adapted modes, SSSP, CC, triangle
+counting, k-core, betweenness), verifies results, and reports timings.
+Programs whose ``n_budget`` the graph exceeds (the O(n^2/P)
+triangle-counting bitmap) are skipped with a note.  ``--multi-source B``
+additionally runs the batched multi-source traversal programs (B roots
+per launch) and reports per-query amortized time — the
+serve-many-queries scenario.
 
   PYTHONPATH=src python -m repro.launch.graph_analytics --graph urand18
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -55,10 +58,14 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
 
     for algo, variant in registry.available():
         spec = registry.get_spec(algo, variant)
+        name = program_label(algo, variant)
+        if spec.n_budget and g.n > spec.n_budget:
+            print(f"[graph] {name:14s}   skipped (n={g.n:,} exceeds its "
+                  f"n_budget={spec.n_budget:,})")
+            continue
         params = {"iters": pr_iters} if algo == "pagerank" else {}
         prog = eng.program(algo, variant, **params)
         args = (garr,) + (root,) * len(spec.inputs)
-        name = program_label(algo, variant)
         out, dt = _timed(prog, args)
         results[name] = (out, dt)
         print(f"[graph] {name:14s} {dt*1e3:9.1f} ms")
@@ -69,6 +76,8 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
             spec = registry.get_spec(algo, variant)
             if not spec.inputs or variant == "bsp":
                 continue          # batch only the traversal fast paths
+            if spec.n_budget and g.n > spec.n_budget:
+                continue
             prog = eng.program(algo, variant, batch=multi_source)
             name = f"{program_label(algo, variant)}_x{multi_source}"
             out, dt = _timed(prog, (garr, roots))
@@ -85,6 +94,18 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
         r_fast = eng.gather_vertex_field(results["pagerank_fast"][0][0])
         rel = np.abs(r_bsp - r_fast).max() / r_bsp.max()
         print(f"[verify] PageRank bsp-vs-fast max rel diff: {rel:.2e}")
+        if "kcore" in results:
+            kmax = int(results["kcore"][0][1])
+            print(f"[verify] k-core degeneracy: {kmax}")
+        if "betweenness" in results:
+            bc0 = float(eng.gather_vertex_field(
+                results["betweenness"][0][0])[0])
+            print(f"[verify] betweenness delta_s(s) == 0: {bc0 == 0.0}")
+        if "triangles" in results:
+            tri = eng.gather_vertex_field(results["triangles"][0][0])
+            total = int(results["triangles"][0][1])
+            print(f"[verify] triangles sum/3 == total: "
+                  f"{int(tri.sum()) // 3 == total} ({total:,})")
         if multi_source:
             mb = eng.gather_batched_vertex_field(
                 results[f"bfs_fast_x{multi_source}"][0][0])

@@ -1,0 +1,270 @@
+"""Pure-NumPy reference implementations for EVERY registered graph
+program, plus the conformance checks that pin engine outputs to them.
+
+This module is the single source of algorithmic truth for the test
+suite: ``test_oracle_conformance.py`` runs every registered (algo,
+variant) pair x parts in {1, 2, 4} x two graph families against these
+oracles, and future programs inherit the gate by adding one entry to
+``CHECKS``.  It is imported both in-process (pytest puts tests/ on
+sys.path) and inside multi-device subprocesses (the conformance test
+inserts this directory explicitly).
+
+Semantics notes (each oracle mirrors its engine program's documented
+convention — see the module docstrings in repro/core/*.py):
+
+  * bfs / sssp / betweenness: DIRECTED multigraph, parallel edges are
+    parallel paths; sssp weights reproduce ``repro.core.sssp.edge_weight``.
+  * cc: weakly-connected components labeled by their minimum vertex id
+    (the exact fixed point of min-label propagation).
+  * triangles: SIMPLE UNDIRECTED graph (dedup, no self-loops).
+  * kcore: UNDIRECTED MULTIGRAPH (parallel edges count, no self-loops).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INT_INF = 2 ** 30
+
+
+# ---------------------------------------------------------------------------
+# graph families for the conformance gate
+# ---------------------------------------------------------------------------
+
+def family_edges(family: str, n: int, seed: int):
+    """Deterministic (edges, n) for a named conformance family."""
+    # imported lazily so this module stays importable without jax deps
+    from repro.graphs import smallworld_edges, urand_edges
+    if family == "urand":
+        return urand_edges(n, 8 * n, seed=seed), n
+    if family == "smallworld":
+        return smallworld_edges(n, k=8, p=0.2, seed=seed), n
+    raise ValueError(family)
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+
+def bfs_levels(edges, n, root):
+    """Hop distances; -1 for unreachable."""
+    dist = np.full(n, -1, np.int64)
+    dist[root] = 0
+    frontier = np.zeros(n, bool)
+    frontier[root] = True
+    src, dst = edges[:, 0], edges[:, 1]
+    level = 0
+    while frontier.any():
+        level += 1
+        hit = frontier[src]
+        nxt = np.zeros(n, bool)
+        nxt[dst[hit]] = True
+        nxt &= dist < 0
+        dist[nxt] = level
+        frontier = nxt
+    return dist
+
+
+def edge_weights(edges):
+    """The engine's deterministic pseudo-random weights in [1, 2)."""
+    su = edges[:, 0].astype(np.uint32)
+    du = edges[:, 1].astype(np.uint32)
+    h = su * np.uint32(2654435761) ^ du * np.uint32(40503)
+    return 1.0 + (h % np.uint32(1 << 16)).astype(np.float64) / (1 << 16)
+
+
+def sssp_dist(edges, n, root):
+    """Bellman-Ford distances with the engine's weights; inf unreachable."""
+    w = edge_weights(edges)
+    dist = np.full(n, np.inf)
+    dist[root] = 0.0
+    src, dst = edges[:, 0], edges[:, 1]
+    for _ in range(n):
+        new = dist.copy()
+        np.minimum.at(new, dst, dist[src] + w)
+        if np.array_equal(new, dist):
+            break
+        dist = new
+    return dist
+
+
+def pagerank(edges, n, iters=50, alpha=0.85):
+    """Power iteration matching the engine (dangling mass is dropped)."""
+    outdeg = np.bincount(edges[:, 0], minlength=n).astype(np.float64)
+    r = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        contrib = np.where(outdeg > 0, r / np.maximum(outdeg, 1), 0.0)
+        z = np.zeros(n)
+        np.add.at(z, edges[:, 1], contrib[edges[:, 0]])
+        r = (1 - alpha) / n + alpha * z
+    return r
+
+
+def cc_labels(edges, n):
+    """Weak-component labels: min vertex id in each component (the exact
+    fixed point the engine's min-label propagation converges to)."""
+    labels = np.arange(n)
+    changed = True
+    while changed:
+        new = labels.copy()
+        np.minimum.at(new, edges[:, 1], labels[edges[:, 0]])
+        np.minimum.at(new, edges[:, 0], new[edges[:, 1]])
+        changed = (new != labels).any()
+        labels = new
+    return labels
+
+
+def triangles(edges, n):
+    """(per-vertex, total) triangle counts of the simple undirected graph."""
+    A = np.zeros((n, n), bool)
+    A[edges[:, 0], edges[:, 1]] = True
+    A |= A.T
+    np.fill_diagonal(A, False)
+    Af = A.astype(np.float64)
+    per_vertex = (np.einsum("ij,ij->i", Af, Af @ Af) / 2).astype(np.int64)
+    return per_vertex, int(per_vertex.sum()) // 3
+
+
+def core_numbers(edges, n):
+    """Core numbers of the undirected multigraph (threshold peeling)."""
+    src, dst = edges[:, 0], edges[:, 1]
+    ns = src != dst
+    deg = (np.bincount(src[ns], minlength=n)
+           + np.bincount(dst[ns], minlength=n)).astype(np.int64)
+    alive = np.ones(n, bool)
+    core = np.zeros(n, np.int64)
+    k = 0
+    while alive.any():
+        kills = alive & (deg <= k)
+        if kills.any():
+            core[kills] = k
+            alive[kills] = False
+            dec = np.zeros(n, np.int64)
+            m = kills[src] & ns
+            np.add.at(dec, dst[m], 1)
+            m = kills[dst] & ns
+            np.add.at(dec, src[m], 1)
+            deg = deg - dec
+        else:
+            k += 1
+    return core
+
+
+def betweenness_deps(edges, n, root):
+    """Brandes single-source dependencies delta_s(v) on the directed
+    multigraph, unweighted, delta_s(s) = 0."""
+    M = np.zeros((n, n))
+    np.add.at(M, (edges[:, 0], edges[:, 1]), 1.0)
+    dist = np.full(n, INT_INF, np.int64)
+    dist[root] = 0
+    sigma = np.zeros(n)
+    sigma[root] = 1.0
+    level = 0
+    while True:
+        fr = dist == level
+        if not fr.any():
+            break
+        pushed = M.T @ (sigma * fr)
+        newly = (pushed > 0) & (dist == INT_INF)
+        dist[newly] = level + 1
+        sigma[newly] = pushed[newly]
+        level += 1
+    delta = np.zeros(n)
+    for lvl in range(level - 1, -1, -1):
+        coef = np.where(sigma > 0, (1 + delta) / np.maximum(sigma, 1), 0.0)
+        coef *= dist == lvl + 1
+        relaxed = sigma * (M @ coef)
+        delta[dist == lvl] = relaxed[dist == lvl]
+    delta[root] = 0.0
+    return delta, sigma, dist
+
+
+# ---------------------------------------------------------------------------
+# conformance checks: one per ALGORITHM; every variant of the algorithm
+# must pass it.  ``fields`` maps the program's output_names to gathered
+# (n_orig,) numpy arrays (scalars stay scalars).
+# ---------------------------------------------------------------------------
+
+def _check_bfs(fields, edges, n, root):
+    parents = fields["parents"]
+    dist = bfs_levels(edges, n, root)
+    reached = parents < INT_INF
+    assert (reached == (dist >= 0)).all(), "BFS reachability mismatch"
+    assert parents[root] == root, "root must be its own parent"
+    # every parent is a true in-neighbor exactly one level up
+    has_edge = np.zeros((n, n), bool)
+    has_edge[edges[:, 0], edges[:, 1]] = True
+    for v in np.flatnonzero(reached):
+        if v == root:
+            continue
+        p = int(parents[v])
+        assert has_edge[p, v], f"parent {p} of {v} is not an in-neighbor"
+        assert dist[p] == dist[v] - 1, f"parent {p} of {v} level mismatch"
+
+
+def _check_sssp(fields, edges, n, root):
+    ref = sssp_dist(edges, n, root)
+    got = np.where(fields["dist"] >= 1e29, np.inf, fields["dist"])
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-4)
+
+
+def _check_pagerank(fields, edges, n, root):
+    ref = pagerank(edges, n, iters=CONFORMANCE_PR_ITERS)
+    rel = np.abs(fields["rank"] - ref).max() / ref.max()
+    assert rel < 1e-4, f"pagerank max rel err {rel:.2e}"
+
+
+def _check_cc(fields, edges, n, root):
+    np.testing.assert_array_equal(fields["labels"], cc_labels(edges, n))
+
+
+def _check_triangles(fields, edges, n, root):
+    per_vertex, total = triangles(edges, n)
+    np.testing.assert_array_equal(fields["triangles"], per_vertex)
+    assert int(fields["total"]) == total, \
+        f"global triangle count {int(fields['total'])} != {total}"
+
+
+def _check_kcore(fields, edges, n, root):
+    ref = core_numbers(edges, n)
+    np.testing.assert_array_equal(fields["core"], ref)
+    assert int(fields["kmax"]) == int(ref.max()), "degeneracy mismatch"
+
+
+def _check_betweenness(fields, edges, n, root):
+    delta, sigma, dist = betweenness_deps(edges, n, root)
+    np.testing.assert_array_equal(fields["dist"], dist)
+    np.testing.assert_allclose(fields["sigma"], sigma, rtol=1e-6)
+    np.testing.assert_allclose(fields["bc"], delta, rtol=1e-4, atol=1e-4)
+
+
+CHECKS = {
+    "bfs": _check_bfs,
+    "sssp": _check_sssp,
+    "pagerank": _check_pagerank,
+    "cc": _check_cc,
+    "triangles": _check_triangles,
+    "kcore": _check_kcore,
+    "betweenness": _check_betweenness,
+}
+
+# conformance-run parameter overrides: pagerank runs a fixed iteration
+# budget (tol below reach) so the oracle's power iteration is an exact
+# peer; the fast variant's bf16 compression is off for a tight bound.
+CONFORMANCE_PR_ITERS = 40
+CONFORMANCE_PARAMS = {
+    ("pagerank", "bsp"): {"iters": CONFORMANCE_PR_ITERS, "tol": 1e-12},
+    ("pagerank", "fast"): {"iters": CONFORMANCE_PR_ITERS, "tol": 1e-12,
+                           "compress": False},
+    ("cc", "default"): {"max_rounds": 128},
+}
+
+
+def check_conformance(algo, variant, fields, edges, n, root):
+    """Dispatch to the algorithm's oracle check; unknown algorithms fail
+    loudly so a new program MUST ship an oracle entry."""
+    if algo not in CHECKS:
+        raise AssertionError(
+            f"no oracle registered for algorithm {algo!r} — add a "
+            "reference implementation and a CHECKS entry in tests/oracle.py")
+    CHECKS[algo](fields, edges, n, root)

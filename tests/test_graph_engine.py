@@ -1,5 +1,10 @@
-"""Graph engine vs oracles (networkx / numpy), single partition in-process
-and 8 partitions via subprocess."""
+"""Graph engine vs networkx (independent second opinion on the legacy
+wrappers), single partition in-process and 8 partitions via subprocess.
+
+The systematic equality gate is tests/test_oracle_conformance.py — every
+registered program x parts x graph family against the pure-NumPy
+references in tests/oracle.py (shared here instead of ad-hoc per-test
+reimplementations)."""
 
 import numpy as np
 import pytest
@@ -8,22 +13,12 @@ import jax
 import jax.numpy as jnp
 import networkx as nx
 
+import oracle
 from repro.core import GraphEngine, partition_graph
 from repro.graphs import generate_edges, rmat_edges, urand_edges
 from repro.launch.mesh import make_graph_mesh
 
 INT_INF = 2 ** 30
-
-
-def pr_oracle(edges, n, iters=100, alpha=0.85):
-    outdeg = np.bincount(edges[:, 0], minlength=n).astype(np.float64)
-    r = np.full(n, 1.0 / n)
-    for _ in range(iters):
-        contrib = np.where(outdeg > 0, r / np.maximum(outdeg, 1), 0.0)
-        z = np.zeros(n)
-        np.add.at(z, edges[:, 1], contrib[edges[:, 0]])
-        r = (1 - alpha) / n + alpha * z
-    return r
 
 
 @pytest.fixture(scope="module")
@@ -57,7 +52,7 @@ def test_bfs_vs_networkx(small_graph, mode):
                                            ("fast", True)])
 def test_pagerank_vs_power_iteration(small_graph, mode, compress):
     n, edges, eng, garr, G = small_graph
-    ref = pr_oracle(edges, n)
+    ref = oracle.pagerank(edges, n, iters=100)
     rank, err, it = eng.pagerank(mode=mode, iters=100, tol=1e-10,
                                  compress=compress)(garr)
     r = eng.gather_vertex_field(rank)
@@ -85,10 +80,7 @@ def test_sssp_vs_dijkstra(small_graph):
     n, edges, eng, garr, G = small_graph
     dist, rounds = eng.sssp()(garr, jnp.int32(5))
     d = eng.gather_vertex_field(dist)
-    su = edges[:, 0].astype(np.uint32)
-    du = edges[:, 1].astype(np.uint32)
-    w = 1.0 + ((su * np.uint32(2654435761) ^ du * np.uint32(40503))
-               % np.uint32(1 << 16)).astype(np.float64) / (1 << 16)
+    w = oracle.edge_weights(edges)
     Gw = nx.DiGraph()
     Gw.add_nodes_from(range(n))
     Gw.add_weighted_edges_from(
@@ -113,6 +105,21 @@ def test_rmat_generator_skew():
     assert deg.max() > 8 * deg.mean()
 
 
+def test_triangles_vs_networkx(small_graph):
+    """Independent second opinion (networkx) on the rotation counter;
+    the NumPy-oracle gate covers partition counts."""
+    n, edges, eng, garr, G = small_graph
+    tri, total, _ = eng.program("triangles")(garr)
+    Gu = nx.Graph()
+    Gu.add_nodes_from(range(n))
+    Gu.add_edges_from((int(a), int(b)) for a, b in edges if a != b)
+    ref = nx.triangles(Gu)
+    t = eng.gather_vertex_field(tri)
+    assert {v: int(t[v]) for v in range(n)} == ref
+    assert int(total) == sum(ref.values()) // 3
+
+
+@pytest.mark.slow
 def test_multi_partition_parity(run_with_devices=None):
     from conftest import run_with_devices as rwd
     out = rwd("""

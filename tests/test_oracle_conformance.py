@@ -1,0 +1,87 @@
+"""THE correctness gate: every registered program x parts in {1, 2, 4}
+x two graph families must match its pure-NumPy oracle (tests/oracle.py).
+
+This replaces ad-hoc per-algorithm equality checks: a new program only
+passes the suite once it has an oracle entry, and it is exercised under
+real multi-partition exchange (2 and 4 parts run in a subprocess with
+forced host devices), not just the degenerate single-shard case.
+
+One subprocess per family runs the full program x parts sweep (54
+compile cells in two interpreter launches rather than 54); the
+per-case PASS lines are asserted host-side so a failure names its cell.
+"""
+
+import os
+
+import pytest
+
+from conftest import run_with_devices
+
+import oracle  # noqa: F401  (fail fast if the oracle module breaks)
+from repro.core import registry
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+FAMILIES = ("urand", "smallworld")
+PARTS = (1, 2, 4)
+N = 384          # pads to 512 at parts=4 (n_local multiples of 128)
+SEED = 5
+ROOT = 3
+
+_SWEEP_CODE = """
+import sys
+sys.path.insert(0, {tests_dir!r})
+import numpy as np
+import jax.numpy as jnp
+import oracle
+from repro.core import GraphEngine, partition_graph, registry
+from repro.launch.mesh import make_graph_mesh
+
+family, parts_list, n, seed, root = {family!r}, {parts!r}, {n}, {seed}, {root}
+edges, n = oracle.family_edges(family, n, seed)
+for parts in parts_list:
+    g = partition_graph(edges, n, parts)
+    eng = GraphEngine(g, make_graph_mesh(parts))
+    garr = eng.device_graph()
+    for algo, variant in registry.available():
+        spec = registry.get_spec(algo, variant)
+        params = oracle.CONFORMANCE_PARAMS.get((algo, variant), {{}})
+        prog = eng.program(algo, variant, **params)
+        args = (garr,) + (jnp.int32(root),) * len(spec.inputs)
+        *outs, rounds = prog(*args)
+        p = prog.program
+        fields = {{name: (eng.gather_vertex_field(o) if isv
+                          else np.asarray(o))
+                   for name, o, isv in zip(p.output_names, outs,
+                                           p.output_is_vertex)}}
+        assert int(rounds) > 0, (algo, variant)
+        try:
+            oracle.check_conformance(algo, variant, fields, edges, n, root)
+        except AssertionError as e:
+            raise AssertionError(
+                f"conformance FAILED: {{algo}}/{{variant}} parts={{parts}} "
+                f"family={{family}}: {{e}}") from e
+        print(f"PASS {{algo}}/{{variant}} parts={{parts}}")
+print("CONFORMANCE-OK " + family)
+"""
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_every_program_matches_oracle(family):
+    out = run_with_devices(
+        _SWEEP_CODE.format(tests_dir=TESTS_DIR, family=family,
+                           parts=PARTS, n=N, seed=SEED, root=ROOT),
+        devices=max(PARTS), timeout=1800)
+    assert f"CONFORMANCE-OK {family}" in out
+    for parts in PARTS:
+        for algo, variant in registry.available():
+            assert f"PASS {algo}/{variant} parts={parts}" in out, \
+                f"missing conformance cell {algo}/{variant} parts={parts}"
+
+
+def test_every_algorithm_has_an_oracle():
+    """A registered algorithm without an oracle entry is a gap in the
+    gate — fail at registration time, not first conformance run."""
+    algos = {a for a, _ in registry.available()}
+    missing = algos - set(oracle.CHECKS)
+    assert not missing, f"algorithms without oracles: {sorted(missing)}"

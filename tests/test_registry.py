@@ -1,19 +1,35 @@
 """The superstep-program API: registry coverage, compile-cache behaviour,
-and batched multi-source traversal vs per-root single-source runs."""
+batched multi-source traversal vs per-root single-source runs, and the
+registry-generated docs table.
+
+Coverage tests ENUMERATE the registry (no hard-coded program list), so
+newly registered programs are picked up without edits; CORE_PAIRS /
+NEW_PAIRS only assert that expected programs exist, never that the set
+is exactly them.
+"""
+
+import os
 
 import numpy as np
 import pytest
 
 import jax.numpy as jnp
 
+from conftest import run_with_devices
 from repro.core import GraphEngine, partition_graph, registry
+from repro.core.registry import ProgramSpec
 from repro.graphs import urand_edges
 from repro.launch.mesh import make_graph_mesh
 
 INT_INF = 2 ** 30
 
-EXPECTED = {("bfs", "bsp"), ("bfs", "fast"), ("pagerank", "bsp"),
-            ("pagerank", "fast"), ("sssp", "default"), ("cc", "default")}
+CORE_PAIRS = {("bfs", "bsp"), ("bfs", "fast"), ("pagerank", "bsp"),
+              ("pagerank", "fast"), ("sssp", "default"), ("cc", "default")}
+NEW_PAIRS = {("triangles", "default"), ("kcore", "default"),
+             ("betweenness", "default")}
+
+# snapshot for parametrization (registry is append-only at runtime)
+ALL_PAIRS = sorted(registry.available())
 
 
 @pytest.fixture(scope="module")
@@ -26,10 +42,26 @@ def tiny_engine():
 
 
 def test_all_programs_registered():
-    assert set(registry.available()) == EXPECTED
+    got = set(registry.available())
+    assert got >= CORE_PAIRS
+    assert got >= NEW_PAIRS
+    assert len(got) >= 9
 
 
-@pytest.mark.parametrize("algo,variant", sorted(EXPECTED))
+# light per-algorithm output sanity; deep equality lives in the oracle
+# conformance suite (tests/test_oracle_conformance.py)
+_SANITY = {
+    "bfs": lambda f, root: f[root] == root,       # root is its own parent
+    "sssp": lambda f, root: f[root] == 0.0,
+    "cc": lambda f, root: f.min() >= 0,
+    "pagerank": lambda f, root: abs(f.sum() - 1.0) < 0.2,
+    "triangles": lambda f, root: (f >= 0).all(),
+    "kcore": lambda f, root: (f >= 0).all(),
+    "betweenness": lambda f, root: f[root] == 0.0,  # delta_s(s) == 0
+}
+
+
+@pytest.mark.parametrize("algo,variant", ALL_PAIRS)
 def test_every_program_runs(tiny_engine, algo, variant):
     n, edges, eng, garr = tiny_engine
     spec = registry.get_spec(algo, variant)
@@ -39,14 +71,7 @@ def test_every_program_runs(tiny_engine, algo, variant):
     assert int(rounds) > 0
     field = eng.gather_vertex_field(outs[0])
     assert field.shape == (n,)
-    if algo == "bfs":
-        assert field[3] == 3                      # root is its own parent
-    elif algo == "sssp":
-        assert field[3] == 0.0
-    elif algo == "cc":
-        assert field.min() >= 0
-    elif algo == "pagerank":
-        assert abs(field.sum() - 1.0) < 0.2       # rank mass ~conserved
+    assert _SANITY[algo](field, 3), f"{algo}/{variant} output sanity"
 
 
 def test_shorthand_and_default_variants(tiny_engine):
@@ -54,12 +79,46 @@ def test_shorthand_and_default_variants(tiny_engine):
     assert registry.get_spec("bfs").variant == "fast"
     assert registry.get_spec("pagerank").variant == "fast"
     assert registry.get_spec("bfs/bsp").variant == "bsp"
+    for algo in ("triangles", "kcore", "betweenness"):
+        assert registry.get_spec(algo).variant == "default"
     with pytest.raises(KeyError):
         registry.get_spec("bfs", "nope")
     with pytest.raises(KeyError):
         registry.get_spec("nope")
     with pytest.raises(TypeError):
         eng.program("bfs", "fast", bogus_param=1)
+
+
+def test_register_default_claims():
+    """The implicit default is the FIRST registered variant; an explicit
+    default=True overrides it; a SECOND explicit claim for the same algo
+    raises instead of being silently resolved by registration order."""
+    def spec(variant):
+        return ProgramSpec(algo="zz_test_algo", variant=variant,
+                           make=lambda g: None, inputs=())
+    try:
+        registry.register(spec("a"))
+        assert registry.default_variant("zz_test_algo") == "a"   # implicit
+        registry.register(spec("b"), default=True)
+        assert registry.default_variant("zz_test_algo") == "b"   # explicit
+        with pytest.raises(ValueError, match="already claimed"):
+            registry.register(spec("c"), default=True)
+        assert ("zz_test_algo", "c") not in registry.available()
+        with pytest.raises(ValueError, match="duplicate"):
+            registry.register(spec("a"))
+    finally:
+        for v in ("a", "b", "c"):
+            registry._REGISTRY.pop(("zz_test_algo", v), None)
+        registry._DEFAULT_VARIANT.pop("zz_test_algo", None)
+        registry._EXPLICIT_DEFAULT.discard("zz_test_algo")
+
+
+def test_builtin_defaults_are_explicit():
+    """Every built-in algorithm's default is an explicit claim — the
+    old silent first-wins behaviour can't decide a shipped default."""
+    for algo in {a for a, _ in registry.available()}:
+        assert algo in registry._EXPLICIT_DEFAULT, \
+            f"{algo}: default variant relies on registration order"
 
 
 def test_program_compile_cache(tiny_engine):
@@ -75,6 +134,9 @@ def test_program_compile_cache(tiny_engine):
     assert eng.program("bfs", "fast", max_levels=32,
                        static_iters=4) is not p1
     assert p1.aot() is p1.aot()                   # AOT executable cached too
+    # phased programs ride the same cache
+    b1 = eng.program("betweenness")
+    assert eng.program("betweenness") is b1
 
 
 def test_batched_multi_source_bfs_matches_single(tiny_engine):
@@ -103,16 +165,42 @@ def test_batched_multi_source_sssp_matches_single(tiny_engine):
                                    eng.gather_vertex_field(d))
 
 
+def test_batched_betweenness_matches_single(tiny_engine):
+    """The phased program under run_program_batched: B forward sweeps +
+    B backward sweeps vmapped as one launch must be bit-identical to
+    per-source runs (forward sigma/dist AND backward bc)."""
+    n, _, eng, garr = tiny_engine
+    roots = [0, 3, 250]
+    bc_b, sg_b, d_b, rounds_b = eng.program("betweenness", batch=len(roots))(
+        garr, jnp.asarray(roots, jnp.int32))
+    single = eng.program("betweenness")
+    for i, r in enumerate(roots):
+        bc, sg, d, rounds = single(garr, jnp.int32(r))
+        np.testing.assert_array_equal(
+            eng.gather_batched_vertex_field(d_b)[i],
+            eng.gather_vertex_field(d))
+        np.testing.assert_array_equal(
+            eng.gather_batched_vertex_field(sg_b)[i],
+            eng.gather_vertex_field(sg))
+        np.testing.assert_array_equal(
+            eng.gather_batched_vertex_field(bc_b)[i],
+            eng.gather_vertex_field(bc))
+        assert int(rounds_b[i]) == int(rounds)
+
+
 def test_batch_rejected_for_inputless_programs(tiny_engine):
     _, _, eng, _ = tiny_engine
     with pytest.raises(ValueError):
         eng.program("pagerank", "fast", batch=4)
+    with pytest.raises(ValueError):
+        eng.program("triangles", batch=4)
 
 
 def test_static_iters_matches_early_exit(tiny_engine):
-    """SSSP/CC under the driver's fixed-trip scan converge to the same
-    fixed point as the early-exit while loop (rounds past convergence
-    are no-ops)."""
+    """Fixed-trip scans converge to the same fixed point as the
+    early-exit while loop (rounds past convergence are no-ops) — for
+    the fixpoint programs AND the new gated-rotation/peeling/phased
+    ones."""
     _, _, eng, garr = tiny_engine
     d0, _ = eng.program("sssp")(garr, jnp.int32(0))
     d1, rs = eng.program("sssp", static_iters=24)(garr, jnp.int32(0))
@@ -123,3 +211,70 @@ def test_static_iters_matches_early_exit(tiny_engine):
     c1, _ = eng.program("cc", static_iters=16)(garr)
     np.testing.assert_array_equal(eng.gather_vertex_field(c1),
                                   eng.gather_vertex_field(c0))
+    t0, tot0, _ = eng.program("triangles")(garr)
+    t1, tot1, rt = eng.program("triangles", static_iters=5)(garr)
+    assert int(rt) == 5 and int(tot1) == int(tot0)  # rounds past P gated
+    np.testing.assert_array_equal(eng.gather_vertex_field(t1),
+                                  eng.gather_vertex_field(t0))
+    k0, km0, _ = eng.program("kcore")(garr)
+    k1, km1, _ = eng.program("kcore", static_iters=48)(garr)
+    assert int(km1) == int(km0)
+    np.testing.assert_array_equal(eng.gather_vertex_field(k1),
+                                  eng.gather_vertex_field(k0))
+    b0, _, _, _ = eng.program("betweenness")(garr, jnp.int32(0))
+    b1, _, _, rb = eng.program("betweenness", static_iters=14)(
+        garr, jnp.int32(0))
+    assert int(rb) == 28                          # per-phase static count
+    np.testing.assert_array_equal(eng.gather_vertex_field(b1),
+                                  eng.gather_vertex_field(b0))
+
+
+@pytest.mark.slow
+def test_rounds_accounting_partition_invariant():
+    """The driver's returned round count is a property of the algorithm
+    on the graph, not of the partitioning — for every program whose
+    round structure is integer-combined (min/or/count exchanges are
+    order-exact).  The triangle rotation is the documented exception:
+    it runs exactly P supersteps by construction."""
+    out = run_with_devices("""
+import jax.numpy as jnp
+from repro.graphs import urand_edges
+from repro.core import GraphEngine, partition_graph, registry
+from repro.launch.mesh import make_graph_mesh
+
+n, e = 1024, 8192
+edges = urand_edges(n, e, seed=3)
+invariant = ["bfs/bsp", "bfs/fast", "sssp", "cc", "kcore", "betweenness"]
+rounds = {}
+for parts in (1, 2, 4):
+    g = partition_graph(edges, n, parts)
+    eng = GraphEngine(g, make_graph_mesh(parts))
+    garr = eng.device_graph()
+    for key in invariant:
+        spec = registry.get_spec(key)
+        prog = eng.program(key)
+        args = (garr,) + (jnp.int32(1),) * len(spec.inputs)
+        *_, r = prog(*args)
+        rounds.setdefault(key, []).append(int(r))
+    *_, rt = eng.program("triangles")(garr)
+    assert int(rt) == parts, f"triangle rotation must run P={parts} rounds"
+for key, rs in rounds.items():
+    assert len(set(rs)) == 1, f"{key}: rounds vary across parts: {rs}"
+    assert rs[0] > 0, key
+print("ROUNDS-INVARIANT OK", rounds)
+""", devices=4)
+    assert "ROUNDS-INVARIANT OK" in out
+
+
+def test_docs_table_matches_registry():
+    """docs/API.md embeds registry.algorithms_markdown_table() verbatim,
+    so the algorithms table cannot drift from the registry."""
+    table = registry.algorithms_markdown_table()
+    api_md = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "docs", "API.md")
+    with open(api_md) as f:
+        content = f.read()
+    assert table in content, (
+        "docs/API.md algorithms table is stale — regenerate with:\n"
+        "  PYTHONPATH=src python -c 'from repro.core import registry; "
+        "print(registry.algorithms_markdown_table())'")
