@@ -1,0 +1,149 @@
+"""Perf-regression gate: diff a freshly written BENCH_graph.json against
+the committed baseline (``git show HEAD:BENCH_graph.json`` by default).
+
+  PYTHONPATH=src python -m benchmarks.compare [--threshold 1.25]
+
+Rows are joined per (algo, variant, graph, parts); a ratio table prints
+for every matched cell, and the process exits non-zero when any cell's
+new/old wall-time ratio exceeds the threshold.  Guards against false
+alarms:
+
+  * rows measured under DIFFERENT dispatch configurations (the
+    ``localops`` / ``layout`` fields benchmarks/run.py records in meta)
+    are never hard-compared — a REPRO_LOCALOPS=ref run vs an ELL-path
+    baseline is a config change, not a regression (the table still
+    prints, the gate is skipped);
+  * cells where both sides are under ``--min-ms`` are jitter on
+    emulated devices, not signal, and never fail the gate;
+  * rows present on only one side (new algorithms, dropped bench
+    points) are reported but never fail;
+  * a missing baseline (fresh clone, no git) is a skip, not a failure.
+
+``scripts/ci.sh`` runs this right after the fast bench.  The committed
+BENCH_graph.json is the baseline, so land refreshed rows in the same PR
+as an intentional perf change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _row_key(r: dict) -> tuple:
+    return (r["algo"], r["variant"], r.get("graph", "?"), r["parts"])
+
+
+def load_bench(source: str) -> tuple[dict, dict] | None:
+    """(meta, {key: row}) from a path or ``git:REV``; None if unavailable."""
+    if source.startswith("git:"):
+        rev = source[len("git:"):]
+        proc = subprocess.run(
+            ["git", "show", f"{rev}:BENCH_graph.json"], cwd=REPO_ROOT,
+            capture_output=True, text=True)
+        if proc.returncode != 0:
+            return None
+        text = proc.stdout
+    else:
+        path = pathlib.Path(source)
+        if not path.exists():
+            return None
+        text = path.read_text()
+    data = json.loads(text)
+    return data.get("meta", {}), {_row_key(r): r for r in data.get("rows", [])}
+
+
+def dispatch_config(meta: dict) -> tuple:
+    """The measurement configuration a row set was taken under:
+    dispatch (localops/layout) AND measurement setup (fast-vs-full mode,
+    rep count) - ms from different configs are not comparable, so any
+    mismatch skips the hard gate (the table still prints).  Artifacts
+    from before the localops layer read as (None, None, ...)."""
+    return (meta.get("localops"), meta.get("layout"),
+            meta.get("mode"), meta.get("reps"))
+
+
+def compare(old: dict, new: dict, threshold: float,
+            min_ms: float = 0.0) -> tuple[list, list]:
+    """(table_lines, regression_keys) for the joined row sets."""
+    lines = [f"{'algo/variant':22s} {'graph':10s} {'parts':>5s} "
+             f"{'old_ms':>9s} {'new_ms':>9s} {'ratio':>6s}"]
+    regressions = []
+    for key in sorted(set(old) & set(new)):
+        algo, variant, graph, parts = key
+        o, n = old[key]["ms"], new[key]["ms"]
+        ratio = n / max(o, 1e-9)
+        flag = ""
+        if ratio > threshold and max(o, n) >= min_ms:
+            flag = "  <-- REGRESSION"
+            regressions.append(key)
+        elif ratio > threshold:
+            flag = f"  (slower, under the {min_ms:.0f}ms jitter floor)"
+        elif ratio < 1.0 / threshold:
+            flag = "  (faster)"
+        lines.append(f"{algo + '/' + variant:22s} {graph:10s} {parts:5d} "
+                     f"{o:9.1f} {n:9.1f} {ratio:6.2f}{flag}")
+    for key in sorted(set(new) - set(old)):
+        lines.append(f"{key[0] + '/' + key[1]:22s} {key[2]:10s} "
+                     f"{key[3]:5d} {'-':>9s} {new[key]['ms']:9.1f}   new row")
+    for key in sorted(set(old) - set(new)):
+        lines.append(f"{key[0] + '/' + key[1]:22s} {key[2]:10s} "
+                     f"{key[3]:5d} {old[key]['ms']:9.1f} {'-':>9s}   "
+                     "row dropped")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="git:HEAD",
+                    help="committed rows: 'git:REV' or a file path "
+                         "(default git:HEAD)")
+    ap.add_argument("--current", default=str(REPO_ROOT / "BENCH_graph.json"),
+                    help="freshly written rows (default repo root)")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="fail when new/old ms exceeds this ratio")
+    ap.add_argument("--min-ms", type=float, default=10.0,
+                    help="cells where BOTH sides are under this never "
+                         "fail (emulated-device jitter floor)")
+    args = ap.parse_args(argv)
+
+    loaded_old = load_bench(args.baseline)
+    loaded_new = load_bench(args.current)
+    if loaded_old is None:
+        print(f"[compare] baseline {args.baseline} unavailable; skipping "
+              "regression gate")
+        return 0
+    if loaded_new is None:
+        print(f"[compare] current rows {args.current} missing; run "
+              "benchmarks.run first", file=sys.stderr)
+        return 2
+    old_meta, old = loaded_old
+    new_meta, new = loaded_new
+
+    cfg_old, cfg_new = dispatch_config(old_meta), dispatch_config(new_meta)
+    lines, regressions = compare(old, new, args.threshold, args.min_ms)
+    print(f"[compare] {args.current} vs {args.baseline} "
+          f"(threshold {args.threshold:.2f}x, floor {args.min_ms:.0f}ms)")
+    print("\n".join(lines))
+    if cfg_old != cfg_new:
+        print("[compare] measurement config changed (localops, layout, "
+              f"mode, reps): {cfg_old} -> {cfg_new}; ratios are "
+              "cross-configuration — regression gate skipped")
+        return 0
+    if regressions:
+        print(f"[compare] {len(regressions)} regression(s) over "
+              f"{args.threshold:.2f}x: "
+              + ", ".join("/".join(map(str, k)) for k in regressions),
+              file=sys.stderr)
+        return 1
+    print("[compare] no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

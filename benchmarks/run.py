@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 
@@ -82,10 +83,17 @@ def main() -> None:
                                         parts_list=parts, reps=reps)
 
     if graph_rows:
+        # the localops mode/layout steer which hot-loop implementation
+        # was measured; recorded so cross-PR comparisons (compare.py)
+        # never silently mix dispatch configurations.  Read from the env
+        # (not repro.core.localops): each bench point is a subprocess
+        # inheriting this env, and the harness never imports jax.
         write_bench_artifact(graph_rows, {
             "graph": graph, "graph_new_algos": graph_extra,
             "parts": list(parts), "reps": reps,
-            "mode": "fast" if args.fast else "full"})
+            "mode": "fast" if args.fast else "full",
+            "localops": os.environ.get("REPRO_LOCALOPS", "auto"),
+            "layout": "ell"})
 
     print("=" * 72)
     print("Kernel micro-benchmarks (CPU oracle time + TPU roofline bound)")

@@ -7,20 +7,27 @@
 # The tier split uses the pytest marker `slow` (subprocess / multi-device
 # tests).  The oracle-conformance suite is deliberately NOT marked slow:
 # it is the correctness gate every registered program must pass, so it
-# runs in tier-1 in both modes.
+# runs in tier-1 in both modes.  The `tier1` marker PINS a suite to the
+# fast lane (selected as "tier1 or not slow", so tier1 wins even if a
+# suite someday also gets marked slow): the kernel-interpret parity
+# suites (tests/test_kernels_{spmv,frontier}.py) carry it because the
+# localops dispatch layer routes production hot loops through those
+# kernels.
 #
 # The fast bench writes BENCH_graph.json at the repo root so the perf
-# trajectory (algo, graph, parts, ms) is tracked across PRs.
+# trajectory (algo, graph, parts, ms) is tracked across PRs, and
+# benchmarks/compare.py gates the fresh rows against the committed ones
+# (>1.25x wall-time regression on any cell fails CI).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--markers" ]]; then
-    echo "== tier-1: pytest -m 'not slow' (fast lane, incl. oracle conformance) =="
-    python -m pytest -x -q -m "not slow"
-    echo "== tier-2: pytest -m slow (subprocess / multi-device) =="
-    python -m pytest -q -m "slow"
+    echo "== tier-1: pytest -m 'tier1 or not slow' (fast lane: conformance + kernel parity) =="
+    python -m pytest -x -q -m "tier1 or not slow"
+    echo "== tier-2: pytest -m 'slow and not tier1' (subprocess / multi-device) =="
+    python -m pytest -q -m "slow and not tier1"
 else
     echo "== tier-1: pytest =="
     python -m pytest -x -q
@@ -30,4 +37,8 @@ echo "== bench smoke: benchmarks.run --fast =="
 python -m benchmarks.run --fast
 
 test -f BENCH_graph.json || { echo "BENCH_graph.json missing" >&2; exit 1; }
+
+echo "== bench regression gate: benchmarks.compare (vs committed rows) =="
+python -m benchmarks.compare --threshold 1.25
+
 echo "== CI OK =="

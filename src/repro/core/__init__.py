@@ -7,12 +7,14 @@ core/registry.py and compiled/cached through ``GraphEngine.program``.
 See core/bfs.py, core/pagerank.py for the algorithm-level adaptation
 notes and DESIGN.md for the system view."""
 
-from repro.core import registry
+from repro.core import localops, registry
 from repro.core.api import CompiledProgram, GraphEngine
-from repro.core.graph import GraphShards, abstract_graph, partition_graph
+from repro.core.graph import EllMeta, GraphShards, abstract_graph, \
+    partition_graph
 from repro.core.superstep import SuperstepProgram, run_program
 
 __all__ = [
-    "CompiledProgram", "GraphEngine", "GraphShards", "SuperstepProgram",
-    "abstract_graph", "partition_graph", "registry", "run_program",
+    "CompiledProgram", "EllMeta", "GraphEngine", "GraphShards",
+    "SuperstepProgram", "abstract_graph", "localops", "partition_graph",
+    "registry", "run_program",
 ]

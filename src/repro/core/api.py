@@ -30,7 +30,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import registry
+from repro.core import localops, registry
 from repro.core.compat import shard_map
 from repro.core.graph import GraphShards
 from repro.core.superstep import run_program, run_program_batched
@@ -38,8 +38,8 @@ from repro.core.superstep import run_program, run_program_batched
 P = jax.sharding.PartitionSpec
 
 
-def _graph_specs(g: GraphShards):
-    return {k: P("parts", None) for k in g.abstract_arrays()}
+def _graph_specs(g: GraphShards, layout: str):
+    return {k: P("parts", None) for k in g.abstract_arrays(layout)}
 
 
 class CompiledProgram:
@@ -85,6 +85,10 @@ class CompiledProgram:
 class GraphEngine:
     g: GraphShards
     mesh: jax.sharding.Mesh
+    # "ell" ships the blocked-ELL arrays so localops takes the tuned
+    # gather path; "coo" withholds them - every program then traces the
+    # reference scatter idiom (the escape hatch behind --layout coo)
+    layout: str = "ell"
     _cache: dict = field(default_factory=dict, repr=False, compare=False)
 
     # -- the program API ----------------------------------------------------
@@ -107,10 +111,13 @@ class GraphEngine:
                 f"{spec.key} takes no per-query inputs; batch="
                 f"{batch} has nothing to vmap over")
         g = self.g
+        # the layout and localops mode steer TRACE-time dispatch in
+        # core/localops.py, so both belong in the compile-cache key
         key = (spec.algo, spec.variant, static_iters, batch,
                tuple(sorted(params.items())),
                (g.n, g.n_orig, g.parts, g.n_local, g.e_max),
-               (tuple(self.mesh.shape.items()), self.mesh.devices.shape))
+               (tuple(self.mesh.shape.items()), self.mesh.devices.shape),
+               (self.layout, localops.get_mode()))
         hit = self._cache.get(key)
         if hit is not None:
             return hit
@@ -133,13 +140,13 @@ class GraphEngine:
         vspec = P("parts", None) if batch is None else P("parts", None, None)
         out_specs = tuple(vspec if is_v else P()
                           for is_v in prog.output_is_vertex) + (P(),)
-        in_specs = (_graph_specs(g),) + (P(),) * n_inputs
+        in_specs = (_graph_specs(g, self.layout),) + (P(),) * n_inputs
         jitted = jax.jit(shard_map(
             fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False))
 
         root_shape = () if batch is None else (batch,)
-        abstract_args = (g.abstract_arrays(),) + tuple(
+        abstract_args = (g.abstract_arrays(self.layout),) + tuple(
             jax.ShapeDtypeStruct(root_shape, jnp.int32)
             for _ in range(n_inputs))
         compiled = CompiledProgram(spec, prog, jitted, abstract_args)
@@ -173,7 +180,7 @@ class GraphEngine:
 
     # -- helpers -------------------------------------------------------------
     def device_graph(self):
-        arrs = self.g.device_arrays()
+        arrs = self.g.device_arrays(self.layout)
         sh = jax.sharding.NamedSharding(self.mesh, P("parts", None))
         return {k: jax.device_put(v, sh) for k, v in arrs.items()}
 

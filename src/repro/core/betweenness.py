@@ -46,6 +46,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import localops
 from repro.core.partitioned import AXIS, broadcast_global, exchange_sum, \
     psum_scalar
 from repro.core.superstep import PhasedProgram, SuperstepProgram
@@ -53,9 +54,10 @@ from repro.core.superstep import PhasedProgram, SuperstepProgram
 INT_INF = jnp.int32(2 ** 30)
 
 
-def bc_forward_program(n: int, n_local: int,
-                       max_levels: int = 64) -> SuperstepProgram:
+def bc_forward_program(shards, max_levels: int = 64) -> SuperstepProgram:
     """Phase 1: level-synchronous BFS counting shortest paths."""
+    n, n_local = shards.n, shards.n_local
+    ell_dst = shards.ell("ell_dst")
 
     def init(g, root):
         lo = jax.lax.axis_index(AXIS) * n_local
@@ -69,10 +71,10 @@ def bc_forward_program(n: int, n_local: int,
         dist, sigma, frontier, level, _ = state
         srcl, dst = g["out_src_local"], g["out_dst_global"]
         active = frontier[srcl] & (dst < n)
-        acc = jnp.zeros((n + 1,), jnp.float32).at[
-            jnp.where(active, dst, n)].add(
-            jnp.where(active, sigma[srcl], 0.0))
-        recv = exchange_sum(acc[:n])                # (n_local,) f32
+        acc = localops.scatter_combine(
+            g, ell_dst, jnp.where(active, sigma[srcl], 0.0), "add",
+            identity=jnp.float32(0.0))
+        recv = exchange_sum(acc)                    # (n_local,) f32
         newly = (recv > 0) & (dist == INT_INF)
         dist = jnp.where(newly, level, dist)
         sigma = sigma + jnp.where(newly, recv, 0.0)
@@ -88,13 +90,14 @@ def bc_forward_program(n: int, n_local: int,
         max_rounds=max_levels)
 
 
-def bc_backward_program(n: int, n_local: int,
-                        max_levels: int = 64) -> SuperstepProgram:
+def bc_backward_program(shards, max_levels: int = 64) -> SuperstepProgram:
     """Phase 2: dependency accumulation over the shortest-path DAG.
 
     ``init`` receives the forward phase's (dist, sigma) — the phase
     chaining contract.
     """
+    n, n_local = shards.n, shards.n_local
+    ell_out = shards.ell("ell_out")
 
     def init(g, dist, sigma):
         delta0 = jnp.zeros((n_local,), jnp.float32)
@@ -111,7 +114,8 @@ def bc_backward_program(n: int, n_local: int,
         safe_dst = jnp.where(valid, dst, 0)
         deeper = valid & (dist_g[safe_dst] == dist[srcl] + 1)
         contrib = jnp.where(deeper, coef_g[safe_dst], 0.0)
-        s = jnp.zeros((n_local,), jnp.float32).at[srcl].add(contrib)
+        s = localops.scatter_combine(g, ell_out, contrib, "add",
+                                     identity=jnp.float32(0.0))
         new_delta = sigma * s
         changed = psum_scalar((new_delta != delta).sum(dtype=jnp.int32))
         return new_delta, dist, sigma, dist_g, changed
@@ -131,12 +135,11 @@ def bc_backward_program(n: int, n_local: int,
         max_rounds=max_levels)
 
 
-def betweenness_program(n: int, n_local: int,
-                        max_levels: int = 64) -> PhasedProgram:
+def betweenness_program(shards, max_levels: int = 64) -> PhasedProgram:
     """Forward + backward Brandes as ONE phased program."""
     return PhasedProgram(
         name="betweenness", variant="default", inputs=("root",),
-        phases=(bc_forward_program(n, n_local, max_levels),
-                bc_backward_program(n, n_local, max_levels)),
+        phases=(bc_forward_program(shards, max_levels),
+                bc_backward_program(shards, max_levels)),
         output_names=("bc", "sigma", "dist"),
         output_is_vertex=(True, True, True))

@@ -16,6 +16,13 @@ Paper mapping (SS4.1):
     baseline), and parents derived owner-side from in-edges (no parent
     traffic at all).
 
+The per-level LOCAL edge work routes through ``core/localops.py``: the
+push-combine is ``scatter_combine`` over the blocked-ELL ``ell_dst``
+structure and owner-side parent derivation is ``frontier_pull`` over
+``ell_in`` (the Pallas BFS-pull kernel on TPU) - no serialized scatters
+on any backend.  The push candidate exchange is the packed-uint32
+``exchange_or`` of ``core/partitioned.py``.
+
 Both are expressed as :class:`~repro.core.superstep.SuperstepProgram`
 factories (``init / step / halt / outputs`` over per-shard arrays); the
 shared driver in core/superstep.py supplies the while/scan loop, so the
@@ -28,59 +35,38 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import localops
 from repro.core.compat import axis_size
-from repro.core.partitioned import AXIS, broadcast_global, psum_scalar
+from repro.core.partitioned import AXIS, broadcast_global, exchange_or, \
+    pack_bits, psum_scalar
 from repro.core.superstep import SuperstepProgram
 
 
 INT_INF = jnp.int32(2 ** 30)
 
 
-def _pack_bits(bits):
-    """(m,) bool -> (m/32,) uint32."""
-    m = bits.shape[0]
-    w = bits.reshape(m // 32, 32).astype(jnp.uint32)
-    return (w << jnp.arange(32, dtype=jnp.uint32)).sum(axis=1,
-                                                       dtype=jnp.uint32)
-
-
-def _test_bits(packed, idx):
-    """Gather bit idx (any shape int32) from packed global bitmap."""
-    word = packed[idx >> 5]
-    return (word >> (idx & 31).astype(jnp.uint32)) & 1
-
-
-def _derive_parents(g, gf_packed, unvisited, n):
+def _derive_parents(g, ell_in, gf_packed, unvisited):
     """Owner-side parent derivation by pulling over local in-edges.
 
     For every local unvisited vertex, find the min-id in-neighbor that is
     in the current global frontier. Returns (new_mask, parent_prop).
     """
-    src = g["in_src_global"]                       # (E,) global, sentinel n
-    dstl = g["in_dst_local"]                       # (E,) local
-    valid = src < n
-    hit = (_test_bits(gf_packed, jnp.where(valid, src, 0)) == 1) & valid
-    hit = hit & unvisited[dstl]
-    n_local = unvisited.shape[0]
-    prop = jnp.full((n_local,), INT_INF, jnp.int32).at[
-        jnp.where(hit, dstl, n_local - 1)].min(
-        jnp.where(hit, src, INT_INF), mode="drop")
+    prop = localops.frontier_pull(g, ell_in, gf_packed, unvisited)
     new_mask = (prop < INT_INF) & unvisited
     return new_mask, prop
 
 
-def _bsp_level(g, n, n_local, parents, frontier):
+def _bsp_level(g, ell_dst, n, n_local, parents, frontier):
     """One BSP level: full (n,) parent-proposal exchange via a2a MIN."""
     parts = axis_size(AXIS)
     lo = jax.lax.axis_index(AXIS) * n_local
     srcl = g["out_src_local"]
     dst = g["out_dst_global"]
-    valid = dst < n
-    active = frontier[srcl] & valid
+    active = frontier[srcl] & (dst < n)
     src_g = (srcl + lo).astype(jnp.int32)
-    prop = jnp.full((n + 1,), INT_INF, jnp.int32).at[
-        jnp.where(active, dst, n)].min(
-        jnp.where(active, src_g, INT_INF))[:n]
+    prop = localops.scatter_combine(
+        g, ell_dst, jnp.where(active, src_g, INT_INF), "min",
+        identity=INT_INF)
     # exchange: every partition contributes proposals for every vertex
     rows = jax.lax.all_to_all(prop.reshape(parts, 1, n_local), AXIS,
                               split_axis=0, concat_axis=1)
@@ -93,44 +79,36 @@ def _bsp_level(g, n, n_local, parents, frontier):
     return parents, new_mask, count
 
 
-def _fast_level(g, n, n_local, parents, gf_packed):
+def _fast_level(g, ell_in, parents, gf_packed):
     """One direction-optimizing level with bit-packed exchange."""
-    parts = axis_size(AXIS)
     unvisited = parents == INT_INF
-    new_mask, prop = _derive_parents(g, gf_packed, unvisited, n)
+    new_mask, prop = _derive_parents(g, ell_in, gf_packed, unvisited)
     parents = jnp.where(new_mask, prop, parents)
     # pack local next frontier; all-gather the global bitmap (n/32 words)
-    nf_packed_local = _pack_bits(new_mask)
+    nf_packed_local = pack_bits(new_mask)
     gf_next = broadcast_global(nf_packed_local)
     count = psum_scalar(new_mask.sum(dtype=jnp.int32))
     return parents, gf_next, count
 
 
-def _fast_level_push(g, n, n_local, parents, frontier_local, gf_packed):
-    """Push variant: scatter candidate bits from active out-edges, then
-    OR-exchange only the packed candidate bitmap (n/32 u32)."""
-    parts = axis_size(AXIS)
+def _fast_level_push(g, ell_in, ell_dst, n, parents,
+                     frontier_local, gf_packed):
+    """Push variant: OR-combine candidate bits from active out-edges,
+    then ship ONLY the packed candidate bitmap (n/32 u32) through the
+    packed ``exchange_or``."""
     srcl = g["out_src_local"]
     dst = g["out_dst_global"]
-    valid = dst < n
-    active = frontier_local[srcl] & valid
-    cand = jnp.zeros((n + 1,), jnp.uint8).at[
-        jnp.where(active, dst, n)].max(jnp.uint8(1))[:n]
-    cand_packed = _pack_bits(cand.astype(bool))    # (n/32,)
-    rows = jax.lax.all_to_all(
-        cand_packed.reshape(parts, 1, n_local // 32), AXIS,
-        split_axis=0, concat_axis=1)               # (1, P, n_local/32)
-    acc = jax.lax.reduce(rows[0], jnp.uint32(0), jax.lax.bitwise_or, (0,))
+    active = frontier_local[srcl] & (dst < n)
+    cand = localops.scatter_combine(g, ell_dst, active, "or",
+                                    identity=False)        # (n,) bool
     # activation bits for my slice; derive parents by pulling in-edges
     unvisited = parents == INT_INF
-    word = acc[jnp.arange(n_local) >> 5]
-    activated = ((word >> (jnp.arange(n_local) & 31).astype(jnp.uint32))
-                 & 1).astype(bool) & unvisited
+    activated = exchange_or(cand) & unvisited
     # parent = min in-frontier in-neighbor of activated vertices
-    _, prop = _derive_parents(g, gf_packed, activated, n)
+    _, prop = _derive_parents(g, ell_in, gf_packed, activated)
     new_mask = activated & (prop < INT_INF)
     parents = jnp.where(new_mask, prop, parents)
-    nf_packed_local = _pack_bits(new_mask)
+    nf_packed_local = pack_bits(new_mask)
     gf_next = broadcast_global(nf_packed_local)
     count = psum_scalar(new_mask.sum(dtype=jnp.int32))
     return parents, new_mask, gf_next, count
@@ -146,21 +124,23 @@ def _seed_state(root, n_local):
     return parents0, at_root
 
 
-def bfs_bsp_program(n: int, n_local: int,
-                    max_levels: int = 64) -> SuperstepProgram:
+def bfs_bsp_program(shards, max_levels: int = 64) -> SuperstepProgram:
     """Level-synchronous BSP BFS (the rigid-barrier BGL analogue).
 
     Levels past convergence are natural no-ops (an empty frontier
     proposes nothing), so the program is safe under the driver's
     fixed-trip ``static_iters`` scan.
     """
+    n, n_local = shards.n, shards.n_local
+    ell_dst = shards.ell("ell_dst")
+
     def init(g, root):
         parents0, frontier0 = _seed_state(root, n_local)
         return parents0, frontier0, jnp.int32(1)
 
     def step(g, state):
         parents, frontier, _ = state
-        return _bsp_level(g, n, n_local, parents, frontier)
+        return _bsp_level(g, ell_dst, n, n_local, parents, frontier)
 
     return SuperstepProgram(
         name="bfs", variant="bsp", inputs=("root",),
@@ -171,26 +151,29 @@ def bfs_bsp_program(n: int, n_local: int,
         max_rounds=max_levels)
 
 
-def bfs_fast_program(n: int, n_local: int, max_levels: int = 64,
+def bfs_fast_program(shards, max_levels: int = 64,
                      pull_threshold: float = 0.02) -> SuperstepProgram:
     """Direction-optimizing BFS with bit-packed frontier exchange."""
+    n, n_local = shards.n, shards.n_local
+    ell_in = shards.ell("ell_in")
+    ell_dst = shards.ell("ell_dst")
     thresh = jnp.int32(max(1, int(n * pull_threshold)))
 
     def init(g, root):
         parents0, frontier0 = _seed_state(root, n_local)
-        gf0 = broadcast_global(_pack_bits(frontier0))
+        gf0 = broadcast_global(pack_bits(frontier0))
         return parents0, frontier0, gf0, jnp.int32(1)
 
     def step(g, state):
         parents, frontier, gf, count = state
 
         def push(_):
-            p, f, g2, c = _fast_level_push(g, n, n_local, parents,
-                                           frontier, gf)
+            p, f, g2, c = _fast_level_push(g, ell_in, ell_dst, n,
+                                           parents, frontier, gf)
             return p, f, g2, c
 
         def pull(_):
-            p, g2, c = _fast_level(g, n, n_local, parents, gf)
+            p, g2, c = _fast_level(g, ell_in, parents, gf)
             # recover local frontier from my slice of the packed bitmap
             lo_w = jax.lax.axis_index(AXIS) * (n_local // 32)
             words = jax.lax.dynamic_slice_in_dim(g2, lo_w, n_local // 32)

@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import localops
 from repro.core.compat import axis_size
 from repro.core.partitioned import AXIS, psum_scalar
 from repro.core.superstep import SuperstepProgram
@@ -20,8 +21,11 @@ from repro.core.superstep import SuperstepProgram
 INT_INF = jnp.int32(2 ** 30)
 
 
-def cc_program(n: int, n_local: int, max_rounds: int = 64) -> SuperstepProgram:
+def cc_program(shards, max_rounds: int = 64) -> SuperstepProgram:
     """Label propagation over both edge directions as a superstep program."""
+    n, n_local = shards.n, shards.n_local
+    ell_dst = shards.ell("ell_dst")
+    ell_src = shards.ell("ell_src")
 
     def init(g, *_):
         lo = jax.lax.axis_index(AXIS) * n_local
@@ -37,19 +41,20 @@ def cc_program(n: int, n_local: int, max_rounds: int = 64) -> SuperstepProgram:
         in_src = g["in_src_global"]
         in_dstl = g["in_dst_local"]
         in_valid = in_src < n
-        # propose my label to out-neighbors (push direction)
-        prop = jnp.full((n + 1,), INT_INF, jnp.int32).at[
-            jnp.where(valid, dst, n)].min(
-            jnp.where(valid, labels[srcl], INT_INF))[:n]
+        # propose my label to out-neighbors (push direction); the local
+        # MIN-combine is a blocked-ELL gather+reduce (localops)
+        prop = localops.scatter_combine(
+            g, ell_dst, jnp.where(valid, labels[srcl], INT_INF), "min",
+            identity=INT_INF)
         rows = jax.lax.all_to_all(prop.reshape(parts, 1, n_local), AXIS,
                                   split_axis=0, concat_axis=1)
         mine = rows.min(axis=(0, 1))
         new_labels = jnp.minimum(labels, mine)
         # pull direction: adopt min label of in-neighbors (needs their
         # labels -> ship proposals keyed by in-edge source owner)
-        prop2 = jnp.full((n + 1,), INT_INF, jnp.int32).at[
-            jnp.where(in_valid, in_src, n)].min(
-            jnp.where(in_valid, new_labels[in_dstl], INT_INF))[:n]
+        prop2 = localops.scatter_combine(
+            g, ell_src, jnp.where(in_valid, new_labels[in_dstl], INT_INF),
+            "min", identity=INT_INF)
         rows2 = jax.lax.all_to_all(prop2.reshape(parts, 1, n_local), AXIS,
                                    split_axis=0, concat_axis=1)
         mine2 = rows2.min(axis=(0, 1))

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import graph_workloads
-from repro.core import registry
+from repro.core import localops, registry
 from repro.core.api import GraphEngine
 from repro.core.graph import abstract_graph
 from repro.core.registry import program_label
@@ -128,6 +128,15 @@ def lower_graph_programs(graph_name: str, mesh_name: str, out_dir=None,
             "temp_bytes_per_device": mem.temp_size_in_bytes,
             "status": "ok",
             "n_vertices": g.n, "e_max_per_part": g.e_max,
+            # the blocked-ELL layout is lowered and priced too: slot
+            # counts per structure so layout growth shows up in review
+            "layout": eng.layout,
+            "ell_slots_per_part": {name: m.slots
+                                   for name, m in g.ell_meta.items()},
+            # the RESOLVED implementation that was lowered (ref|ell|
+            # pallas), not the raw mode: "auto" lowers different code on
+            # CPU hosts vs TPU hosts
+            "localops_impl": localops.resolve(),
         })
         hbm = (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 1e9
         print(f"[graph {label} x {graph_name} x {mesh_name}] "

@@ -16,17 +16,185 @@ Padding uses sentinel vertex n (scatters with mode='drop' fall off the
 end); every partition is padded to the max per-partition edge count so a
 single SPMD program covers all partitions - the static-shape analogue of
 HPX's dynamic per-locality segments.
+
+Blocked-ELL edge layout (the local work-bundle layout)
+------------------------------------------------------
+The COO shards above are the exchange-facing layout; the per-superstep
+LOCAL hot loops (PageRank contribution accumulation, BFS pull, MIN/OR
+edge combines) additionally get a **blocked-ELL** view, built once here
+and consumed through ``core/localops.py``:
+
+  * rows are sorted by degree (per partition) and grouped into blocks of
+    :data:`ELL_BLOCK` rows; each block stores a FIXED number of slots
+    (the block's max degree, rounded up to :data:`ELL_LANE`), so a block
+    is a dense ``(rows, K)`` tile - VPU/Pallas friendly, no serialized
+    scatters;
+  * consecutive blocks with equal K merge into *buckets*
+    (``EllMeta.buckets``), so the traced program is a handful of dense
+    gather+reduce ops instead of one per block;
+  * unused slots carry a sentinel (``EllMeta.sentinel``); a permutation
+    pair (``<name>_perm``: ELL row -> original row, ``<name>_inv``:
+    original row -> ELL row) maps results back to vertex order with a
+    GATHER, never a scatter.
+
+Four instances are built (``GraphShards.ell_meta``):
+
+  ``ell_in``   rows = local vertices, slots = global in-neighbor ids
+               (pull: PageRank SpMV, BFS frontier test); sentinel n.
+  ``ell_out``  rows = local vertices, slots = out-edge POSITIONS into
+               the (E,) out-shard arrays (per-source combine); sentinel E.
+  ``ell_dst``  rows = ALL n global vertices, slots = out-edge positions
+               grouped by destination (push-combine into a length-n
+               accumulator without scatters); sentinel E.
+  ``ell_src``  rows = ALL n global vertices, slots = in-edge positions
+               grouped by source (reverse-direction combine); sentinel E.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+ELL_BLOCK = 128   # rows per ELL block (n and n_local are multiples of 128)
+ELL_LANE = 8      # block widths round up to this many slots
+
+
+@dataclass(frozen=True)
+class EllMeta:
+    """Static (host-side) description of one blocked-ELL structure.
+
+    ``buckets`` is a tuple of ``(rows, width)`` runs in ELL row order
+    (rows are multiples of :data:`ELL_BLOCK`, widths non-increasing,
+    possibly ending in a ``(rows, 0)`` run for edgeless rows); ``slots``
+    is the flat slot count ``sum(rows * width)``.  ``device_suffixes``
+    names which per-partition arrays ship to the device
+    (``f"{name}_{suffix}"`` keys in the graph dict).
+    """
+
+    name: str
+    n_rows: int
+    buckets: tuple[tuple[int, int], ...]
+    slots: int
+    sentinel: int
+    device_suffixes: tuple[str, ...] = ("idx", "inv")
+
+
+def _round_lane(w: np.ndarray) -> np.ndarray:
+    """Round widths up to ELL_LANE multiples (0 stays 0)."""
+    return ((w + ELL_LANE - 1) // ELL_LANE) * ELL_LANE
+
+
+def _run_length(widths: np.ndarray) -> tuple[tuple[int, int], ...]:
+    """Merge consecutive equal-width blocks into (rows, width) buckets."""
+    buckets = []
+    for w in widths:
+        if buckets and buckets[-1][1] == int(w):
+            buckets[-1][0] += ELL_BLOCK
+        else:
+            buckets.append([ELL_BLOCK, int(w)])
+    return tuple((r, w) for r, w in buckets)
+
+
+def _ell_row_base(buckets) -> tuple[np.ndarray, np.ndarray]:
+    """Per-ELL-row (slot offset, width) arrays from the bucket runs."""
+    n_rows = sum(r for r, _ in buckets)
+    base = np.zeros(n_rows, np.int64)
+    width = np.zeros(n_rows, np.int64)
+    off = 0
+    r0 = 0
+    for rows, k in buckets:
+        base[r0:r0 + rows] = off + np.arange(rows) * k
+        width[r0:r0 + rows] = k
+        off += rows * k
+        r0 += rows
+    return base, width
+
+
+def build_ell(name: str, row_ids: np.ndarray, values: np.ndarray,
+              n_rows: int, sentinel: int,
+              device_suffixes=("idx", "inv")) -> tuple[EllMeta, dict]:
+    """Build one blocked-ELL structure from (P, E) host arrays.
+
+    ``row_ids[p, e]`` is the row of entry e in partition p (or -1 for
+    padding/invalid entries, which are skipped); ``values[p, e]`` is
+    what the slot stores (a neighbor id or an edge position).  Returns
+    ``(meta, arrays)`` with ``arrays`` holding ``{name}_idx`` (P, slots)
+    int32, ``{name}_inv`` / ``{name}_perm`` (P, n_rows) int32.  Rows are
+    degree-sorted per partition; bucket widths are maxed across
+    partitions so ONE SPMD program covers all of them.
+    """
+    assert n_rows % ELL_BLOCK == 0, (name, n_rows)
+    parts = row_ids.shape[0]
+    n_blocks = n_rows // ELL_BLOCK
+
+    counts = np.zeros((parts, n_rows), np.int64)
+    perms = np.zeros((parts, n_rows), np.int64)
+    for p in range(parts):
+        valid = row_ids[p] >= 0
+        counts[p] = np.bincount(row_ids[p][valid].astype(np.int64),
+                                minlength=n_rows)
+        perms[p] = np.argsort(-counts[p], kind="stable")
+
+    # SPMD-uniform block widths: max over partitions, rounded to lanes.
+    widths_pp = np.take_along_axis(counts, perms, axis=1) \
+        .reshape(parts, n_blocks, ELL_BLOCK).max(axis=2)
+    widths = _round_lane(widths_pp.max(axis=0))
+    buckets = _run_length(widths)
+    row_base, row_width = _ell_row_base(buckets)
+    slots = int(sum(r * k for r, k in buckets))
+
+    idx = np.full((parts, max(slots, 1)), sentinel, np.int64)
+    inv = np.zeros((parts, n_rows), np.int64)
+    for p in range(parts):
+        inv[p, perms[p]] = np.arange(n_rows)
+        valid = row_ids[p] >= 0
+        rows_v = row_ids[p][valid].astype(np.int64)
+        vals_v = values[p][valid].astype(np.int64)
+        order = np.argsort(rows_v, kind="stable")
+        rows_s, vals_s = rows_v[order], vals_v[order]
+        first = np.concatenate([[0], np.cumsum(counts[p])[:-1]])
+        rank = np.arange(rows_s.size) - first[rows_s]
+        q = inv[p, rows_s]                       # ELL row of each entry
+        assert (rank < row_width[q]).all(), name
+        idx[p, row_base[q] + rank] = vals_s
+
+    meta = EllMeta(name=name, n_rows=n_rows, buckets=buckets, slots=slots,
+                   sentinel=sentinel,
+                   device_suffixes=tuple(device_suffixes))
+    arrays = {
+        f"{name}_idx": idx[:, :max(slots, 1)].astype(np.int32),
+        f"{name}_inv": inv.astype(np.int32),
+    }
+    if "perm" in device_suffixes:
+        # only materialized when it ships (frontier_pull's row gather);
+        # for the (P, n)-row structures an unused perm would be GBs at
+        # paper scale
+        arrays[f"{name}_perm"] = perms.astype(np.int32)
+    return meta, arrays
+
+
+def ell_entries(meta: EllMeta, idx_row: np.ndarray,
+                inv_row: np.ndarray) -> list[tuple[int, int]]:
+    """Decode ONE partition's ELL back into (row, value) pairs (host-side
+    test helper: the blocked layout must round-trip the edge multiset)."""
+    perm = np.empty(meta.n_rows, np.int64)
+    perm[inv_row] = np.arange(meta.n_rows)
+    pairs = []
+    off = 0
+    r0 = 0
+    for rows, k in meta.buckets:
+        if k:
+            blk = idx_row[off:off + rows * k].reshape(rows, k)
+            ell_rows, slots_k = np.nonzero(blk != meta.sentinel)
+            for er, sk in zip(ell_rows, slots_k):
+                pairs.append((int(perm[r0 + er]), int(blk[er, sk])))
+        off += rows * k
+        r0 += rows
+    return pairs
 
 
 @dataclass
@@ -43,10 +211,34 @@ class GraphShards:
     in_dst_local: np.ndarray    # (P, E) int32
     out_degree: np.ndarray      # (P, n_local) int32
     in_degree: np.ndarray       # (P, n_local) int32
+    # blocked-ELL view (see module docstring); built by partition_graph,
+    # shape-only under abstract_graph
+    ell_meta: dict = field(default_factory=dict)     # name -> EllMeta
+    ell_arrays: dict = field(default_factory=dict)   # key -> np.ndarray
 
-    def device_arrays(self):
-        """jnp views (host->device)."""
-        return {
+    def ell(self, name: str) -> EllMeta:
+        """Meta handle for program factories.  When the blocked-ELL
+        layout was not built (``build_ell_layout=False``), returns a
+        zero-slot placeholder carrying the row count and sentinel the
+        REF path needs — no ELL arrays ship, so every localops call
+        traces the COO scatter idiom, as documented."""
+        meta = self.ell_meta.get(name)
+        if meta is not None:
+            return meta
+        n_rows = self.n_local if name in ("ell_in", "ell_out") else self.n
+        sentinel = self.n if name == "ell_in" else self.e_max
+        return EllMeta(name=name, n_rows=n_rows, buckets=((n_rows, 0),),
+                       slots=0, sentinel=sentinel, device_suffixes=())
+
+    def _ell_device_keys(self):
+        for meta in self.ell_meta.values():
+            for suf in meta.device_suffixes:
+                yield f"{meta.name}_{suf}", meta, suf
+
+    def device_arrays(self, layout: str = "ell"):
+        """jnp views (host->device).  ``layout="coo"`` omits the ELL
+        arrays: programs then trace the reference scatter path."""
+        arrs = {
             "out_src_local": jnp.asarray(self.out_src_local),
             "out_dst_global": jnp.asarray(self.out_dst_global),
             "in_src_global": jnp.asarray(self.in_src_global),
@@ -54,12 +246,16 @@ class GraphShards:
             "out_degree": jnp.asarray(self.out_degree),
             "in_degree": jnp.asarray(self.in_degree),
         }
+        if layout == "ell":
+            for key, _, _ in self._ell_device_keys():
+                arrs[key] = jnp.asarray(self.ell_arrays[key])
+        return arrs
 
-    def abstract_arrays(self):
+    def abstract_arrays(self, layout: str = "ell"):
         """ShapeDtypeStructs for AOT lowering (dry-run: no allocation)."""
         P, E, NL = self.parts, self.e_max, self.n_local
         i32 = jnp.int32
-        return {
+        arrs = {
             "out_src_local": jax.ShapeDtypeStruct((P, E), i32),
             "out_dst_global": jax.ShapeDtypeStruct((P, E), i32),
             "in_src_global": jax.ShapeDtypeStruct((P, E), i32),
@@ -67,6 +263,12 @@ class GraphShards:
             "out_degree": jax.ShapeDtypeStruct((P, NL), i32),
             "in_degree": jax.ShapeDtypeStruct((P, NL), i32),
         }
+        if layout == "ell":
+            for key, meta, suf in self._ell_device_keys():
+                shape = (P, max(meta.slots, 1)) if suf == "idx" \
+                    else (P, meta.n_rows)
+                arrs[key] = jax.ShapeDtypeStruct(shape, i32)
+        return arrs
 
 
 def _group_edges(key: np.ndarray, other: np.ndarray, parts: int,
@@ -88,11 +290,45 @@ def _group_edges(key: np.ndarray, other: np.ndarray, parts: int,
     return k_out, o_out, counts
 
 
-def partition_graph(edges: np.ndarray, n_orig: int, parts: int) -> GraphShards:
+def _build_graph_ells(g: "GraphShards") -> None:
+    """Attach the four blocked-ELL structures to freshly built shards."""
+    n, n_local, e_max = g.n, g.n_local, g.e_max
+    pos = np.broadcast_to(np.arange(e_max, dtype=np.int64),
+                          (g.parts, e_max))
+    out_valid = g.out_dst_global < n
+    in_valid = g.in_src_global < n
+
+    specs = [
+        # (name, row_ids, values, n_rows, sentinel, suffixes)
+        ("ell_in",
+         np.where(in_valid, g.in_dst_local, -1), g.in_src_global,
+         n_local, n, ("idx", "inv", "perm")),
+        ("ell_out",
+         np.where(out_valid, g.out_src_local, -1), pos,
+         n_local, e_max, ("idx", "inv")),
+        ("ell_dst",
+         np.where(out_valid, g.out_dst_global, -1), pos,
+         n, e_max, ("idx", "inv")),
+        ("ell_src",
+         np.where(in_valid, g.in_src_global, -1), pos,
+         n, e_max, ("idx", "inv")),
+    ]
+    for name, rows, vals, n_rows, sentinel, sufs in specs:
+        meta, arrays = build_ell(name, rows, vals, n_rows, sentinel,
+                                 device_suffixes=sufs)
+        g.ell_meta[name] = meta
+        g.ell_arrays.update(arrays)
+
+
+def partition_graph(edges: np.ndarray, n_orig: int, parts: int,
+                    build_ell_layout: bool = True) -> GraphShards:
     """Build GraphShards from an (E, 2) edge list.
 
     n is padded so n_local is a multiple of 128 (bit-packing needs 32;
-    128 keeps TPU lanes aligned).  Padded vertices have no edges.
+    128 keeps TPU lanes aligned).  Padded vertices have no edges.  The
+    blocked-ELL view is built alongside the COO shards unless
+    ``build_ell_layout=False`` (then every program traces the COO
+    scatter reference path).
     """
     block = parts * 128
     n = ((n_orig + block - 1) // block) * block
@@ -115,7 +351,7 @@ def partition_graph(edges: np.ndarray, n_orig: int, parts: int) -> GraphShards:
     in_dst_local, in_src_global, _ = _group_edges(
         dst, src, parts, n_local, e_max, n, key_local=True)
 
-    return GraphShards(
+    g = GraphShards(
         n=n, n_orig=n_orig, parts=parts, n_local=n_local, e_max=e_max,
         out_src_local=out_src_local.astype(np.int32),
         out_dst_global=out_dst_global.astype(np.int32),
@@ -124,13 +360,34 @@ def partition_graph(edges: np.ndarray, n_orig: int, parts: int) -> GraphShards:
         out_degree=out_deg.reshape(parts, n_local),
         in_degree=in_deg.reshape(parts, n_local),
     )
+    if build_ell_layout:
+        _build_graph_ells(g)
+    return g
+
+
+def _abstract_ell(name: str, n_rows: int, k: int, nz_rows: int,
+                  sentinel: int, suffixes=("idx", "inv")) -> EllMeta:
+    """Shape-only EllMeta modelling a degree-bucketed layout: ``nz_rows``
+    rows of width ``k`` plus an edgeless tail (the dominant shape of a
+    near-uniform degree distribution after bucketing)."""
+    nz = min(n_rows, ((nz_rows + ELL_BLOCK - 1) // ELL_BLOCK) * ELL_BLOCK)
+    k = int(_round_lane(np.asarray(max(k, 1))))
+    buckets = [(nz, k)]
+    if n_rows > nz:
+        buckets.append((n_rows - nz, 0))
+    return EllMeta(name=name, n_rows=n_rows, buckets=tuple(buckets),
+                   slots=nz * k, sentinel=sentinel,
+                   device_suffixes=tuple(suffixes))
 
 
 def abstract_graph(n_orig: int, avg_degree: int, parts: int) -> GraphShards:
     """Shape-only GraphShards for the dry-run (no edges materialized).
 
     e_max models the expected max partition load of an ER graph (~uniform,
-    +12% headroom), rounded to 128.
+    +12% headroom), rounded to 128.  The ELL metas model the bucketed
+    layout of the same ER graph: local rows carry ~1.5x the mean degree
+    after block-max padding; the global-row structures (ell_dst/ell_src)
+    have ~min(E/P, n) populated rows of near-minimal width.
     """
     block = parts * 128
     n = ((n_orig + block - 1) // block) * block
@@ -139,7 +396,19 @@ def abstract_graph(n_orig: int, avg_degree: int, parts: int) -> GraphShards:
     e_max = int(e_total / parts * 1.12)
     e_max = ((e_max + 127) // 128) * 128
     z = np.zeros((1,), np.int32)  # placeholders; only shapes are used
-    return GraphShards(
+    g = GraphShards(
         n=n, n_orig=n_orig, parts=parts, n_local=n_local, e_max=e_max,
         out_src_local=z, out_dst_global=z, in_src_global=z, in_dst_local=z,
         out_degree=z, in_degree=z)
+    k_local = int(avg_degree * 1.5)
+    k_global = max(ELL_LANE, int(avg_degree / parts * 2))
+    nz_global = min(n, e_max)
+    for meta in (
+        _abstract_ell("ell_in", n_local, k_local, n_local, n,
+                      suffixes=("idx", "inv", "perm")),
+        _abstract_ell("ell_out", n_local, k_local, n_local, e_max),
+        _abstract_ell("ell_dst", n, k_global, nz_global, e_max),
+        _abstract_ell("ell_src", n, k_global, nz_global, e_max),
+    ):
+        g.ell_meta[meta.name] = meta
+    return g

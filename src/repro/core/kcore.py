@@ -27,6 +27,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import localops
 from repro.core.partitioned import AXIS, exchange_sum, psum_scalar
 from repro.core.superstep import SuperstepProgram
 
@@ -41,13 +42,15 @@ def _undirected_degree(g, n, n_local):
     return g["out_degree"] + g["in_degree"] - 2 * loops
 
 
-def kcore_program(n: int, n_local: int,
-                  max_rounds: int = 512) -> SuperstepProgram:
+def kcore_program(shards, max_rounds: int = 512) -> SuperstepProgram:
     """Iterative peeling as a superstep program.
 
     Outputs: per-vertex core numbers (vertex field) and the degeneracy
     (max core number, replicated scalar).
     """
+    n, n_local = shards.n, shards.n_local
+    ell_dst = shards.ell("ell_dst")
+    ell_src = shards.ell("ell_src")
 
     def prepare(g):
         g = dict(g)
@@ -67,15 +70,19 @@ def kcore_program(n: int, n_local: int,
         core = jnp.where(kills, k, core)
         alive = alive & ~kills
         # aggregate degree decrements: each removed edge notifies its
-        # surviving endpoint (dead receivers are harmless)
+        # surviving endpoint (dead receivers are harmless); both
+        # per-direction combines are blocked-ELL gather+sums (localops)
         srcl, dst = g["out_src_local"], g["out_dst_global"]
         dec_out = kills[srcl] & (dst < n) & (dst != srcl + lo)
         src, dstl = g["in_src_global"], g["in_dst_local"]
         dec_in = kills[dstl] & (src < n) & (src != dstl + lo)
-        acc = jnp.zeros((n + 1,), jnp.int32)
-        acc = acc.at[jnp.where(dec_out, dst, n)].add(dec_out.astype(jnp.int32))
-        acc = acc.at[jnp.where(dec_in, src, n)].add(dec_in.astype(jnp.int32))
-        deg = deg - exchange_sum(acc[:n])
+        acc = localops.scatter_combine(
+            g, ell_dst, dec_out.astype(jnp.int32), "add",
+            identity=jnp.int32(0))
+        acc = acc + localops.scatter_combine(
+            g, ell_src, dec_in.astype(jnp.int32), "add",
+            identity=jnp.int32(0))
+        deg = deg - exchange_sum(acc)
         # no kills at this threshold -> the (k+1)-core remains: advance k
         k = jnp.where(n_killed > 0, k, k + 1)
         n_alive = psum_scalar(alive.sum(dtype=jnp.int32))

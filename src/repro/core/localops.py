@@ -1,0 +1,271 @@
+"""Local-ops dispatch: backend-tuned kernels for the superstep work bundle.
+
+"The Anatomy of Large-Scale Distributed Graph Algorithms" separates a
+distributed graph algorithm's per-superstep *work bundle* from its
+exchange machinery; ``core/partitioned.py`` owns the exchanges, and this
+module owns the work bundle.  Every program hot loop routes through one
+of three primitives:
+
+  ``spmv_pull(g, ell, x)``
+      y[v] = sum over in-neighbors u of v of x[u]  (PageRank pull).
+  ``frontier_pull(g, ell, bits, unvisited)``
+      min-id in-neighbor of v present in the packed frontier bitmap, or
+      INT_INF (owner-side BFS parent derivation).
+  ``scatter_combine(g, ell, vals, op, identity=...)``
+      combine per-edge values into a per-row accumulator with
+      op in {add, min, max, or} - the generalized push combine.
+
+Each primitive has THREE implementations, selected at trace time:
+
+  * ``ref``     the COO scatter idiom the programs used to inline
+                (``.at[...].add/min/max`` over the padded (P, E) edge
+                list).  Lowers to serialized scatters on CPU - kept as
+                the debugging baseline and the ``--layout coo`` path.
+  * ``ell``     dense per-bucket gather + row reduction over the
+                blocked-ELL layout (``core/graph.py``): fully vectorized
+                on every backend, no scatters anywhere (results return
+                to row order through the inverse-permutation GATHER).
+  * ``pallas``  the TPU kernels in ``repro/kernels/{spmv,frontier}``,
+                applied per ELL bucket (f32 additive combines route
+                through the SpMV kernel; frontier tests through the BFS
+                pull kernel; non-kernelizable ops stay on the ell path).
+
+Mode resolution: the ``REPRO_LOCALOPS`` env var (or :func:`set_mode`)
+picks ``auto`` (default: pallas on TPU, ell elsewhere), ``ref``, or
+``kernel`` (force the Pallas kernels, interpreted off-TPU).  When the
+graph dict carries no ELL arrays (``--layout coo``), every call falls
+back to ``ref`` regardless of mode.
+
+All functions are pure per-partition compute (no collectives), callable
+inside or outside ``shard_map``, and vmap cleanly for batched
+multi-source programs.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import EllMeta
+from repro.core.partitioned import test_bit
+
+INT_INF = jnp.int32(2 ** 30)
+
+MODES = ("auto", "ref", "kernel")
+_MODE_OVERRIDE: str | None = None
+
+# ref-path metadata: which COO key array feeds each ELL structure, and
+# whether that key can carry the sentinel (needs a +1 drop slot)
+_COO_KEY = {
+    "ell_out": ("out_src_local", False),
+    "ell_dst": ("out_dst_global", True),
+    "ell_src": ("in_src_global", True),
+}
+
+
+def set_mode(mode: str | None) -> None:
+    """Process-wide override of the REPRO_LOCALOPS env var (None clears).
+
+    NOTE: the mode is read at TRACE time; ``GraphEngine.program`` keys
+    its compile cache on the active mode so switching re-traces.
+    """
+    global _MODE_OVERRIDE
+    if mode is not None and mode not in MODES:
+        raise ValueError(f"localops mode {mode!r} not in {MODES}")
+    _MODE_OVERRIDE = mode
+
+
+def get_mode() -> str:
+    """The active dispatch mode: override > $REPRO_LOCALOPS > auto."""
+    mode = _MODE_OVERRIDE or os.environ.get("REPRO_LOCALOPS", "auto")
+    if mode not in MODES:
+        raise ValueError(
+            f"REPRO_LOCALOPS={mode!r} invalid; expected one of {MODES}")
+    return mode
+
+
+def resolve(mode: str | None = None, backend: str | None = None) -> str:
+    """Concrete implementation a call would take: ref | ell | pallas."""
+    mode = mode or get_mode()
+    backend = backend or jax.default_backend()
+    if mode == "ref":
+        return "ref"
+    if mode == "kernel" or backend == "tpu":
+        return "pallas"
+    return "ell"
+
+
+def _use_pallas(mode: str) -> bool:
+    return resolve(mode) == "pallas"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _has_ell(g: dict, ell: EllMeta) -> bool:
+    return f"{ell.name}_idx" in g
+
+
+def _buckets(ell: EllMeta, flat):
+    """Yield (row0, rows, width, (rows, width) idx block) per bucket."""
+    off = 0
+    r0 = 0
+    for rows, k in ell.buckets:
+        blk = flat[..., off:off + rows * k].reshape(
+            flat.shape[:-1] + (rows, k)) if k else None
+        yield r0, rows, k, blk
+        off += rows * k
+        r0 += rows
+
+
+# ---------------------------------------------------------------------------
+# spmv_pull
+# ---------------------------------------------------------------------------
+
+def spmv_pull(g: dict, ell: EllMeta, x, *, mode: str | None = None):
+    """y[row] = sum of x[neighbor] over the row's ELL slots, f32.
+
+    ``ell`` must be a neighbor-id structure (``ell_in``): slots hold
+    GLOBAL vertex ids, sentinel contributes 0.  The ref path is the COO
+    gather + scatter-add over the in-shard.
+    """
+    mode = mode or get_mode()
+    x = x.astype(jnp.float32)
+    if mode == "ref" or not _has_ell(g, ell):
+        src = g["in_src_global"]
+        dstl = g["in_dst_local"]
+        valid = src < ell.sentinel
+        gathered = jnp.where(valid, x[jnp.where(valid, src, 0)], 0.0)
+        return jnp.zeros((ell.n_rows,), jnp.float32).at[dstl].add(
+            gathered, mode="drop")
+
+    idx = g[f"{ell.name}_idx"]
+    inv = g[f"{ell.name}_inv"]
+    xk = jnp.concatenate([x, jnp.zeros((1,), jnp.float32)])  # sentinel slot
+    use_pallas = _use_pallas(mode)
+    outs = []
+    for _, rows, k, blk in _buckets(ell, idx):
+        if k == 0:
+            outs.append(jnp.zeros((rows,), jnp.float32))
+            continue
+        vmask = blk != ell.sentinel
+        if use_pallas:
+            from repro.kernels.spmv.kernel import spmv_ell
+            outs.append(spmv_ell(blk, vmask.astype(jnp.float32), xk,
+                                 row_block=128, interpret=_interpret()))
+        else:
+            outs.append(jnp.where(vmask, xk[blk], 0.0).sum(axis=1))
+    return jnp.concatenate(outs)[inv]
+
+
+# ---------------------------------------------------------------------------
+# frontier_pull
+# ---------------------------------------------------------------------------
+
+def frontier_pull(g: dict, ell: EllMeta, bits, unvisited, *,
+                  mode: str | None = None):
+    """Min-id in-neighbor of each row present in the packed frontier.
+
+    ``bits`` is the (n/32,) uint32 global frontier bitmap; ``unvisited``
+    a (n_rows,) bool mask.  Returns (n_rows,) int32, INT_INF where the
+    row is visited or has no in-frontier neighbor.  ``ell`` must be the
+    neighbor-id structure (``ell_in``).
+    """
+    mode = mode or get_mode()
+    n = ell.sentinel
+    if mode == "ref" or not _has_ell(g, ell):
+        src = g["in_src_global"]
+        dstl = g["in_dst_local"]
+        valid = src < n
+        hit = test_bit(bits, jnp.where(valid, src, 0)) == 1
+        hit = hit & valid & unvisited[dstl]
+        return jnp.full((ell.n_rows,), INT_INF, jnp.int32).at[
+            jnp.where(hit, dstl, ell.n_rows - 1)].min(
+            jnp.where(hit, src, INT_INF), mode="drop")
+
+    idx = g[f"{ell.name}_idx"]
+    inv = g[f"{ell.name}_inv"]
+    perm = g[f"{ell.name}_perm"]
+    unv_ell = unvisited[perm]
+    # sentinel n indexes one word past the bitmap: append a zero guard
+    bits_g = jnp.concatenate([bits, jnp.zeros((1,), jnp.uint32)])
+    use_pallas = _use_pallas(mode)
+    outs = []
+    for r0, rows, k, blk in _buckets(ell, idx):
+        if k == 0:
+            outs.append(jnp.full((rows,), INT_INF, jnp.int32))
+            continue
+        unv_b = unv_ell[r0:r0 + rows]
+        if use_pallas:
+            from repro.kernels.frontier.kernel import bfs_pull
+            outs.append(bfs_pull(blk, bits_g, unv_b.astype(jnp.int32),
+                                 row_block=128, interpret=_interpret()))
+        else:
+            hit = test_bit(bits_g, blk) == 1
+            cand = jnp.where(hit, blk, INT_INF).min(axis=1)
+            outs.append(jnp.where(unv_b, cand, INT_INF))
+    return jnp.concatenate(outs)[inv]
+
+
+# ---------------------------------------------------------------------------
+# scatter_combine
+# ---------------------------------------------------------------------------
+
+_REDUCERS = {
+    "add": lambda a: a.sum(axis=1),
+    "min": lambda a: a.min(axis=1),
+    "max": lambda a: a.max(axis=1),
+    "or": lambda a: a.any(axis=1),
+}
+
+
+def scatter_combine(g: dict, ell: EllMeta, vals, op: str, *, identity,
+                    mode: str | None = None):
+    """Combine per-edge ``vals`` into a (n_rows,) accumulator with ``op``.
+
+    ``ell`` must be an edge-POSITION structure (``ell_out`` / ``ell_dst``
+    / ``ell_src``): slots index into the partition's (E,) edge arrays,
+    so ``vals`` must be aligned with that edge order and already carry
+    ``identity`` at inactive/padding edges.  Rows no edge touches come
+    back as ``identity`` — callers pass the same sentinel the old
+    scatter idiom initialized its accumulator with (0, INT_INF, ...).
+    """
+    mode = mode or get_mode()
+    if op not in _REDUCERS:
+        raise ValueError(f"scatter_combine op {op!r} not in "
+                         f"{tuple(_REDUCERS)}")
+    if mode == "ref" or not _has_ell(g, ell):
+        key_name, may_drop = _COO_KEY[ell.name]
+        key = g[key_name]
+        size = ell.n_rows + (1 if may_drop else 0)
+        if op == "or":  # bool OR as the uint8 scatter-max idiom
+            acc = jnp.zeros((size,), jnp.uint8).at[key].max(
+                vals.astype(jnp.uint8))
+            return acc[:ell.n_rows] > 0
+        acc = jnp.full((size,), identity, vals.dtype)
+        acc = getattr(acc.at[key], op)(vals)
+        return acc[:ell.n_rows]
+
+    idx = g[f"{ell.name}_idx"]
+    inv = g[f"{ell.name}_inv"]
+    # sentinel E indexes the pad slot, which carries the identity
+    vpad = jnp.concatenate(
+        [vals, jnp.full((1,), identity, vals.dtype)], axis=-1)
+    kernel_add = (op == "add" and vals.dtype == jnp.float32
+                  and _use_pallas(mode))
+    outs = []
+    for _, rows, k, blk in _buckets(ell, idx):
+        if k == 0:
+            outs.append(jnp.full((rows,), identity, vals.dtype))
+            continue
+        if kernel_add:
+            from repro.kernels.spmv.kernel import spmv_ell
+            vmask = (blk != ell.sentinel).astype(jnp.float32)
+            outs.append(spmv_ell(blk, vmask, vpad, row_block=128,
+                                 interpret=_interpret()))
+        else:
+            outs.append(_REDUCERS[op](vpad[blk]))
+    return jnp.concatenate(outs)[inv]

@@ -21,9 +21,12 @@ loop.
     exchange payload is quantized bf16 with an error-feedback residual
     (2x less wire); the error term rides the same collective schedule.
 
-The local segment-sum is the SpMV hot spot; on TPU it is served by the
-Pallas kernel in repro/kernels/spmv (ops.py falls back to the jnp path
-used here on other backends).
+The local segment-sum is the SpMV hot spot; it routes through
+``core/localops.py`` (``spmv_pull`` over the blocked-ELL in-neighbor
+lists for the pull variant, ``scatter_combine`` over ``ell_dst`` for the
+push variant): the Pallas SpMV kernel serves it on TPU, a dense
+per-bucket gather + row-sum everywhere else - the serialized COO
+scatter survives only as the ``REPRO_LOCALOPS=ref`` debug path.
 """
 
 from __future__ import annotations
@@ -31,6 +34,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import localops
 from repro.core.partitioned import AXIS, broadcast_global, exchange_sum, \
     psum_scalar
 from repro.core.superstep import SuperstepProgram
@@ -44,9 +48,11 @@ def _local_contrib(rank, out_degree):
                      0.0)
 
 
-def pagerank_bsp_program(n: int, n_local: int, n_orig: int, iters: int = 50,
+def pagerank_bsp_program(shards, iters: int = 50,
                          tol: float = 1e-6) -> SuperstepProgram:
     """BGL-style pull PageRank (ghost replication via all-gather)."""
+    n, n_local, n_orig = shards.n, shards.n_local, shards.n_orig
+    ell_in = shards.ell("ell_in")
     base = (1.0 - ALPHA) / n_orig
 
     def init(g, *_):
@@ -55,14 +61,9 @@ def pagerank_bsp_program(n: int, n_local: int, n_orig: int, iters: int = 50,
 
     def step(g, state):
         rank, _ = state
-        src = g["in_src_global"]                    # (E,) sentinel n
-        dstl = g["in_dst_local"]
-        valid = src < n
         contrib = _local_contrib(rank, g["out_degree"])
         cg = broadcast_global(contrib)              # all-gather (n,) f32
-        gathered = jnp.where(valid, cg[jnp.where(valid, src, 0)], 0.0)
-        z = jnp.zeros((n_local,), jnp.float32).at[dstl].add(
-            gathered, mode="drop")
+        z = localops.spmv_pull(g, ell_in, cg)       # local SpMV (pull)
         new_rank = base + ALPHA * z
         err = psum_scalar(jnp.abs(new_rank - rank).sum())  # extra barrier
         return new_rank, err
@@ -76,7 +77,7 @@ def pagerank_bsp_program(n: int, n_local: int, n_orig: int, iters: int = 50,
         max_rounds=iters)
 
 
-def pagerank_fast_program(n: int, n_local: int, n_orig: int, iters: int = 50,
+def pagerank_fast_program(shards, iters: int = 50,
                           tol: float = 1e-6, compress=True,
                           switch_factor: float = 1e3,
                           err_every: int = 5) -> SuperstepProgram:
@@ -97,11 +98,13 @@ def pagerank_fast_program(n: int, n_local: int, n_orig: int, iters: int = 50,
     counter rides in the program state (not the driver) because
     ``err_every`` is an algorithm policy, not loop control.
     """
+    n, n_local, n_orig = shards.n, shards.n_local, shards.n_orig
+    ell_dst = shards.ell("ell_dst")
     base = (1.0 - ALPHA) / n_orig
 
     def init(g, *_):
         rank0 = jnp.full((n_local,), 1.0 / n_orig, jnp.float32)
-        resid0 = jnp.zeros((n + 1,), jnp.float32)
+        resid0 = jnp.zeros((n,), jnp.float32)
         return rank0, resid0, jnp.float32(1.0), jnp.int32(0)
 
     def step(g, state):
@@ -110,19 +113,21 @@ def pagerank_fast_program(n: int, n_local: int, n_orig: int, iters: int = 50,
         dst = g["out_dst_global"]                   # (E,) sentinel n
         valid = dst < n
         contrib = _local_contrib(rank, g["out_degree"])
-        # local segment-sum into a length-(n+1) accumulator (SpMV push);
-        # the Pallas spmv kernel implements this contraction on TPU.
-        acc = jnp.zeros((n + 1,), jnp.float32).at[dst].add(
-            jnp.where(valid, contrib[srcl], 0.0))
+        # local segment-sum into a length-n accumulator (SpMV push);
+        # localops routes it to the Pallas spmv kernel on TPU and a
+        # dense blocked-ELL gather + row-sum elsewhere.
+        acc = localops.scatter_combine(
+            g, ell_dst, jnp.where(valid, contrib[srcl], 0.0), "add",
+            identity=jnp.float32(0.0))
 
         def compressed(_):
             # error-feedback quantization: ship bf16, keep the residual
             payload = (acc + resid).astype(jnp.bfloat16)
             new_resid = (acc + resid) - payload.astype(jnp.float32)
-            return exchange_sum(payload[:n]).astype(jnp.float32), new_resid
+            return exchange_sum(payload).astype(jnp.float32), new_resid
 
         def exact(_):
-            return exchange_sum(acc[:n] + resid[:n]), jnp.zeros_like(resid)
+            return exchange_sum(acc + resid), jnp.zeros_like(resid)
 
         if compress == "always":
             # static variant (dry-run/roofline): no precision switch

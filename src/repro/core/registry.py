@@ -139,19 +139,20 @@ def variants(algo: str) -> list[str]:
 
 # ---------------------------------------------------------------------------
 # Built-in programs.  Factories receive the GraphShards for its shape
-# metadata only — no device arrays are touched at build time.
+# and blocked-ELL metadata only — no device arrays are touched at build
+# time (the ELL device arrays arrive per-call through the graph dict).
 # ---------------------------------------------------------------------------
 
 register(ProgramSpec(
     algo="bfs", variant="bsp",
-    make=lambda g, **p: _bfs.bfs_bsp_program(g.n, g.n_local, **p),
+    make=lambda g, **p: _bfs.bfs_bsp_program(g, **p),
     inputs=("root",), defaults={"max_levels": 64},
     doc="level-synchronous push BFS; full parent-proposal exchange "
         "(the rigid-barrier Boost/PBGL baseline)"))
 
 register(ProgramSpec(
     algo="bfs", variant="fast",
-    make=lambda g, **p: _bfs.bfs_fast_program(g.n, g.n_local, **p),
+    make=lambda g, **p: _bfs.bfs_fast_program(g, **p),
     inputs=("root",),
     defaults={"max_levels": 64, "pull_threshold": 0.02},
     doc="direction-optimizing BFS with bit-packed frontier exchange "
@@ -159,16 +160,14 @@ register(ProgramSpec(
 
 register(ProgramSpec(
     algo="pagerank", variant="bsp",
-    make=lambda g, **p: _pr.pagerank_bsp_program(g.n, g.n_local, g.n_orig,
-                                                 **p),
+    make=lambda g, **p: _pr.pagerank_bsp_program(g, **p),
     inputs=(), defaults={"iters": 50, "tol": 1e-6},
     doc="pull PageRank with full contribution all-gather (ghost "
         "replication baseline)"))
 
 register(ProgramSpec(
     algo="pagerank", variant="fast",
-    make=lambda g, **p: _pr.pagerank_fast_program(g.n, g.n_local, g.n_orig,
-                                                  **p),
+    make=lambda g, **p: _pr.pagerank_fast_program(g, **p),
     inputs=(),
     defaults={"iters": 50, "tol": 1e-6, "compress": True,
               "switch_factor": 1e3, "err_every": 5},
@@ -177,14 +176,14 @@ register(ProgramSpec(
 
 register(ProgramSpec(
     algo="sssp", variant="default",
-    make=lambda g, **p: _sssp.sssp_program(g.n, g.n_local, **p),
+    make=lambda g, **p: _sssp.sssp_program(g, **p),
     inputs=("root",), defaults={"max_rounds": 64},
     doc="frontier-pruned Bellman-Ford with MIN-combine exchange"),
     default=True)
 
 register(ProgramSpec(
     algo="cc", variant="default",
-    make=lambda g, **p: _cc.cc_program(g.n, g.n_local, **p),
+    make=lambda g, **p: _cc.cc_program(g, **p),
     inputs=(), defaults={"max_rounds": 64},
     doc="label propagation over both edge directions"), default=True)
 
@@ -198,14 +197,14 @@ register(ProgramSpec(
 
 register(ProgramSpec(
     algo="kcore", variant="default",
-    make=lambda g, **p: _kcore.kcore_program(g.n, g.n_local, **p),
+    make=lambda g, **p: _kcore.kcore_program(g, **p),
     inputs=(), defaults={"max_rounds": 512},
     doc="iterative peeling (threshold form) with fused degree-decrement "
         "exchange; degeneracy rides as a scalar output"), default=True)
 
 register(ProgramSpec(
     algo="betweenness", variant="default",
-    make=lambda g, **p: _bc.betweenness_program(g.n, g.n_local, **p),
+    make=lambda g, **p: _bc.betweenness_program(g, **p),
     inputs=("root",), defaults={"max_levels": 64},
     doc="Brandes single-source dependencies: path-counting forward BFS "
         "then a dependency-accumulation backward sweep (the first "

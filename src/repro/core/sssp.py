@@ -18,6 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import localops
 from repro.core.compat import axis_size
 from repro.core.partitioned import AXIS, psum_scalar
 from repro.core.superstep import SuperstepProgram
@@ -32,9 +33,10 @@ def edge_weight(src, dst):
     return 1.0 + (h % jnp.uint32(1 << 16)).astype(jnp.float32) / float(1 << 16)
 
 
-def sssp_program(n: int, n_local: int,
-                 max_rounds: int = 64) -> SuperstepProgram:
+def sssp_program(shards, max_rounds: int = 64) -> SuperstepProgram:
     """Frontier-pruned Bellman-Ford as a superstep program."""
+    n, n_local = shards.n, shards.n_local
+    ell_dst = shards.ell("ell_dst")
 
     def prepare(g):
         lo = jax.lax.axis_index(AXIS) * n_local
@@ -58,9 +60,11 @@ def sssp_program(n: int, n_local: int,
         valid = dst < n
         w = g["out_weight"]
         active = changed[srcl] & valid
-        cand = jnp.where(active, dist[srcl] + w, F32_INF)
-        prop = jnp.full((n + 1,), F32_INF, jnp.float32).at[
-            jnp.where(active, dst, n)].min(cand)[:n]
+        # edge relaxation = MIN-combine of candidates keyed by dst; the
+        # blocked-ELL gather in localops replaces the serialized scatter
+        prop = localops.scatter_combine(
+            g, ell_dst, jnp.where(active, dist[srcl] + w, F32_INF), "min",
+            identity=F32_INF)
         rows = jax.lax.all_to_all(prop.reshape(parts, 1, n_local), AXIS,
                                   split_axis=0, concat_axis=1)
         mine = rows.min(axis=(0, 1))

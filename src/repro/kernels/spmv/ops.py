@@ -1,4 +1,9 @@
-"""Dispatch wrapper: Pallas kernel on TPU, jnp oracle elsewhere."""
+"""Dispatch wrapper: Pallas kernel on TPU, jnp oracle elsewhere.
+
+Standalone/benchmark entry point.  The PRODUCTION dispatch for the
+superstep programs is ``core/localops.py`` (``spmv_pull`` /
+``scatter_combine``), which drives this kernel per blocked-ELL bucket
+and adds the COO-scatter reference path + REPRO_LOCALOPS override."""
 
 import jax
 

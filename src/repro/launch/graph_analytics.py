@@ -8,7 +8,9 @@ Programs whose ``n_budget`` the graph exceeds (the O(n^2/P)
 triangle-counting bitmap) are skipped with a note.  ``--multi-source B``
 additionally runs the batched multi-source traversal programs (B roots
 per launch) and reports per-query amortized time — the
-serve-many-queries scenario.
+serve-many-queries scenario.  ``--layout coo`` is the escape hatch back
+to the COO scatter reference path (the default ``ell`` routes every
+hot loop through the blocked-ELL local ops in ``core/localops.py``).
 
   PYTHONPATH=src python -m repro.launch.graph_analytics --graph urand18
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -42,16 +44,20 @@ def _timed(fn, args):
 
 
 def run(graph_name: str, parts: int, *, pr_iters: int = 50,
-        verify: bool = True, seed: int = 42, multi_source: int = 0):
+        verify: bool = True, seed: int = 42, multi_source: int = 0,
+        layout: str = "ell"):
+    from repro.core import localops
     gcfg = graph_workloads.ALL[graph_name]
     print(f"[graph] generating {graph_name}: 2^{gcfg.scale} vertices, "
           f"{gcfg.num_edges:,} edges ({gcfg.generator})")
     edges = generate_edges(gcfg, seed)
     t0 = time.time()
     g = partition_graph(edges, gcfg.num_vertices, parts)
+    ell_slots = sum(m.slots for m in g.ell_meta.values())
     print(f"[graph] partitioned over {parts} parts in {time.time()-t0:.1f}s "
-          f"(n_local={g.n_local:,}, e_max={g.e_max:,})")
-    eng = GraphEngine(g, make_graph_mesh(parts))
+          f"(n_local={g.n_local:,}, e_max={g.e_max:,}; layout={layout} "
+          f"ell_slots/part={ell_slots:,} localops={localops.get_mode()})")
+    eng = GraphEngine(g, make_graph_mesh(parts), layout=layout)
     garr = eng.device_graph()
     root = jnp.int32(0)
     results = {}
@@ -123,10 +129,17 @@ def main():
     ap.add_argument("--multi-source", type=int, default=0,
                     help="also run batched multi-source traversals "
                          "with this many roots")
+    ap.add_argument("--layout", choices=("ell", "coo"), default="ell",
+                    help="edge layout for the superstep hot loops: "
+                         "blocked-ELL (backend-tuned local ops) or the "
+                         "COO scatter reference path (escape hatch); "
+                         "REPRO_LOCALOPS={auto,ref,kernel} further "
+                         "overrides the localops dispatch")
     ap.add_argument("--no-verify", action="store_true")
     args = ap.parse_args()
     run(args.graph, args.parts, pr_iters=args.pr_iters,
-        verify=not args.no_verify, multi_source=args.multi_source)
+        verify=not args.no_verify, multi_source=args.multi_source,
+        layout=args.layout)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,9 @@
-"""BFS frontier Pallas kernel: sweep vs oracle (interpret mode)."""
+"""BFS frontier Pallas kernel: sweep vs oracle (interpret mode).
+
+tier1: the localops dispatch layer (core/localops.py) routes the BFS
+pull hot loop through this kernel on TPU, so its interpret-mode parity
+belongs in the conformance lane of ``scripts/ci.sh --markers``, never
+the slow tier."""
 
 import jax
 import jax.numpy as jnp
@@ -7,6 +12,8 @@ import pytest
 
 from repro.kernels.frontier.kernel import INT_INF, bfs_pull
 from repro.kernels.frontier.ref import bfs_pull_ref
+
+pytestmark = pytest.mark.tier1
 
 
 def _inputs(n_rows, k, n_cols, seed=0):

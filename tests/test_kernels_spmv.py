@@ -1,4 +1,9 @@
-"""SpMV Pallas kernel: shape/dtype sweep vs pure-jnp oracle (interpret)."""
+"""SpMV Pallas kernel: shape/dtype sweep vs pure-jnp oracle (interpret).
+
+tier1: the localops dispatch layer (core/localops.py) routes the
+PageRank/additive-combine hot loops through this kernel on TPU, so its
+interpret-mode parity belongs in the conformance lane of
+``scripts/ci.sh --markers``, never the slow tier."""
 
 import jax
 import jax.numpy as jnp
@@ -7,6 +12,8 @@ import pytest
 
 from repro.kernels.spmv.kernel import spmv_ell
 from repro.kernels.spmv.ref import spmv_ell_ref
+
+pytestmark = pytest.mark.tier1
 
 
 @pytest.mark.parametrize("n_rows,k,n_cols,row_block", [

@@ -9,7 +9,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 
-from repro.core.bfs import _pack_bits, _test_bits
+from repro.core.partitioned import pack_bits as _pack_bits, \
+    test_bit as _test_bits
 from repro.distributed.compression import quantize_int8
 from repro.graphs import urand_edges
 from repro.core.graph import partition_graph
