@@ -1,0 +1,181 @@
+"""Serve-path benchmark: closed-loop (program x bucket) cells through
+the resident-engine GraphServer; writes ``BENCH_serve.json`` at the
+repo root.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--fast]
+
+Each cell floods one server (ladder pinned to a single bucket) with
+``launches x bucket`` source queries and records queries/sec and
+p50/p95/p99 admission-to-demux latency.  The ``bucket=1`` cell IS the
+one-query-per-launch baseline, so ``qps(bucket=B) / qps(bucket=1)``
+measures the coalescing win directly — the fast suite asserts the
+batched-BFS ratio (recorded in the artifact's ``speedup`` section)
+stays >= 3x.  Refresh programs (``cc``) bench as sequential shared
+launches (``bucket=0``).
+
+Like ``benchmarks/graph_scaling.py``, the measurement runs in ONE
+subprocess so ``XLA_FLAGS=--xla_force_host_platform_device_count`` can
+force the partition count before jax imports; the harness process never
+imports jax.  ``benchmarks/compare.py`` gates the committed rows per
+(algo, bucket) cell with the same threshold/jitter-floor/cross-config
+rules as BENCH_graph.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC = str(REPO_ROOT / "src")
+
+# (algo, bucket) cells; bucket 0 = sequential shared refresh launches.
+# 3 rooted algorithms x >= 2 bucket sizes + the bucket=1 baselines.
+FAST_CELLS = [
+    ("bfs", (1, 8, 32)),
+    ("sssp", (1, 8, 32)),
+    ("betweenness", (1, 8)),
+    ("cc", (0,)),
+]
+FULL_CELLS = [
+    ("bfs", (1, 8, 32, 128)),
+    ("sssp", (1, 8, 32, 128)),
+    ("betweenness", (1, 8, 32)),
+    ("cc", (0,)),
+    ("pagerank", (0,)),
+]
+
+_CELL_CODE = r"""
+import json
+from repro.configs import graph_workloads
+from repro.core import GraphEngine, localops, partition_graph
+from repro.core.compat import runtime_fingerprint
+from repro.graphs import generate_edges
+from repro.launch.mesh import make_graph_mesh
+from repro.serve import GraphServer, Query, make_key
+
+graph, parts, cells, launches = {graph!r}, {parts}, {cells!r}, {launches}
+gcfg = graph_workloads.ALL[graph]
+edges = generate_edges(gcfg, seed=42)
+g = partition_graph(edges, gcfg.num_vertices, parts)
+eng = GraphEngine(g, make_graph_mesh(parts))
+print("META " + json.dumps({{
+    "localops": localops.get_mode(), **runtime_fingerprint()}}))
+for algo, bucket in cells:
+    key = make_key(algo)
+    server = GraphServer(eng, buckets=(max(bucket, 1),))
+    server.warmup([key])
+    # small buckets run MORE launches so every cell carries similar
+    # measurement mass (the bucket=1 baseline would otherwise be a
+    # handful of ms of wall time - pure scheduler jitter)
+    n_launch = launches if bucket == 0 else max(launches, 32 // bucket)
+    if bucket == 0:
+        for _ in range(n_launch):           # sequential shared refreshes
+            server.serve([Query(key, None)])
+    else:
+        roots = [(7 * i) % gcfg.num_vertices
+                 for i in range(n_launch * bucket)]
+        server.serve([Query(key, r) for r in roots])
+    (row,) = server.metrics.rows()
+    print("RESULT " + json.dumps(row))
+"""
+
+
+def run_cells(graph: str, parts: int, cells, launches: int):
+    flat = [(a, b) for a, bs in cells for b in bs]
+    code = _CELL_CODE.format(graph=graph, parts=parts, cells=flat,
+                             launches=launches)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={parts} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"serve bench subprocess failed:\n{proc.stdout[-2000:]}\n"
+            f"{proc.stderr[-4000:]}")
+    rows, meta = [], {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("META "):
+            meta = json.loads(line[len("META "):])
+        elif line.startswith("RESULT "):
+            rows.append(json.loads(line[len("RESULT "):]))
+    return rows, meta
+
+
+def speedup_section(rows: list[dict], algo_label: str = "bfs_fast") -> dict:
+    """Coalesced-vs-single throughput for one program's ladder."""
+    cells = {r["bucket"]: r["qps"] for r in rows if r["algo"] == algo_label}
+    if 1 not in cells or len(cells) < 2:
+        return {}
+    top = max(b for b in cells if b != 1)
+    return {"algo": algo_label, "bucket": top,
+            "single_qps": cells[1], "coalesced_qps": cells[top],
+            "speedup": round(cells[top] / max(cells[1], 1e-9), 2)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller graph / fewer launches (CI mode)")
+    ap.add_argument("--graph", default=None,
+                    help="override the suite's graph config")
+    ap.add_argument("--parts", type=int, default=2)
+    ap.add_argument("--launches", type=int, default=None,
+                    help="coalesced launches per cell")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_serve.json"))
+    ap.add_argument("--speedup-floor", type=float, default=3.0,
+                    help="exit non-zero when the coalesced-vs-single "
+                         "bfs qps ratio falls below this (the PR-5 "
+                         "acceptance floor; 0 disables)")
+    args = ap.parse_args(argv)
+
+    graph = args.graph or ("urand12" if args.fast else "urand16")
+    launches = args.launches or (3 if args.fast else 6)
+    cells = FAST_CELLS if args.fast else FULL_CELLS
+
+    print(f"[bench_serve] {graph} parts={args.parts} "
+          f"launches/cell={launches} "
+          f"cells={[(a, list(b)) for a, b in cells]}")
+    rows, sub_meta = run_cells(graph, args.parts, cells, launches)
+    for r in rows:
+        b = str(r["bucket"]) if r["bucket"] else "shared"
+        print(f"[bench_serve] {r['algo']:16s} bucket={b:>6s} "
+              f"qps={r['qps']:8.1f} p50={r['p50_ms']:7.1f}ms "
+              f"p99={r['p99_ms']:7.1f}ms")
+
+    speedup = speedup_section(rows)
+    below_floor = (speedup and args.speedup_floor
+                   and speedup["speedup"] < args.speedup_floor)
+    if speedup:
+        print(f"[bench_serve] coalescing win ({speedup['algo']} bucket "
+              f"{speedup['bucket']} vs 1): {speedup['speedup']:.1f}x "
+              f"({speedup['coalesced_qps']:.1f} vs "
+              f"{speedup['single_qps']:.1f} q/s)"
+              + (f"  <-- BELOW the {args.speedup_floor:.0f}x acceptance "
+                 "floor" if below_floor else ""))
+
+    meta = {"graph": graph, "parts": args.parts, "launches": launches,
+            "mode": "fast" if args.fast else "full", "layout": "ell",
+            "localops": sub_meta.get(
+                "localops", os.environ.get("REPRO_LOCALOPS", "auto")),
+            "jax": sub_meta.get("jax"), "device": sub_meta.get("device")}
+    payload = {"meta": meta, "rows": rows, "speedup": speedup}
+    pathlib.Path(args.out).write_text(
+        json.dumps(payload, indent=2) + "\n")
+    print(f"[bench_serve] wrote {args.out} ({len(rows)} rows)")
+    if below_floor:
+        print(f"[bench_serve] FAIL: coalescing speedup "
+              f"{speedup['speedup']:.2f}x < floor "
+              f"{args.speedup_floor:.1f}x", file=sys.stderr)
+        return 3
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

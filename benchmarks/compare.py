@@ -1,27 +1,39 @@
-"""Perf-regression gate: diff a freshly written BENCH_graph.json against
-the committed baseline (``git show HEAD:BENCH_graph.json`` by default).
+"""Perf-regression gate: diff freshly written bench artifacts against
+the committed baselines (``git show HEAD:<artifact>`` by default).
 
   PYTHONPATH=src python -m benchmarks.compare [--threshold 1.25]
 
-Rows are joined per (algo, variant, graph, parts); a ratio table prints
-for every matched cell, and the process exits non-zero when any cell's
-new/old wall-time ratio exceeds the threshold.  Guards against false
-alarms:
+Two artifacts are gated:
 
-  * rows measured under DIFFERENT dispatch configurations (the
-    ``localops`` / ``layout`` fields benchmarks/run.py records in meta)
-    are never hard-compared — a REPRO_LOCALOPS=ref run vs an ELL-path
-    baseline is a config change, not a regression (the table still
-    prints, the gate is skipped);
-  * cells where both sides are under ``--min-ms`` are jitter on
-    emulated devices, not signal, and never fail the gate;
-  * rows present on only one side (new algorithms, dropped bench
-    points) are reported but never fail;
-  * a missing baseline (fresh clone, no git) is a skip, not a failure.
+  * ``BENCH_graph.json`` — direct program launches; rows join per
+    (algo, variant, graph, parts) and fail when new/old wall-time
+    exceeds the threshold.
+  * ``BENCH_serve.json`` — the query-serving path; rows join per
+    (algo, bucket) and fail when queries/sec DROPS by more than the
+    threshold (old/new qps ratio).
 
-``scripts/ci.sh`` runs this right after the fast bench.  The committed
-BENCH_graph.json is the baseline, so land refreshed rows in the same PR
-as an intentional perf change.
+Both share the guards against false alarms:
+
+  * rows measured under DIFFERENT configurations are never
+    hard-compared — the meta records dispatch (``localops`` /
+    ``layout``), measurement setup (mode / reps or launches), and the
+    environment (``jax`` version, ``device`` kind), so a REPRO_LOCALOPS
+    override, a jax upgrade, or a CPU-vs-TPU move reads as config
+    drift, not a regression (the table still prints, the gate is
+    skipped) — but a field recorded on only ONE side (a baseline from
+    before the field existed) is a wildcard, so introducing a new meta
+    field never hands that PR a gate holiday;
+  * cells where both sides are under ``--min-ms`` (wall time for graph
+    rows, p50 latency for serve rows) are jitter on emulated devices,
+    not signal, and never fail the gate;
+  * rows present on only one side (new algorithms, new bucket rungs,
+    dropped bench points) are reported but never fail;
+  * a missing baseline (fresh clone, artifact not committed yet) is a
+    skip, not a failure.
+
+``scripts/ci.sh`` runs this right after the fast benches.  The
+committed artifacts are the baselines, so land refreshed rows in the
+same PR as an intentional perf change.
 """
 
 from __future__ import annotations
@@ -34,115 +46,191 @@ import sys
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
+GRAPH_ARTIFACT = "BENCH_graph.json"
+SERVE_ARTIFACT = "BENCH_serve.json"
 
-def _row_key(r: dict) -> tuple:
+
+def _graph_key(r: dict) -> tuple:
     return (r["algo"], r["variant"], r.get("graph", "?"), r["parts"])
 
 
-def load_bench(source: str) -> tuple[dict, dict] | None:
-    """(meta, {key: row}) from a path or ``git:REV``; None if unavailable."""
+def _serve_key(r: dict) -> tuple:
+    return (r["algo"], r["bucket"])
+
+
+def load_bench(source: str, name: str = GRAPH_ARTIFACT, key=_graph_key):
+    """(meta, {key: row}) from a path or ``git:REV``; None if unavailable.
+
+    A plain-path ``source`` may be a directory (the artifact name is
+    appended) or a file (used as-is — its SIBLING is used for the other
+    artifact via the directory form).
+    """
     if source.startswith("git:"):
         rev = source[len("git:"):]
         proc = subprocess.run(
-            ["git", "show", f"{rev}:BENCH_graph.json"], cwd=REPO_ROOT,
+            ["git", "show", f"{rev}:{name}"], cwd=REPO_ROOT,
             capture_output=True, text=True)
         if proc.returncode != 0:
             return None
         text = proc.stdout
     else:
         path = pathlib.Path(source)
+        if path.is_dir():
+            path = path / name
         if not path.exists():
             return None
         text = path.read_text()
     data = json.loads(text)
-    return data.get("meta", {}), {_row_key(r): r for r in data.get("rows", [])}
+    return data.get("meta", {}), {key(r): r for r in data.get("rows", [])}
 
 
 def dispatch_config(meta: dict) -> tuple:
-    """The measurement configuration a row set was taken under:
-    dispatch (localops/layout) AND measurement setup (fast-vs-full mode,
-    rep count) - ms from different configs are not comparable, so any
-    mismatch skips the hard gate (the table still prints).  Artifacts
-    from before the localops layer read as (None, None, ...)."""
-    return (meta.get("localops"), meta.get("layout"),
-            meta.get("mode"), meta.get("reps"))
+    """The configuration a row set was measured under: dispatch
+    (localops/layout), measurement setup (fast-vs-full mode, reps or
+    launches per cell, and — for serve rows, whose (algo, bucket) key
+    does not carry them — the graph and partition count), and the
+    environment (jax version, device kind)."""
+    parts = meta.get("parts")
+    return (meta.get("localops"), meta.get("layout"), meta.get("mode"),
+            meta.get("reps", meta.get("launches")),
+            meta.get("graph"), tuple(parts) if isinstance(parts, list)
+            else parts,
+            meta.get("jax"), meta.get("device"))
 
 
-def compare(old: dict, new: dict, threshold: float,
-            min_ms: float = 0.0) -> tuple[list, list]:
-    """(table_lines, regression_keys) for the joined row sets."""
-    lines = [f"{'algo/variant':22s} {'graph':10s} {'parts':>5s} "
-             f"{'old_ms':>9s} {'new_ms':>9s} {'ratio':>6s}"]
+def config_changed(old_meta: dict, new_meta: dict) -> bool:
+    """True when the two row sets were measured under DIFFERENT
+    configurations — numbers are then not comparable and the hard gate
+    is skipped (the table still prints).  A field recorded on only ONE
+    side (None on the other — e.g. the baseline predates jax/device
+    recording) is a wildcard, NOT drift: introducing a new meta field
+    must not hand the PR that introduces it a gate holiday."""
+    return any(o != n for o, n in zip(dispatch_config(old_meta),
+                                      dispatch_config(new_meta))
+               if o is not None and n is not None)
+
+
+def _fmt_graph(key) -> str:
+    algo, variant, graph, parts = key
+    return f"{algo + '/' + variant:22s} {graph:10s} {parts:5d}"
+
+
+def _fmt_serve(key) -> str:
+    algo, bucket = key
+    return f"{algo:22s} {'shared' if bucket == 0 else bucket:>10} {'':5s}"
+
+
+def compare(old: dict, new: dict, threshold: float, min_ms: float = 0.0, *,
+            serve: bool = False) -> tuple[list, list]:
+    """(table_lines, regression_keys) for the joined row sets.
+
+    Graph rows regress when wall time GROWS (new/old ms > threshold);
+    serve rows regress when throughput DROPS (old/new qps > threshold).
+    The jitter floor reads ms for graph rows, p50_ms for serve rows.
+    """
+    metric, fmt = ("qps", _fmt_serve) if serve else ("ms", _fmt_graph)
+    head = (f"{'algo':22s} {'bucket':>10s} {'':5s}" if serve
+            else f"{'algo/variant':22s} {'graph':10s} {'parts':>5s}")
+    lines = [f"{head} {'old':>9s} {'new':>9s} {'ratio':>6s}  ({metric})"]
     regressions = []
     for key in sorted(set(old) & set(new)):
-        algo, variant, graph, parts = key
-        o, n = old[key]["ms"], new[key]["ms"]
-        ratio = n / max(o, 1e-9)
+        o, n = old[key][metric], new[key][metric]
+        ratio = (o / max(n, 1e-9)) if serve else (n / max(o, 1e-9))
+        floor_vals = ((old[key].get("p50_ms", 0.0),
+                       new[key].get("p50_ms", 0.0)) if serve else (o, n))
         flag = ""
-        if ratio > threshold and max(o, n) >= min_ms:
+        if ratio > threshold and max(floor_vals) >= min_ms:
             flag = "  <-- REGRESSION"
             regressions.append(key)
         elif ratio > threshold:
-            flag = f"  (slower, under the {min_ms:.0f}ms jitter floor)"
+            flag = f"  (worse, under the {min_ms:.0f}ms jitter floor)"
         elif ratio < 1.0 / threshold:
-            flag = "  (faster)"
-        lines.append(f"{algo + '/' + variant:22s} {graph:10s} {parts:5d} "
-                     f"{o:9.1f} {n:9.1f} {ratio:6.2f}{flag}")
+            flag = "  (better)"
+        lines.append(f"{fmt(key)} {o:9.1f} {n:9.1f} {ratio:6.2f}{flag}")
     for key in sorted(set(new) - set(old)):
-        lines.append(f"{key[0] + '/' + key[1]:22s} {key[2]:10s} "
-                     f"{key[3]:5d} {'-':>9s} {new[key]['ms']:9.1f}   new row")
+        lines.append(f"{fmt(key)} {'-':>9s} {new[key][metric]:9.1f}   "
+                     "new row")
     for key in sorted(set(old) - set(new)):
-        lines.append(f"{key[0] + '/' + key[1]:22s} {key[2]:10s} "
-                     f"{key[3]:5d} {old[key]['ms']:9.1f} {'-':>9s}   "
+        lines.append(f"{fmt(key)} {old[key][metric]:9.1f} {'-':>9s}   "
                      "row dropped")
     return lines, regressions
+
+
+def _sibling_source(source: str, name: str) -> str:
+    """The other artifact next to ``source``: same git rev, or the
+    file's directory, or the directory itself."""
+    if source.startswith("git:"):
+        return source
+    path = pathlib.Path(source)
+    return str(path if path.is_dir() else path.parent)
+
+
+def gate_artifact(name: str, baseline: str, current: str, threshold: float,
+                  min_ms: float, *, serve: bool, required: bool) -> int:
+    """Run one artifact's gate; returns an exit code (0 ok/skip)."""
+    key = _serve_key if serve else _graph_key
+    loaded_old = load_bench(baseline, name, key)
+    loaded_new = load_bench(current, name, key)
+    if loaded_old is None:
+        print(f"[compare] baseline {baseline} has no {name}; skipping "
+              "its regression gate")
+        return 0
+    if loaded_new is None:
+        if not required:
+            print(f"[compare] current {name} missing; run the "
+                  f"{'serve' if serve else 'graph'} bench to gate it")
+            return 0
+        print(f"[compare] current rows for {name} missing; run "
+              "benchmarks first", file=sys.stderr)
+        return 2
+    old_meta, old = loaded_old
+    new_meta, new = loaded_new
+
+    lines, regressions = compare(old, new, threshold, min_ms, serve=serve)
+    print(f"[compare] {name}: current vs {baseline} "
+          f"(threshold {threshold:.2f}x, floor {min_ms:.0f}ms)")
+    print("\n".join(lines))
+    if config_changed(old_meta, new_meta):
+        print("[compare] measurement config changed (localops, layout, "
+              "mode, reps/launches, graph, parts, jax, device): "
+              f"{dispatch_config(old_meta)} -> "
+              f"{dispatch_config(new_meta)}; ratios are "
+              "cross-configuration — regression gate skipped")
+        return 0
+    if regressions:
+        print(f"[compare] {name}: {len(regressions)} regression(s) over "
+              f"{threshold:.2f}x: "
+              + ", ".join("/".join(map(str, k)) for k in regressions),
+              file=sys.stderr)
+        return 1
+    print(f"[compare] {name}: no regressions")
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="git:HEAD",
-                    help="committed rows: 'git:REV' or a file path "
-                         "(default git:HEAD)")
-    ap.add_argument("--current", default=str(REPO_ROOT / "BENCH_graph.json"),
-                    help="freshly written rows (default repo root)")
+                    help="committed rows: 'git:REV', a directory, or a "
+                         "BENCH_graph.json path (default git:HEAD)")
+    ap.add_argument("--current", default=str(REPO_ROOT),
+                    help="freshly written rows: a directory or a "
+                         "BENCH_graph.json path (default repo root)")
     ap.add_argument("--threshold", type=float, default=1.25,
-                    help="fail when new/old ms exceeds this ratio")
+                    help="fail when the ratio (ms growth / qps drop) "
+                         "exceeds this")
     ap.add_argument("--min-ms", type=float, default=10.0,
                     help="cells where BOTH sides are under this never "
                          "fail (emulated-device jitter floor)")
     args = ap.parse_args(argv)
 
-    loaded_old = load_bench(args.baseline)
-    loaded_new = load_bench(args.current)
-    if loaded_old is None:
-        print(f"[compare] baseline {args.baseline} unavailable; skipping "
-              "regression gate")
-        return 0
-    if loaded_new is None:
-        print(f"[compare] current rows {args.current} missing; run "
-              "benchmarks.run first", file=sys.stderr)
-        return 2
-    old_meta, old = loaded_old
-    new_meta, new = loaded_new
-
-    cfg_old, cfg_new = dispatch_config(old_meta), dispatch_config(new_meta)
-    lines, regressions = compare(old, new, args.threshold, args.min_ms)
-    print(f"[compare] {args.current} vs {args.baseline} "
-          f"(threshold {args.threshold:.2f}x, floor {args.min_ms:.0f}ms)")
-    print("\n".join(lines))
-    if cfg_old != cfg_new:
-        print("[compare] measurement config changed (localops, layout, "
-              f"mode, reps): {cfg_old} -> {cfg_new}; ratios are "
-              "cross-configuration — regression gate skipped")
-        return 0
-    if regressions:
-        print(f"[compare] {len(regressions)} regression(s) over "
-              f"{args.threshold:.2f}x: "
-              + ", ".join("/".join(map(str, k)) for k in regressions),
-              file=sys.stderr)
-        return 1
-    print("[compare] no regressions")
-    return 0
+    rc = gate_artifact(GRAPH_ARTIFACT, args.baseline, args.current,
+                       args.threshold, args.min_ms, serve=False,
+                       required=True)
+    rc_serve = gate_artifact(
+        SERVE_ARTIFACT, _sibling_source(args.baseline, SERVE_ARTIFACT),
+        _sibling_source(args.current, SERVE_ARTIFACT),
+        args.threshold, args.min_ms, serve=True, required=False)
+    return rc or rc_serve
 
 
 if __name__ == "__main__":

@@ -14,9 +14,28 @@ import argparse
 import json
 import os
 import pathlib
+import subprocess
 import sys
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def runtime_meta() -> dict:
+    """jax version + device kind, read in a SUBPROCESS — the harness
+    itself never imports jax (each bench point is a subprocess that
+    must set XLA_FLAGS before its first jax import).  Recorded in the
+    bench meta so benchmarks/compare.py can tell environment drift
+    (jax upgrade, CPU-vs-TPU move) from real regressions."""
+    code = ("import json; from repro.core.compat import "
+            "runtime_fingerprint; print(json.dumps(runtime_fingerprint()))")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    try:
+        proc = subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True, timeout=120)
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+    except Exception:  # noqa: BLE001 - meta is best-effort
+        return {"jax": None, "device": None}
 
 
 def write_bench_artifact(rows: list[dict], meta: dict,
@@ -93,7 +112,7 @@ def main() -> None:
             "parts": list(parts), "reps": reps,
             "mode": "fast" if args.fast else "full",
             "localops": os.environ.get("REPRO_LOCALOPS", "auto"),
-            "layout": "ell"})
+            "layout": "ell", **runtime_meta()})
 
     print("=" * 72)
     print("Kernel micro-benchmarks (CPU oracle time + TPU roofline bound)")

@@ -14,10 +14,12 @@
 # localops dispatch layer routes production hot loops through those
 # kernels.
 #
-# The fast bench writes BENCH_graph.json at the repo root so the perf
-# trajectory (algo, graph, parts, ms) is tracked across PRs, and
-# benchmarks/compare.py gates the fresh rows against the committed ones
-# (>1.25x wall-time regression on any cell fails CI).
+# The fast benches write BENCH_graph.json (direct launches) and
+# BENCH_serve.json (the query-serving path: queries/sec + latency per
+# (algo, bucket) cell) at the repo root so both perf trajectories are
+# tracked across PRs, and benchmarks/compare.py gates the fresh rows
+# against the committed ones (>1.25x wall-time growth or queries/sec
+# drop on any cell fails CI).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -37,6 +39,11 @@ echo "== bench smoke: benchmarks.run --fast =="
 python -m benchmarks.run --fast
 
 test -f BENCH_graph.json || { echo "BENCH_graph.json missing" >&2; exit 1; }
+
+echo "== serve bench: benchmarks.bench_serve --fast =="
+python -m benchmarks.bench_serve --fast
+
+test -f BENCH_serve.json || { echo "BENCH_serve.json missing" >&2; exit 1; }
 
 echo "== bench regression gate: benchmarks.compare (vs committed rows) =="
 python -m benchmarks.compare --threshold 1.25

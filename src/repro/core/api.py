@@ -110,6 +110,13 @@ class GraphEngine:
             raise ValueError(
                 f"{spec.key} takes no per-query inputs; batch="
                 f"{batch} has nothing to vmap over")
+        # normalize params into full (defaults + overrides) form so an
+        # explicitly spelled default hits the same cache entry; batched
+        # builds additionally merge the spec's vmap-friendly overrides
+        # (e.g. bfs/fast pins direction="pull": a per-lane cond would
+        # run both branches under vmap).  Explicit caller params win.
+        batch_over = spec.batch_defaults if batch is not None else {}
+        params = {**spec.defaults, **batch_over, **params}
         g = self.g
         # the layout and localops mode steer TRACE-time dispatch in
         # core/localops.py, so both belong in the compile-cache key

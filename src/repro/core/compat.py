@@ -76,3 +76,15 @@ def make_mesh(axis_shapes, axis_names, *, devices=None):
     if axis_type is not None and "axis_types" in _MAKE_MESH_PARAMS:
         kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
     return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def runtime_fingerprint() -> dict:
+    """``{"jax": version, "device": kind}`` for bench/serve artifact
+    metas.  ONE spelling for every artifact writer (benchmarks/run.py,
+    benchmarks/bench_serve.py, repro.launch.graph_serve):
+    benchmarks/compare.py keys its cross-config skip on these exact
+    strings, so divergent copies would desynchronize the metas and
+    silently re-trigger gate skips."""
+    d = jax.devices()[0]
+    return {"jax": jax.__version__,
+            "device": getattr(d, "device_kind", d.platform)}

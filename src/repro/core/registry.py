@@ -47,6 +47,11 @@ class ProgramSpec:
     # for unbounded.  The launcher skips over-budget programs (e.g. the
     # O(n^2/P) triangle-counting bitmap); the dry-run still lowers them.
     n_budget: int = 0
+    # param overrides for batched (batch=B) builds: knobs whose
+    # single-query default degenerates under vmap (a per-lane lax.cond
+    # runs BOTH branches and selects), e.g. bfs/fast pins
+    # direction="pull".  Explicit caller params always win.
+    batch_defaults: dict = field(default_factory=dict)
 
     @property
     def key(self) -> str:
@@ -112,19 +117,32 @@ def default_variant(algo: str) -> str:
     return _DEFAULT_VARIANT[algo]
 
 
+def registered_keys() -> list[str]:
+    """Human-readable registered program keys: ``["bfs/bsp", "bfs/fast",
+    ..., "sssp", ...]`` (default-only variants spell as the bare algo)."""
+    return [spec.key for spec in _REGISTRY.values()]
+
+
 def get_spec(algo: str, variant: str | None = None) -> ProgramSpec:
-    """Resolve an (algo, variant) pair; ``"bfs/fast"`` shorthand works."""
+    """Resolve an (algo, variant) pair; ``"bfs/fast"`` shorthand works.
+
+    Unknown names raise a ``KeyError`` that lists every registered key,
+    so a typo at any entry point (engine, launcher, server admission)
+    names its valid alternatives instead of failing bare.
+    """
     if variant is None and "/" in algo:
         algo, variant = algo.split("/", 1)
     if variant is None:
         if algo not in _DEFAULT_VARIANT:
             raise KeyError(
-                f"unknown algorithm {algo!r}; available: {available()}")
+                f"unknown algorithm {algo!r}; registered programs: "
+                f"{', '.join(registered_keys())}")
         variant = _DEFAULT_VARIANT[algo]
     key = (algo, variant)
     if key not in _REGISTRY:
         raise KeyError(
-            f"unknown program {algo}/{variant}; available: {available()}")
+            f"unknown program {algo!r}/{variant!r}; registered programs: "
+            f"{', '.join(registered_keys())}")
     return _REGISTRY[key]
 
 
@@ -154,7 +172,9 @@ register(ProgramSpec(
     algo="bfs", variant="fast",
     make=lambda g, **p: _bfs.bfs_fast_program(g, **p),
     inputs=("root",),
-    defaults={"max_levels": 64, "pull_threshold": 0.02},
+    defaults={"max_levels": 64, "pull_threshold": 0.02,
+              "direction": "adaptive"},
+    batch_defaults={"direction": "pull"},
     doc="direction-optimizing BFS with bit-packed frontier exchange "
         "(the HPX-adapted implementation)"), default=True)
 

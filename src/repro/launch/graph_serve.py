@@ -1,0 +1,123 @@
+"""GRAPH query-server driver: resident engine + coalesced mixed traffic.
+
+Generates and partitions a graph once, keeps it device-resident in a
+:class:`~repro.serve.server.GraphServer`, warms the bucket ladder for
+every program in the mix, then replays a synthetic arrival trace
+(Poisson arrivals, Zipfian roots, weighted algorithm mix) through the
+coalescing/double-buffered serve pipeline and reports queries/sec and
+p50/p95/p99 latency per (program, bucket) cell.
+
+  PYTHONPATH=src python -m repro.launch.graph_serve \
+      --graph urand16 --parts 2 --mix bfs:8,sssp:4,cc:1 --duration 10
+
+(Use XLA_FLAGS=--xla_force_host_platform_device_count=N for --parts N
+on a single host, as with repro.launch.graph_analytics.)
+
+This is the GRAPH server.  The other serving driver in this package,
+``repro.launch.serve``, is the seed's LLM token-serving driver (batched
+prefill + decode over the transformer stack); the two share nothing
+but the name.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import graph_workloads
+from repro.core import GraphEngine, localops, partition_graph
+from repro.core.compat import runtime_fingerprint
+from repro.graphs import generate_edges
+from repro.launch.mesh import make_graph_mesh
+from repro.serve import GraphServer, parse_mix, synthetic_trace
+
+
+def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
+        duration: float = 10.0, rate: float = 64.0, buckets=(1, 8, 32, 128),
+        depth: int = 2, zipf_s: float = 1.05, seed: int = 42,
+        layout: str = "ell", json_path: str | None = None):
+    gcfg = graph_workloads.ALL[graph_name]
+    print(f"[serve] generating {graph_name}: 2^{gcfg.scale} vertices, "
+          f"{gcfg.num_edges:,} edges ({gcfg.generator})")
+    edges = generate_edges(gcfg, seed)
+    t0 = time.time()
+    g = partition_graph(edges, gcfg.num_vertices, parts)
+    print(f"[serve] partitioned over {parts} parts in {time.time()-t0:.1f}s "
+          f"(layout={layout} localops={localops.get_mode()})")
+    eng = GraphEngine(g, make_graph_mesh(parts), layout=layout)
+    server = GraphServer(eng, buckets=buckets, depth=depth)
+
+    keys = parse_mix(mix)
+    t0 = time.time()
+    launches = server.warmup([k for k, _ in keys])
+    print(f"[serve] warmed {launches} (program x bucket) launches in "
+          f"{time.time()-t0:.1f}s; ladder={server.ladder.sizes} "
+          f"depth={depth}")
+
+    trace = synthetic_trace(gcfg.num_vertices, keys, rate=rate,
+                            duration=duration, zipf_s=zipf_s, seed=seed)
+    print(f"[serve] replaying {len(trace)} queries over {duration:.0f}s "
+          f"(rate={rate:.0f}/s, mix={mix}, zipf_s={zipf_s})")
+    results = server.serve_trace(trace)
+    print(f"[serve] served {len(results)} queries "
+          f"({len(results)/server.metrics.window_s:.1f} q/s overall)")
+    print(server.metrics.table())
+
+    if json_path:
+        payload = {
+            "meta": {"graph": graph_name, "parts": parts, "mix": mix,
+                     "rate": rate, "duration": duration,
+                     "buckets": list(server.ladder.sizes), "depth": depth,
+                     "zipf_s": zipf_s, "layout": layout,
+                     "localops": localops.get_mode(),
+                     **runtime_fingerprint()},
+            "rows": server.metrics.rows(),
+        }
+        text = json.dumps(payload, indent=2)
+        if json_path == "-":
+            print("SERVE_JSON " + json.dumps(payload))
+        else:
+            with open(json_path, "w") as f:
+                f.write(text + "\n")
+            print(f"[serve] wrote {json_path}")
+    return server
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Graph query server: coalesced mixed-algorithm "
+                    "traffic against a device-resident graph.",
+        epilog="For the LLM token-serving driver (batched "
+               "prefill/decode) see: python -m repro.launch.serve")
+    ap.add_argument("--graph", default="urand16")
+    ap.add_argument("--parts", type=int, default=len(jax.devices()))
+    ap.add_argument("--mix", default="bfs:8,sssp:4,cc:1",
+                    help="algo[/variant][:weight] list, e.g. "
+                         "bfs:8,sssp:4,cc:1")
+    ap.add_argument("--duration", type=float, default=10.0,
+                    help="trace length in seconds")
+    ap.add_argument("--rate", type=float, default=64.0,
+                    help="Poisson arrival rate, queries/sec")
+    ap.add_argument("--buckets", default="1,8,32,128",
+                    help="coalescing batch-size ladder")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="in-flight launch pipeline depth")
+    ap.add_argument("--zipf", type=float, default=1.05,
+                    help="Zipf skew of the root distribution")
+    ap.add_argument("--layout", choices=("ell", "coo"), default="ell")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--json", default=None,
+                    help="write metrics rows to this path ('-' = stdout)")
+    args = ap.parse_args()
+    run(args.graph, args.parts, mix=args.mix, duration=args.duration,
+        rate=args.rate,
+        buckets=tuple(int(b) for b in args.buckets.split(",")),
+        depth=args.depth, zipf_s=args.zipf, seed=args.seed,
+        layout=args.layout, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,13 @@
-"""Serving driver: batched prefill + decode with the segment cache.
+"""LLM token-serving driver: batched prefill + decode with the segment
+cache over the transformer stack (the seed's model-serving path).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --smoke --batch 4 --prompt-len 32 --gen 32
+
+Not to be confused with the GRAPH query server,
+``repro.launch.graph_serve`` (resident graph engine + coalesced
+mixed-algorithm query traffic; see ``repro/serve/``) — the two serving
+drivers share nothing but the name.
 """
 
 from __future__ import annotations
@@ -99,7 +105,10 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, greedy=True):
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="LLM token serving: batched prefill + decode.",
+        epilog="For the GRAPH query server (coalesced graph-algorithm "
+               "traffic) see: python -m repro.launch.graph_serve")
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

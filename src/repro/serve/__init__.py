@@ -1,0 +1,31 @@
+"""Query-serving subsystem: a resident-engine graph server.
+
+The ROADMAP's serve-path layer: keep the partitioned graph device-
+resident inside one :class:`~repro.core.api.GraphEngine`, stream mixed
+typed queries (BFS/SSSP/betweenness source queries, PageRank/CC/k-core
+refreshes) through an admission queue, coalesce compatible queries into
+a fixed bucket ladder of already-compiled batched programs, pipeline
+launches double-buffered over JAX async dispatch, and demultiplex
+per-query answers back out — measuring queries/sec and latency
+percentiles per (program, bucket).
+
+CLI: ``python -m repro.launch.graph_serve``; bench:
+``python -m benchmarks.bench_serve`` (writes ``BENCH_serve.json``).
+The LLM token-serving driver is separate: ``repro.launch.serve``.
+"""
+
+from repro.serve.coalescer import Batch, BucketLadder, Coalescer, \
+    DEFAULT_BUCKETS
+from repro.serve.executor import DoubleBufferedExecutor
+from repro.serve.metrics import ServeMetrics
+from repro.serve.query import Query, QueryKey, QueryResult, make_key, query
+from repro.serve.server import GraphServer
+from repro.serve.workload import parse_mix, synthetic_trace, \
+    zipf_root_sampler
+
+__all__ = [
+    "Batch", "BucketLadder", "Coalescer", "DEFAULT_BUCKETS",
+    "DoubleBufferedExecutor", "GraphServer", "Query", "QueryKey",
+    "QueryResult", "ServeMetrics", "make_key", "parse_mix", "query",
+    "synthetic_trace", "zipf_root_sampler",
+]

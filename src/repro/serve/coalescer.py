@@ -1,0 +1,100 @@
+"""Batch coalescing: pack compatible pending queries into a fixed
+ladder of batch sizes so every launch hits an already-compiled program.
+
+The engine compile-caches per ``(algo, variant, params, batch)``
+(``core/api.py``), so a server that launched whatever batch width the
+queue happened to hold would re-trace constantly.  The ladder quantizes
+instead: a batch of ``k`` source queries launches at the smallest
+bucket ``>= k`` (capped at the top bucket), padding the root vector by
+repeating the last root — padded lanes are real lanes whose answers the
+demux discards.  After one warmup pass per bucket nothing ever traces
+again (``tests/test_serve.py::test_bucket_ladder_no_retrace``).
+
+Policy is deliberately work-conserving: a batch forms as soon as the
+executor has room and ANY query is pending — there is no fill timer —
+so light traffic rides small buckets at low latency and heavy traffic
+climbs the ladder by itself.  Fairness across keys is oldest-head-first
+(the key whose front query has waited longest dispatches next), which
+bounds per-key starvation under a skewed mix.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+from repro.serve.query import Query, QueryKey
+
+DEFAULT_BUCKETS = (1, 8, 32, 128)
+
+
+class BucketLadder:
+    """Sorted fixed batch sizes; ``pick(k)`` = smallest bucket >= k,
+    top bucket when k overflows (the rest stays queued)."""
+
+    def __init__(self, buckets=DEFAULT_BUCKETS):
+        sizes = sorted(set(int(b) for b in buckets))
+        if not sizes or sizes[0] < 1:
+            raise ValueError(f"buckets must be positive ints: {buckets!r}")
+        self.sizes = tuple(sizes)
+
+    def pick(self, pending: int) -> int:
+        for b in self.sizes:
+            if pending <= b:
+                return b
+        return self.sizes[-1]
+
+    def __repr__(self):
+        return f"BucketLadder{self.sizes}"
+
+
+@dataclass
+class Batch:
+    """One coalesced launch: ``bucket`` source queries (roots padded to
+    the bucket width by duplication), or — ``bucket == 0`` — every
+    pending refresh query of one key sharing a single unbatched launch."""
+
+    key: QueryKey
+    queries: list
+    bucket: int
+    roots: list                          # padded, len == bucket; [] refresh
+
+    @property
+    def n_real(self) -> int:
+        return len(self.queries)
+
+
+class Coalescer:
+    """Admission queue + batch formation over per-key FIFO queues."""
+
+    def __init__(self, ladder: BucketLadder | None = None):
+        self.ladder = ladder or BucketLadder()
+        self._pending: dict[QueryKey, deque[Query]] = {}
+
+    def admit(self, q: Query) -> None:
+        self._pending.setdefault(q.key, deque()).append(q)
+
+    def pending_count(self, key: QueryKey | None = None) -> int:
+        if key is not None:
+            return len(self._pending.get(key, ()))
+        return sum(len(d) for d in self._pending.values())
+
+    def has_pending(self) -> bool:
+        return any(self._pending.values())
+
+    def next_batch(self) -> Batch | None:
+        """Form ONE batch from the key whose head query is oldest."""
+        live = [(d[0].t_submit, k) for k, d in self._pending.items() if d]
+        if not live:
+            return None
+        _, key = min(live, key=lambda e: e[0])   # ties: admission order
+        dq = self._pending[key]
+        if not key.rooted:
+            queries = list(dq)
+            dq.clear()
+            return Batch(key, queries, 0, [])
+        bucket = self.ladder.pick(len(dq))
+        queries = [dq.popleft() for _ in range(min(bucket, len(dq)))]
+        roots = [q.root for q in queries]
+        roots += [roots[-1]] * (bucket - len(roots))   # dup-root padding
+        return Batch(key, queries, bucket, roots)

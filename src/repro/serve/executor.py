@@ -1,0 +1,72 @@
+"""Double-buffered launch pipeline.
+
+JAX dispatch is asynchronous: calling a jitted program returns device
+arrays immediately while the backend executes.  The executor exploits
+that to overlap host work with device work — it holds up to ``depth``
+launches in flight, and only blocks (``jax.block_until_ready``) on the
+OLDEST launch when a new one needs its slot or at drain.  With
+``depth=2`` the server forms and dispatches batch ``k+1`` while the
+device is still executing batch ``k``; the only synchronization point
+is the demux, exactly as the serving layer wants it.
+
+The executor knows nothing about queries or programs — it pipelines
+``(payload, device_outputs)`` pairs and hands completed ones back in
+dispatch order.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+
+import jax
+
+
+@dataclass
+class Launch:
+    """One in-flight dispatch: opaque payload + unblocked device outputs."""
+
+    payload: object
+    out: tuple
+    t_dispatch: float
+    t_done: float = 0.0
+
+
+class DoubleBufferedExecutor:
+    def __init__(self, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._inflight: deque[Launch] = deque()
+
+    def __len__(self) -> int:
+        return len(self._inflight)
+
+    def push(self, payload, out) -> list[Launch]:
+        """Enqueue an async launch; returns the launches this push had
+        to retire to stay within ``depth`` (0 or 1 of them)."""
+        done = []
+        while len(self._inflight) >= self.depth:
+            done.append(self._complete_oldest())
+        self._inflight.append(Launch(payload, out, time.perf_counter()))
+        return done
+
+    def complete_one(self) -> Launch | None:
+        """Block on and retire the oldest in-flight launch, if any."""
+        if not self._inflight:
+            return None
+        return self._complete_oldest()
+
+    def drain(self) -> list[Launch]:
+        """Retire everything in flight, oldest first."""
+        done = []
+        while self._inflight:
+            done.append(self._complete_oldest())
+        return done
+
+    def _complete_oldest(self) -> Launch:
+        launch = self._inflight.popleft()
+        jax.block_until_ready(launch.out)
+        launch.t_done = time.perf_counter()
+        return launch

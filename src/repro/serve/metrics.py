@@ -1,0 +1,75 @@
+"""Serving metrics: queries/sec and latency percentiles per
+(program, bucket) cell.
+
+Latency is admission-to-demux (queue wait + launch + demux slice), the
+number a client of the server would see.  Cells are keyed by the
+program label and the launch bucket width the query actually rode
+(0 = shared refresh launch), so the bench can compare the ladder rungs
+directly — ``qps`` at bucket 32 vs bucket 1 IS the coalescing win.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+class ServeMetrics:
+    def __init__(self):
+        self._lat: dict[tuple[str, int], list[float]] = {}
+        self._t0: float | None = None
+        self._t1: float | None = None
+
+    def start(self) -> None:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+
+    def stop(self) -> None:
+        self._t1 = time.perf_counter()
+
+    def record(self, label: str, bucket: int, latency_s: float) -> None:
+        self.start()
+        self._lat.setdefault((label, bucket), []).append(latency_s)
+        self._t1 = time.perf_counter()
+
+    @property
+    def window_s(self) -> float:
+        if self._t0 is None:
+            return 0.0
+        return max((self._t1 or time.perf_counter()) - self._t0, 1e-9)
+
+    def rows(self) -> list[dict]:
+        """One dict per (algo, bucket) cell: count, qps, p50/p95/p99 ms.
+
+        ``qps`` is cell throughput over the shared measurement window —
+        under a mixed stream the cells split the window, so per-cell qps
+        sums to total throughput.
+        """
+        out = []
+        for (label, bucket) in sorted(self._lat):
+            lat = np.asarray(self._lat[(label, bucket)], np.float64)
+            p50, p95, p99 = np.percentile(lat, (50, 95, 99)) * 1e3
+            out.append({
+                "algo": label, "bucket": bucket, "count": int(lat.size),
+                "qps": round(lat.size / self.window_s, 2),
+                "p50_ms": round(float(p50), 2),
+                "p95_ms": round(float(p95), 2),
+                "p99_ms": round(float(p99), 2),
+            })
+        return out
+
+    def table(self) -> str:
+        rows = self.rows()
+        lines = [f"{'program':16s} {'bucket':>6s} {'count':>6s} "
+                 f"{'qps':>8s} {'p50_ms':>8s} {'p95_ms':>8s} {'p99_ms':>8s}"]
+        for r in rows:
+            b = str(r["bucket"]) if r["bucket"] else "shared"
+            lines.append(
+                f"{r['algo']:16s} {b:>6s} {r['count']:6d} {r['qps']:8.1f} "
+                f"{r['p50_ms']:8.1f} {r['p95_ms']:8.1f} {r['p99_ms']:8.1f}")
+        lines.append(f"{'total':16s} {'':>6s} "
+                     f"{sum(r['count'] for r in rows):6d} "
+                     f"{sum(r['qps'] for r in rows):8.1f} "
+                     f"(window {self.window_s:.2f}s)")
+        return "\n".join(lines)

@@ -1,0 +1,111 @@
+"""Typed queries for the graph server.
+
+A query names a registered program by ``(algo, variant, params)`` plus
+— for traversal programs with per-query inputs — a source vertex.  The
+``(algo, variant, params)`` triple is the **coalescing key**: queries
+with equal keys resolve to the same ``CompiledProgram`` family and can
+ride one batched launch (``core/api.py`` caches per batch width, so a
+bucket ladder over one key never re-traces).
+
+Two shapes of query flow through the server:
+
+  * **source queries** (``bfs``, ``sssp``, ``betweenness``): carry a
+    ``root``; the coalescer packs up to ``bucket`` of them into one
+    ``batch=bucket`` launch and the demux slices lane ``i`` back out.
+  * **refresh queries** (``pagerank``, ``cc``, ``kcore``,
+    ``triangles``): no root; ONE launch serves every refresh query of
+    the same key that is pending at dispatch time (they all want the
+    same answer), recorded as ``bucket=0``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import registry
+from repro.core.registry import program_label
+
+
+@dataclass(frozen=True)
+class QueryKey:
+    """The coalescing identity of a query: program + bound params."""
+
+    algo: str
+    variant: str
+    params: tuple = ()                  # sorted (name, value) pairs
+
+    @property
+    def label(self) -> str:
+        return program_label(self.algo, self.variant)
+
+    @property
+    def spec(self):
+        return registry.get_spec(self.algo, self.variant)
+
+    @property
+    def rooted(self) -> bool:
+        return bool(self.spec.inputs)
+
+
+def make_key(algo: str, variant: str | None = None, **params) -> QueryKey:
+    """Resolve through the registry (so ``"bfs/fast"`` shorthand and
+    default variants work, and unknown programs fail at admission with
+    the registered-key list, not at dispatch)."""
+    spec = registry.get_spec(algo, variant)
+    unknown = set(params) - set(spec.defaults)
+    if unknown:
+        raise TypeError(
+            f"{spec.key}: unknown params {sorted(unknown)}; "
+            f"accepted: {sorted(spec.defaults)}")
+    return QueryKey(spec.algo, spec.variant, tuple(sorted(params.items())))
+
+
+@dataclass
+class Query:
+    """One admitted query.  ``qid`` / ``t_submit`` are assigned by the
+    server at admission; ``t_submit`` doubles as the latency clock start
+    (trace replay passes the intended arrival time instead)."""
+
+    key: QueryKey
+    root: int | None = None
+    qid: int = -1
+    t_submit: float = 0.0
+
+    def __post_init__(self):
+        if self.key.rooted and self.root is None:
+            raise ValueError(
+                f"{self.key.label} takes inputs {self.key.spec.inputs}; "
+                "a source query needs root=")
+        if not self.key.rooted and self.root is not None:
+            raise ValueError(
+                f"{self.key.label} takes no per-query inputs; "
+                f"root={self.root} would be silently ignored")
+
+
+def query(algo: str, variant: str | None = None, *,
+          root: int | None = None, **params) -> Query:
+    """Convenience constructor: ``query("bfs", root=7)``."""
+    return Query(make_key(algo, variant, **params), root)
+
+
+@dataclass
+class QueryResult:
+    """Demultiplexed per-query answer.
+
+    ``fields`` maps the program's ``output_names`` to gathered host
+    arrays — ``(n_orig,)`` for vertex fields, scalars for scalars —
+    exactly what a direct ``engine.program(...)`` call plus
+    ``gather_vertex_field`` yields.  Refresh queries coalesced into one
+    launch SHARE the fields dict; treat it as read-only.
+    """
+
+    qid: int
+    key: QueryKey
+    root: int | None
+    fields: dict
+    rounds: int
+    latency_s: float
+    bucket: int                         # launch batch width; 0 = refresh
+
+    def __getitem__(self, name: str):
+        return self.fields[name]

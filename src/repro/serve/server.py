@@ -1,0 +1,207 @@
+"""The resident-engine graph server.
+
+``GraphServer`` keeps a :class:`~repro.core.api.GraphEngine` and its
+device-resident graph alive across queries and drives mixed-algorithm
+traffic through the engine's compile cache:
+
+  admission  ``submit()`` validates against the registry, stamps
+             ``(qid, t_submit)`` and queues per coalescing key.
+  coalescing ``core.serve.coalescer``: source queries pack into the
+             bucket ladder (padding with duplicate roots) so every
+             launch hits an already-compiled ``batch=bucket`` program;
+             refresh queries of one key share a single launch.
+  execution  ``DoubleBufferedExecutor``: launches dispatch
+             asynchronously and up to ``depth`` ride in flight, so
+             host-side batch formation overlaps device execution; the
+             pipeline blocks only at demux.
+  demux      per-query answers slice back out of the batched
+             ``(P, B, n_local)`` outputs into host-side
+             :class:`QueryResult`\\ s, identical to what a direct
+             ``engine.program(...)`` call returns (the conformance
+             gate in ``tests/test_serve.py`` pins this bit-exactly).
+
+Synchronous by construction: ``pump()`` advances the pipeline one step
+and the caller owns the loop (``serve`` for a closed-loop query list,
+``serve_trace`` to replay a timed arrival trace in real time).  No
+threads — JAX's async dispatch provides the only concurrency that
+matters here, device/host overlap.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.api import GraphEngine
+from repro.serve.coalescer import Batch, BucketLadder, Coalescer
+from repro.serve.executor import DoubleBufferedExecutor, Launch
+from repro.serve.metrics import ServeMetrics
+from repro.serve.query import Query, QueryKey, QueryResult, make_key
+
+
+class GraphServer:
+    def __init__(self, engine: GraphEngine, *, buckets=None, depth: int = 2):
+        self.engine = engine
+        self.garr = engine.device_graph()      # resident device graph
+        self.ladder = BucketLadder(buckets) if buckets else BucketLadder()
+        self.coalescer = Coalescer(self.ladder)
+        self.executor = DoubleBufferedExecutor(depth)
+        self.metrics = ServeMetrics()
+        # mailbox of demuxed-but-uncollected answers: serve()/
+        # serve_trace() POP what they return, so a long-running server
+        # holds only results nobody has picked up yet (callers driving
+        # submit/pump directly should pop too — vertex fields are
+        # (n_orig,) arrays and an unbounded dict is an OOM over hours
+        # of traffic)
+        self.results: dict[int, QueryResult] = {}
+        self._next_qid = 0
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, algo: str, variant: str | None = None, *,
+               root: int | None = None, **params) -> int:
+        """Admit one query; returns its qid (resolved in ``results``)."""
+        return self.submit_query(
+            Query(make_key(algo, variant, **params), root))
+
+    def submit_query(self, q: Query, t_submit: float | None = None) -> int:
+        if q.qid != -1:
+            # admission stamps the object in place; re-submitting it
+            # would re-stamp it and orphan the first qid's result
+            raise ValueError(
+                f"query already admitted as qid={q.qid}; build a fresh "
+                "Query to resubmit")
+        q.qid, self._next_qid = self._next_qid, self._next_qid + 1
+        q.t_submit = time.perf_counter() if t_submit is None else t_submit
+        self.metrics.start()
+        self.coalescer.admit(q)
+        return q.qid
+
+    # -- warmup --------------------------------------------------------------
+    def warmup(self, keys) -> int:
+        """Compile and run once every (key x ladder rung) so serving
+        never pays a trace or compile; returns the launch count.  Source
+        keys warm every bucket; refresh keys warm the single unbatched
+        program.  Warmup launches bypass the metrics window."""
+        launches = 0
+        for key in keys:
+            if isinstance(key, str):
+                key = make_key(key)
+            buckets = self.ladder.sizes if key.rooted else (0,)
+            for b in buckets:
+                batch = Batch(key, [], b, [0] * b)
+                out = self._dispatch(batch)
+                # warming mid-serving may retire REAL in-flight
+                # launches to free slots: demux them, don't drop them
+                for launch in self.executor.push(batch, out):
+                    self._demux(launch)
+                launches += 1
+        for launch in self.executor.drain():
+            self._demux(launch)
+        return launches
+
+    # -- the pipeline --------------------------------------------------------
+    def pump(self) -> list[QueryResult]:
+        """Advance one step: form + dispatch one batch if any query is
+        pending (retiring the oldest launch when the pipeline is full),
+        else retire one in-flight launch.  Returns completed results."""
+        batch = self.coalescer.next_batch()
+        if batch is not None:
+            out = self._dispatch(batch)
+            retired = self.executor.push(batch, out)
+        else:
+            launch = self.executor.complete_one()
+            retired = [launch] if launch else []
+        done = []
+        for launch in retired:
+            done.extend(self._demux(launch))
+        return done
+
+    def drain(self) -> list[QueryResult]:
+        """Run the pipeline dry: every pending query dispatched, every
+        in-flight launch demuxed."""
+        done = []
+        while self.coalescer.has_pending() or len(self.executor):
+            done.extend(self.pump())
+        self.metrics.stop()
+        return done
+
+    def serve(self, queries) -> list[QueryResult]:
+        """Closed loop: admit everything, drain, return (and collect
+        from the mailbox) results in submission order."""
+        qids = [self.submit_query(q) for q in queries]
+        self.drain()
+        return [self.results.pop(qid) for qid in qids]
+
+    def serve_trace(self, trace) -> list[QueryResult]:
+        """Replay a timed arrival trace (``[(t_s, Query)]``, as built by
+        ``serve.workload.synthetic_trace``) in real time: a query is
+        admitted when its arrival time passes; between arrivals the
+        pipeline keeps pumping, so queued work and in-flight launches
+        overlap the wait.  Latency runs from the intended arrival."""
+        trace = sorted(trace, key=lambda e: e[0])
+        t0 = time.perf_counter()
+        done, i = [], 0
+        while i < len(trace) or self.coalescer.has_pending() \
+                or len(self.executor):
+            now = time.perf_counter() - t0
+            while i < len(trace) and trace[i][0] <= now:
+                self.submit_query(trace[i][1], t_submit=t0 + trace[i][0])
+                i += 1
+            if self.coalescer.has_pending() or len(self.executor):
+                for res in self.pump():
+                    self.results.pop(res.qid, None)   # collected here
+                    done.append(res)
+            elif i < len(trace):
+                time.sleep(min(trace[i][0] - now, 0.005))
+        self.metrics.stop()
+        return done
+
+    # -- dispatch / demux ----------------------------------------------------
+    def _program(self, key: QueryKey, bucket: int):
+        return self.engine.program(
+            key.algo, key.variant, batch=bucket or None, **dict(key.params))
+
+    def _dispatch(self, batch: Batch):
+        prog = self._program(batch.key, batch.bucket)
+        if batch.bucket:
+            return prog(self.garr, jnp.asarray(batch.roots, jnp.int32))
+        return prog(self.garr)
+
+    def _demux(self, launch: Launch) -> list[QueryResult]:
+        batch = launch.payload
+        if not batch.queries:              # warmup launch: nothing to slice
+            return []
+        prog = self._program(batch.key, batch.bucket)
+        names = prog.program.output_names
+        is_vertex = prog.program.output_is_vertex
+        *outs, rounds = launch.out
+        eng = self.engine
+        if batch.bucket:
+            # drop padded dup-root lanes ON DEVICE so the host copy in
+            # this (only) synchronous section is proportional to real
+            # queries, not the bucket width
+            k = batch.n_real
+            gathered = [eng.gather_batched_vertex_field(o[:, :k]) if v
+                        else np.asarray(o)[:k]
+                        for o, v in zip(outs, is_vertex)]
+            rounds = np.asarray(rounds[:k])
+            per_query = [
+                ({n: g[i] for n, g in zip(names, gathered)}, int(rounds[i]))
+                for i in range(batch.n_real)]
+        else:
+            shared = {n: (eng.gather_vertex_field(o) if v
+                          else np.asarray(o)[()])
+                      for n, (o, v) in zip(names, zip(outs, is_vertex))}
+            per_query = [(shared, int(rounds))] * batch.n_real
+        results = []
+        for q, (fields, r) in zip(batch.queries, per_query):
+            res = QueryResult(
+                qid=q.qid, key=q.key, root=q.root, fields=fields, rounds=r,
+                latency_s=launch.t_done - q.t_submit, bucket=batch.bucket)
+            self.metrics.record(q.key.label, batch.bucket, res.latency_s)
+            self.results[q.qid] = res
+            results.append(res)
+        return results

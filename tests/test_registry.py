@@ -89,6 +89,20 @@ def test_shorthand_and_default_variants(tiny_engine):
         eng.program("bfs", "fast", bogus_param=1)
 
 
+def test_unknown_program_error_lists_registered_keys():
+    """An unknown algo/variant must raise naming the registered keys
+    (at least bfs and pagerank), not a bare KeyError."""
+    for bad in ("nope", ("bfs", "nope"), "bfs/nope", "pagerank/nope"):
+        with pytest.raises(KeyError) as ei:
+            if isinstance(bad, tuple):
+                registry.get_spec(*bad)
+            else:
+                registry.get_spec(bad)
+        msg = str(ei.value)
+        assert "bfs" in msg and "pagerank" in msg, msg
+        assert "registered programs" in msg, msg
+
+
 def test_register_default_claims():
     """The implicit default is the FIRST registered variant; an explicit
     default=True overrides it; a SECOND explicit claim for the same algo

@@ -1,0 +1,281 @@
+"""The query-serving subsystem: coalescer/executor unit behaviour, the
+no-retrace guarantee the bucket ladder relies on, and the end-to-end
+conformance gate — served answers must be bit-identical to direct
+``GraphEngine.program()`` calls for EVERY query type the server accepts
+(every registered program: source queries and refresh queries alike).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import run_with_devices
+from repro.core import GraphEngine, partition_graph, registry
+from repro.graphs import urand_edges
+from repro.launch.mesh import make_graph_mesh
+from repro.serve import (
+    BucketLadder,
+    Coalescer,
+    DoubleBufferedExecutor,
+    GraphServer,
+    Query,
+    make_key,
+    parse_mix,
+    query,
+    synthetic_trace,
+    zipf_root_sampler,
+)
+
+ALL_PAIRS = sorted(registry.available())
+
+
+@pytest.fixture(scope="module")
+def served():
+    n, e = 768, 6144
+    edges = urand_edges(n, e, seed=13)
+    g = partition_graph(edges, n, parts=1)
+    eng = GraphEngine(g, make_graph_mesh(1))
+    server = GraphServer(eng, buckets=(4,))
+    return n, eng, eng.device_graph(), server
+
+
+# -- coalescer -----------------------------------------------------------
+
+
+def test_bucket_ladder_pick():
+    ladder = BucketLadder((1, 8, 32, 128))
+    assert [ladder.pick(k) for k in (1, 2, 8, 9, 32, 129, 500)] == \
+        [1, 8, 8, 32, 32, 128, 128]
+    with pytest.raises(ValueError):
+        BucketLadder(())
+    with pytest.raises(ValueError):
+        BucketLadder((0, 8))
+
+
+def test_coalescer_packs_and_pads():
+    co = Coalescer(BucketLadder((1, 4)))
+    for root in (5, 6, 7):
+        co.admit(Query(make_key("bfs"), root))
+    co.admit(Query(make_key("pagerank")))
+    co.admit(Query(make_key("pagerank")))
+    assert co.pending_count() == 5
+    b1 = co.next_batch()                   # bfs queries are oldest
+    assert b1.key.label == "bfs_fast" and b1.bucket == 4
+    assert b1.n_real == 3 and b1.roots == [5, 6, 7, 7]   # dup-root padding
+    b2 = co.next_batch()                   # both refreshes share one launch
+    assert b2.key.label == "pagerank_fast" and b2.bucket == 0
+    assert b2.n_real == 2 and b2.roots == []
+    assert co.next_batch() is None and not co.has_pending()
+
+
+def test_coalescer_overflow_chunks_at_top_bucket():
+    co = Coalescer(BucketLadder((1, 4)))
+    for root in range(11):
+        co.admit(Query(make_key("sssp"), root))
+    sizes = []
+    while co.has_pending():
+        b = co.next_batch()
+        sizes.append((b.bucket, b.n_real))
+    assert sizes == [(4, 4), (4, 4), (4, 3)]
+
+
+def test_query_validation():
+    with pytest.raises(ValueError, match="needs root"):
+        query("bfs")
+    with pytest.raises(ValueError, match="no per-query inputs"):
+        query("pagerank", root=3)
+    with pytest.raises(KeyError, match="registered programs"):
+        query("nope", root=3)
+    with pytest.raises(TypeError, match="unknown params"):
+        query("bfs", root=3, bogus=1)
+
+
+# -- executor ------------------------------------------------------------
+
+
+def test_executor_depth_and_order():
+    ex = DoubleBufferedExecutor(depth=2)
+    assert ex.push("a", jnp.zeros(4)) == []
+    assert ex.push("b", jnp.zeros(4)) == []          # 2 in flight: no block
+    done = ex.push("c", jnp.zeros(4))                # full: retires oldest
+    assert [l.payload for l in done] == ["a"]
+    assert [l.payload for l in ex.drain()] == ["b", "c"]
+    assert len(ex) == 0 and ex.complete_one() is None
+    with pytest.raises(ValueError):
+        DoubleBufferedExecutor(depth=0)
+
+
+# -- the no-retrace guarantee the ladder relies on -----------------------
+
+
+def test_batch_defaults_pin_vmap_friendly_params(served):
+    """Batched builds merge ProgramSpec.batch_defaults (bfs/fast pins
+    direction='pull' so the per-lane push/pull cond doesn't run both
+    branches under vmap); an explicit caller param resolves to the SAME
+    cache entry, and overriding it back to adaptive is a distinct one."""
+    _, eng, garr, _ = served
+    auto = eng.program("bfs", "fast", batch=4)
+    assert eng.program("bfs", "fast", batch=4, direction="pull") is auto
+    adaptive = eng.program("bfs", "fast", batch=4, direction="adaptive")
+    assert adaptive is not auto
+    # both directions produce bit-identical parents
+    roots = jnp.asarray([1, 5, 9, 700], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(auto(garr, roots)[0]),
+                                  np.asarray(adaptive(garr, roots)[0]))
+    # single-source builds keep the adaptive default (no batch merge)
+    single = eng.program("bfs", "fast")
+    assert single is eng.program("bfs", "fast", direction="adaptive")
+
+
+def test_bucket_ladder_no_retrace(served):
+    """After warmup, every ladder rung resolves to the SAME cached
+    CompiledProgram on every launch and jit holds exactly one trace —
+    the property that makes coalesced serving free of re-tracing."""
+    _, eng, garr, _ = served
+    for bucket in (1, 4, 8):
+        prog = eng.program("bfs", "fast", batch=bucket)
+        roots = jnp.arange(bucket, dtype=jnp.int32)
+        prog(garr, roots)
+        prog(garr, roots + 1)              # fresh operands, same trace
+        assert eng.program("bfs", "fast", batch=bucket) is prog
+        assert prog.trace_cache_size() == 1, \
+            f"bucket {bucket} re-traced across launches"
+
+
+# -- end-to-end conformance ----------------------------------------------
+
+
+@pytest.mark.parametrize("algo,variant", ALL_PAIRS)
+def test_served_matches_direct(served, algo, variant):
+    """The acceptance gate: a served query's fields are bit-identical to
+    a direct engine.program() call, for every registered query type.
+    Source queries ride a padded batch=4 launch; refresh queries ride a
+    shared unbatched launch."""
+    _, eng, garr, server = served
+    spec = registry.get_spec(algo, variant)
+    root = 7 if spec.inputs else None
+    res = server.serve([Query(make_key(f"{algo}/{variant}"), root)])[0]
+    assert res.bucket == (4 if spec.inputs else 0)
+    assert res.rounds > 0
+
+    direct_args = (garr,) + ((jnp.int32(root),) if spec.inputs else ())
+    *outs, rounds = eng.program(algo, variant)(*direct_args)
+    assert res.rounds == int(rounds)
+    prog = eng.program(algo, variant)
+    for name, is_v, out in zip(prog.program.output_names,
+                               prog.program.output_is_vertex, outs):
+        want = (eng.gather_vertex_field(out) if is_v
+                else np.asarray(out)[()])
+        np.testing.assert_array_equal(
+            res[name], want,
+            err_msg=f"{algo}/{variant} field {name!r}: served != direct")
+
+
+def test_refresh_queries_share_one_launch(served):
+    """Concurrent refresh queries of one key are deduplicated into a
+    single launch whose result every query shares."""
+    _, _, _, server = served
+    a, b = server.serve([query("cc"), query("cc")])
+    assert a.bucket == b.bucket == 0
+    assert a.fields is b.fields            # same launch, shared demux
+
+
+def test_resubmitting_a_stamped_query_is_rejected(served):
+    """submit stamps the Query object in place; submitting the same
+    object twice would re-stamp it and orphan the first result."""
+    _, _, _, server = served
+    q = query("bfs", root=2)
+    with pytest.raises(ValueError, match="already admitted"):
+        server.serve([q, q])
+    server.drain()                         # flush the first admission
+    server.results.pop(q.qid, None)
+
+
+def test_serve_collects_results_from_mailbox(served):
+    """serve() pops what it returns: a long-running server must not
+    accumulate every (n_orig,)-field result forever."""
+    _, _, _, server = served
+    res = server.serve([query("bfs", root=2), query("cc")])
+    assert all(r.qid not in server.results for r in res)
+
+
+def test_warmup_mid_traffic_demuxes_inflight(served):
+    """Warming a new program while real launches are in flight must
+    demux the launches it retires, not drop them."""
+    _, eng, _, _ = served
+    server = GraphServer(eng, buckets=(4,), depth=1)
+    qid = server.submit("bfs", root=3)
+    server.pump()                          # real launch now in flight
+    server.warmup(["kcore"])               # retires it to free the slot
+    assert qid in server.results, "in-flight result dropped by warmup"
+    assert server.results.pop(qid).key.label == "bfs_fast"
+
+
+def test_mixed_stream_all_answered(served):
+    """A mixed closed-loop stream resolves every qid, in submission
+    order, and per-(algo, bucket) metrics cover the traffic."""
+    _, _, _, server = served
+    qs = [query("bfs", root=1), query("sssp", root=2), query("cc"),
+          query("bfs", root=3), query("bfs", root=9), query("sssp", root=4)]
+    results = server.serve(qs)
+    assert [r.qid for r in results] == [q.qid for q in qs]
+    assert all(r.latency_s > 0 for r in results)
+    cells = {(r["algo"], r["bucket"]) for r in server.metrics.rows()}
+    assert ("bfs_fast", 4) in cells and ("cc", 0) in cells
+
+
+# -- workload generator --------------------------------------------------
+
+
+def test_workload_generator():
+    mix = parse_mix("bfs:8, sssp:4 ,cc:1")
+    assert [(k.label, w) for k, w in mix] == \
+        [("bfs_fast", 8.0), ("sssp", 4.0), ("cc", 1.0)]
+    trace = synthetic_trace(1 << 10, "bfs:8,sssp:4,cc:1", rate=500,
+                            duration=1.0, seed=3)
+    assert trace and all(0 <= t < 1.0 for t, _ in trace)
+    assert [t for t, _ in trace] == sorted(t for t, _ in trace)
+    for _, q in trace:
+        assert (q.root is not None) == q.key.rooted
+        if q.root is not None:
+            assert 0 <= q.root < (1 << 10)
+    # same seed -> same trace; zipf skew -> repeated hot roots
+    trace2 = synthetic_trace(1 << 10, "bfs:8,sssp:4,cc:1", rate=500,
+                             duration=1.0, seed=3)
+    assert [(t, q.key, q.root) for t, q in trace] == \
+        [(t, q.key, q.root) for t, q in trace2]
+    sample = zipf_root_sampler(1 << 16, s=1.1, seed=0)
+    roots = sample(size=4096)
+    top_share = np.bincount(roots).max() / 4096
+    assert top_share > 0.01                # a hot vertex exists
+
+
+@pytest.mark.slow
+def test_served_parity_multi_partition():
+    """Served-vs-direct parity holds at parts=2 too (the server demuxes
+    (P, B, n_local) outputs across real partitions)."""
+    out = run_with_devices("""
+import numpy as np, jax.numpy as jnp
+from repro.core import GraphEngine, partition_graph
+from repro.graphs import urand_edges
+from repro.launch.mesh import make_graph_mesh
+from repro.serve import GraphServer, query
+
+n, e = 1024, 8192
+edges = urand_edges(n, e, seed=5)
+g = partition_graph(edges, n, parts=2)
+eng = GraphEngine(g, make_graph_mesh(2))
+garr = eng.device_graph()
+server = GraphServer(eng, buckets=(1, 4))
+res = server.serve([query("bfs", root=3), query("bfs", root=700),
+                    query("sssp", root=3), query("pagerank")])
+p, _ = eng.program("bfs", "fast")(garr, jnp.int32(700))
+np.testing.assert_array_equal(res[1]["parents"], eng.gather_vertex_field(p))
+d, _ = eng.program("sssp")(garr, jnp.int32(3))
+np.testing.assert_array_equal(res[2]["dist"], eng.gather_vertex_field(d))
+r, _, _ = eng.program("pagerank")(garr)
+np.testing.assert_array_equal(res[3]["rank"], eng.gather_vertex_field(r))
+print("SERVE-PARITY OK")
+""", devices=2)
+    assert "SERVE-PARITY OK" in out
