@@ -3,7 +3,7 @@ the committed baselines (``git show HEAD:<artifact>`` by default).
 
   PYTHONPATH=src python -m benchmarks.compare [--threshold 1.25]
 
-Two artifacts are gated:
+Three artifacts are gated:
 
   * ``BENCH_graph.json`` — direct program launches; rows join per
     (algo, variant, graph, parts) and fail when new/old wall-time
@@ -11,8 +11,11 @@ Two artifacts are gated:
   * ``BENCH_serve.json`` — the query-serving path; rows join per
     (algo, bucket) and fail when queries/sec DROPS by more than the
     threshold (old/new qps ratio).
+  * ``BENCH_mutate.json`` — the dynamic-graph path (batched mutation
+    apply + warm-vs-cold PageRank recompute); graph-shaped rows, same
+    wall-time rule as BENCH_graph.json.
 
-Both share the guards against false alarms:
+All share the guards against false alarms:
 
   * rows measured under DIFFERENT configurations are never
     hard-compared — the meta records dispatch (``localops`` /
@@ -48,6 +51,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 GRAPH_ARTIFACT = "BENCH_graph.json"
 SERVE_ARTIFACT = "BENCH_serve.json"
+MUTATE_ARTIFACT = "BENCH_mutate.json"
 
 
 def _graph_key(r: dict) -> tuple:
@@ -177,8 +181,8 @@ def gate_artifact(name: str, baseline: str, current: str, threshold: float,
         return 0
     if loaded_new is None:
         if not required:
-            print(f"[compare] current {name} missing; run the "
-                  f"{'serve' if serve else 'graph'} bench to gate it")
+            print(f"[compare] current {name} missing; run its bench "
+                  "to gate it")
             return 0
         print(f"[compare] current rows for {name} missing; run "
               "benchmarks first", file=sys.stderr)
@@ -230,7 +234,11 @@ def main(argv=None) -> int:
         SERVE_ARTIFACT, _sibling_source(args.baseline, SERVE_ARTIFACT),
         _sibling_source(args.current, SERVE_ARTIFACT),
         args.threshold, args.min_ms, serve=True, required=False)
-    return rc or rc_serve
+    rc_mutate = gate_artifact(
+        MUTATE_ARTIFACT, _sibling_source(args.baseline, MUTATE_ARTIFACT),
+        _sibling_source(args.current, MUTATE_ARTIFACT),
+        args.threshold, args.min_ms, serve=False, required=False)
+    return rc or rc_serve or rc_mutate
 
 
 if __name__ == "__main__":

@@ -71,11 +71,16 @@ print("RESULT " + json.dumps({{
 
 
 def algo_variants(algo: str) -> list[str]:
-    """Registered variants of ``algo``, read in a subprocess so the
-    harness process never imports jax (each bench point must set its own
-    XLA_FLAGS device count before first jax import)."""
+    """Registered variants of ``algo`` whose inputs are all scalar, read
+    in a subprocess so the harness process never imports jax (each bench
+    point must set its own XLA_FLAGS device count before first jax
+    import).  Seeded incremental variants are excluded — their bench
+    lives in bench_mutate.py where a previous epoch exists to seed from;
+    a cold-seeded run here would just re-measure the static variant."""
     code = ("import json\nfrom repro.core import registry\n"
-            f"print(json.dumps(registry.variants({algo!r})))")
+            f"print(json.dumps([v for v in registry.variants({algo!r}) "
+            f"if all(k == 'scalar' for k in "
+            f"registry.get_spec({algo!r}, v).input_kinds)]))")
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     r = subprocess.run([sys.executable, "-c", code], env=env,

@@ -1,0 +1,66 @@
+"""Dynamic graphs in ~50 lines: mutate the served graph in place and
+recompute incrementally from the previous snapshot epoch.
+
+The server keeps the partitioned graph device-resident; a batched edge
+insert/delete patches the blocked-ELL + COO shards' free slots (no
+re-partition, no re-upload, nothing re-traces) and opens a new snapshot
+epoch.  Seeded programs — ``pagerank/warm``, ``cc/incremental``,
+``kcore/incremental`` — then warm-restart from the previous epoch's
+served answers wherever that stays exact, instead of recomputing cold.
+
+  PYTHONPATH=src python examples/mutate_stream.py
+
+For mutation batches merged into sustained synthetic traffic see
+``python -m repro.launch.graph_serve --mutate-every 1 --mutate-size 64``.
+"""
+
+import numpy as np
+
+from repro.core import GraphEngine, partition_graph
+from repro.graphs import urand_edges
+from repro.launch.mesh import make_graph_mesh
+from repro.serve import GraphServer, MutationBatch, query
+
+n, e = 4096, 32900                      # e not a multiple of 128: the
+edges = urand_edges(n, e, seed=1)       # COO rounding slack (here 124
+g = partition_graph(edges, n, parts=1)  # slots) is the insert headroom
+eng = GraphEngine(g, make_graph_mesh(1))
+server = GraphServer(eng, buckets=(1, 4))
+
+# -- epoch 0: static answers (also stores the warm seeds) ----------------
+res = server.serve([query("pagerank"), query("cc"), query("kcore")])
+print(f"epoch 0: pagerank {res[0].rounds} rounds, "
+      f"cc {res[1].rounds} rounds, kcore kmax={int(res[2]['kmax'])}")
+
+# -- mutate: delete 64 live edges, insert 64 fresh ones ------------------
+dyn = server.dynamic_graph()
+rng = np.random.default_rng(0)
+deletes = dyn.sample_deletable(64, rng)
+inserts = dyn.sample_insertable(64, rng)
+stats = server.mutate(inserts=inserts, deletes=deletes)
+print(f"epoch {stats.epoch}: patched {stats.slots_patched} slots across "
+      f"{stats.arrays_patched} arrays in {stats.apply_s*1e3:.1f} ms "
+      f"(rebuild={stats.rebuild})")
+
+# -- epoch 1: recompute incrementally ------------------------------------
+warm = server.serve([query("pagerank", "warm")])[0]
+cold = server.serve([query("pagerank")])[0]
+print(f"pagerank after mutation: warm restart {warm.rounds} rounds vs "
+      f"cold {cold.rounds} rounds "
+      f"(max |warm-cold| = {np.abs(warm['rank'] - cold['rank']).max():.2e})")
+
+seed, is_warm = server.resolve_seed(query("pagerank", "warm").key)
+print(f"pagerank seed resolution: warm={is_warm} "
+      f"(any mutation kind keeps the fixed point reachable)")
+seed, is_warm = server.resolve_seed(query("cc", "incremental").key)
+print(f"cc seed resolution: warm={is_warm} "
+      f"(the batch contained deletes, so cc falls back to its cold seed "
+      f"— still exact, just full-rate)")
+
+# -- mutation batches inside a timed trace -------------------------------
+trace = [(0.00, query("cc")),
+         (0.01, MutationBatch(deletes=dyn.sample_deletable(32, rng))),
+         (0.02, query("cc"))]
+a, b = sorted(server.serve_trace(trace), key=lambda r: r.epoch)
+print(f"trace replay: cc answered at epoch {a.epoch} and epoch {b.epoch}; "
+      f"labels differ: {bool((a['labels'] != b['labels']).any())}")

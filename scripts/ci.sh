@@ -14,12 +14,15 @@
 # localops dispatch layer routes production hot loops through those
 # kernels.
 #
-# The fast benches write BENCH_graph.json (direct launches) and
+# The fast benches write BENCH_graph.json (direct launches),
 # BENCH_serve.json (the query-serving path: queries/sec + latency per
-# (algo, bucket) cell) at the repo root so both perf trajectories are
-# tracked across PRs, and benchmarks/compare.py gates the fresh rows
-# against the committed ones (>1.25x wall-time growth or queries/sec
-# drop on any cell fails CI).
+# (algo, bucket) cell) and BENCH_mutate.json (the dynamic-graph path:
+# in-place mutation apply + warm-vs-cold recompute rounds) at the repo
+# root so all three perf trajectories are tracked across PRs, and
+# benchmarks/compare.py gates the fresh rows against the committed ones
+# (>1.25x wall-time growth or queries/sec drop on any cell fails CI).
+# bench_mutate additionally fails outright when the PageRank warm
+# restart stops beating the cold start on rounds-to-converge.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -44,6 +47,11 @@ echo "== serve bench: benchmarks.bench_serve --fast =="
 python -m benchmarks.bench_serve --fast
 
 test -f BENCH_serve.json || { echo "BENCH_serve.json missing" >&2; exit 1; }
+
+echo "== mutate bench: benchmarks.bench_mutate --fast =="
+python -m benchmarks.bench_mutate --fast
+
+test -f BENCH_mutate.json || { echo "BENCH_mutate.json missing" >&2; exit 1; }
 
 echo "== bench regression gate: benchmarks.compare (vs committed rows) =="
 python -m benchmarks.compare --threshold 1.25

@@ -25,12 +25,17 @@ URAND22 = GraphConfig("urand22", scale=22)
 URAND25 = GraphConfig("urand25", scale=25)
 URAND28 = GraphConfig("urand28", scale=28)
 
-# RMAT (GAP 'kron'-style) for skewed-degree stress
+# RMAT (GAP 'kron'-style) for skewed-degree stress.  rmat12/rmat16 are
+# the benchmark-scale points (runnable here, same rungs as urand12/16);
+# the skewed tail is what stresses the blocked-ELL bucket ladder and
+# the dynamic-graph free-slot pools.
+RMAT12 = GraphConfig("rmat12", scale=12, generator="rmat")
+RMAT16 = GraphConfig("rmat16", scale=16, generator="rmat")
 RMAT18 = GraphConfig("rmat18", scale=18, generator="rmat")
 RMAT20 = GraphConfig("rmat20", scale=20, generator="rmat")
 
 ALL = {
     g.name: g
     for g in (URAND12, URAND16, URAND18, URAND20, URAND22, URAND25,
-              URAND28, RMAT18, RMAT20, SW12, SW16)
+              URAND28, RMAT12, RMAT16, RMAT18, RMAT20, SW12, SW16)
 }

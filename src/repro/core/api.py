@@ -37,6 +37,13 @@ from repro.core.superstep import run_program, run_program_batched
 
 P = jax.sharding.PartitionSpec
 
+# jnp dtype of each registry input kind; "scalar" inputs are replicated
+# per-query values, vertex kinds are (P, n_local) sharded fields (the
+# warm seeds of the incremental variants)
+_KIND_DTYPE = {"scalar": jnp.int32,
+               "vertex_i32": jnp.int32,
+               "vertex_f32": jnp.float32}
+
 
 def _graph_specs(g: GraphShards, layout: str):
     return {k: P("parts", None) for k in g.abstract_arrays(layout)}
@@ -110,6 +117,10 @@ class GraphEngine:
             raise ValueError(
                 f"{spec.key} takes no per-query inputs; batch="
                 f"{batch} has nothing to vmap over")
+        if batch is not None and any(k != "scalar" for k in spec.input_kinds):
+            raise ValueError(
+                f"{spec.key} takes whole vertex-field inputs "
+                f"{spec.inputs}; only scalar per-query inputs batch")
         # normalize params into full (defaults + overrides) form so an
         # explicitly spelled default hits the same cache entry; batched
         # builds additionally merge the spec's vmap-friendly overrides
@@ -120,9 +131,14 @@ class GraphEngine:
         g = self.g
         # the layout and localops mode steer TRACE-time dispatch in
         # core/localops.py, so both belong in the compile-cache key
+        # layout_signature covers the blocked-ELL bucket runs: after a
+        # mutation-overflow rebuild the shard SHAPES can coincide while
+        # the bucket decomposition differs, and the traced per-bucket
+        # loops would silently read the wrong rows on a stale cache hit
         key = (spec.algo, spec.variant, static_iters, batch,
                tuple(sorted(params.items())),
                (g.n, g.n_orig, g.parts, g.n_local, g.e_max),
+               g.layout_signature(),
                (tuple(self.mesh.shape.items()), self.mesh.devices.shape),
                (self.layout, localops.get_mode()))
         hit = self._cache.get(key)
@@ -131,9 +147,12 @@ class GraphEngine:
 
         prog = spec.build(g, **params)
         n_inputs = len(spec.inputs)
+        kinds = spec.input_kinds
 
         def fn(garr, *inputs):
             garr = {k: v[0] for k, v in garr.items()}
+            inputs = tuple(x[0] if kind != "scalar" else x
+                           for x, kind in zip(inputs, kinds))
             if batch is None:
                 outs, rounds = run_program(prog, garr, *inputs,
                                            static_iters=static_iters)
@@ -147,15 +166,18 @@ class GraphEngine:
         vspec = P("parts", None) if batch is None else P("parts", None, None)
         out_specs = tuple(vspec if is_v else P()
                           for is_v in prog.output_is_vertex) + (P(),)
-        in_specs = (_graph_specs(g, self.layout),) + (P(),) * n_inputs
+        in_specs = (_graph_specs(g, self.layout),) + tuple(
+            P() if kind == "scalar" else P("parts", None) for kind in kinds)
         jitted = jax.jit(shard_map(
             fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False))
 
         root_shape = () if batch is None else (batch,)
         abstract_args = (g.abstract_arrays(self.layout),) + tuple(
-            jax.ShapeDtypeStruct(root_shape, jnp.int32)
-            for _ in range(n_inputs))
+            jax.ShapeDtypeStruct(
+                root_shape if kind == "scalar" else (g.parts, g.n_local),
+                _KIND_DTYPE[kind])
+            for kind in kinds)
         compiled = CompiledProgram(spec, prog, jitted, abstract_args)
         self._cache[key] = compiled
         return compiled
@@ -194,6 +216,24 @@ class GraphEngine:
     def gather_vertex_field(self, arr) -> np.ndarray:
         """(P, n_local) sharded -> (n_orig,) numpy."""
         return np.asarray(arr).reshape(-1)[: self.g.n_orig]
+
+    def scatter_vertex_field(self, arr, dtype=None) -> jax.Array:
+        """(n_orig,) host values -> (P, n_local) device vertex field,
+        sharded like the device-graph arrays (the inverse of
+        ``gather_vertex_field``; how warm/cold seeds reach seeded
+        programs).  The padded tail is zero-filled — seeded inits
+        re-normalize it, since padded vertices are edgeless."""
+        g = self.g
+        a = np.asarray(arr)
+        if a.ndim != 1 or a.shape[0] < g.n_orig:
+            raise ValueError(
+                f"vertex field must be 1-D with >= n_orig={g.n_orig} "
+                f"entries, got shape {a.shape}")
+        dt = np.dtype(dtype) if dtype is not None else a.dtype
+        full = np.zeros((g.n,), dt)
+        full[: g.n_orig] = a[: g.n_orig]
+        sh = jax.sharding.NamedSharding(self.mesh, P("parts", None))
+        return jax.device_put(full.reshape(g.parts, g.n_local), sh)
 
     def gather_batched_vertex_field(self, arr) -> np.ndarray:
         """(P, B, n_local) batched sharded -> (B, n_orig) numpy."""

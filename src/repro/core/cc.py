@@ -21,15 +21,34 @@ from repro.core.superstep import SuperstepProgram
 INT_INF = jnp.int32(2 ** 30)
 
 
-def cc_program(shards, max_rounds: int = 64) -> SuperstepProgram:
-    """Label propagation over both edge directions as a superstep program."""
+def cc_program(shards, max_rounds: int = 64,
+               seeded: bool = False) -> SuperstepProgram:
+    """Label propagation over both edge directions as a superstep program.
+
+    With ``seeded=True`` the program becomes the ``cc/incremental``
+    variant: init adopts a per-vertex ``labels0`` input instead of the
+    identity labeling.  Min-propagation converges to
+    ``min over u in component(v) of labels0[u]``, so a warm seed from a
+    previous epoch is EXACT as long as every mutation since only ADDED
+    edges (components only merge, and each old component carries its
+    minimum vertex id on all members); the identity seed reproduces the
+    cold start bit-for-bit.
+    """
     n, n_local = shards.n, shards.n_local
+    n_orig = shards.n_orig
     ell_dst = shards.ell("ell_dst")
     ell_src = shards.ell("ell_src")
 
-    def init(g, *_):
+    def init(g, *inputs):
         lo = jax.lax.axis_index(AXIS) * n_local
-        labels0 = jnp.arange(n_local, dtype=jnp.int32) + lo
+        gid = jnp.arange(n_local, dtype=jnp.int32) + lo
+        if seeded:
+            (labels0,) = inputs
+            # padded tail vertices are edgeless: keep their identity
+            # labels so they stay inert fixed points
+            labels0 = jnp.where(gid < n_orig, labels0.astype(jnp.int32), gid)
+        else:
+            labels0 = gid
         return labels0, jnp.int32(1)
 
     def step(g, state):
@@ -63,7 +82,8 @@ def cc_program(shards, max_rounds: int = 64) -> SuperstepProgram:
         return new_labels, cnt
 
     return SuperstepProgram(
-        name="cc", variant="default", inputs=(),
+        name="cc", variant="incremental" if seeded else "default",
+        inputs=("labels0",) if seeded else (),
         init=init, step=step,
         halt=lambda state: state[1] <= 0,
         outputs=lambda state: (state[0],),

@@ -114,6 +114,70 @@ def _ell_row_base(buckets) -> tuple[np.ndarray, np.ndarray]:
     return base, width
 
 
+def ell_row_layout(buckets) -> tuple[np.ndarray, np.ndarray]:
+    """Public per-row (slot base, width) decomposition of the bucket
+    runs — the free-slot capacity table of the dynamic-mutation path:
+    a row holds ``width[q] - occupancy`` more entries before its bucket
+    overflows (lane rounding + cross-partition width maxing ARE the
+    free-slot pool)."""
+    return _ell_row_base(buckets)
+
+
+def ell_slot_rows(buckets) -> np.ndarray:
+    """(slots,) ELL row of every flat slot position (host-side mutation
+    bookkeeping: maps a patched slot back to the row whose occupancy it
+    changes)."""
+    rows = []
+    r0 = 0
+    for r, k in buckets:
+        if k:
+            rows.append(r0 + np.repeat(np.arange(r, dtype=np.int64), k))
+        r0 += r
+    if not rows:
+        return np.zeros(0, np.int64)
+    return np.concatenate(rows)
+
+
+def ell_occupancy(meta: EllMeta, idx: np.ndarray) -> np.ndarray:
+    """(P, n_rows) occupied-slot counts of a (P, slots) idx array.
+
+    ``build_ell`` packs each row's entries contiguously from its slot
+    base, and the mutation path preserves that invariant (inserts fill
+    at ``base + occ``, deletes compact the tail into the hole), so the
+    count doubles as the next free slot offset."""
+    parts = idx.shape[0]
+    occ = np.zeros((parts, meta.n_rows), np.int64)
+    if meta.slots == 0:
+        return occ
+    s2r = ell_slot_rows(meta.buckets)
+    for p in range(parts):
+        filled = idx[p, :meta.slots] != meta.sentinel
+        occ[p] = np.bincount(s2r[filled], minlength=meta.n_rows)
+    return occ
+
+
+def make_scatter_patch(mesh):
+    """Build the jitted in-place slot patcher for (P, S) graph arrays.
+
+    ``patch(arr, slots, vals)`` writes ``vals[p, i]`` at flat position
+    ``slots[p, i]`` of partition p's row — slot lists are padded to a
+    shared length with -1, which ``mode="drop"`` discards, so batch
+    sizes quantize to a few trace shapes.  The update is FUNCTIONAL on
+    purpose (no donation): launches already in flight keep reading the
+    pre-mutation buffers — that copy-on-write is the snapshot-epoch
+    isolation guarantee — while only the small patch lists ever cross
+    host->device (never the full shards)."""
+    from repro.core.compat import shard_map
+
+    def _patch(arr, slots, vals):
+        return arr[0].at[slots[0]].set(vals[0], mode="drop")[None]
+
+    pspec = jax.sharding.PartitionSpec("parts", None)
+    return jax.jit(shard_map(
+        _patch, mesh=mesh, in_specs=(pspec, pspec, pspec),
+        out_specs=pspec, check_vma=False))
+
+
 def build_ell(name: str, row_ids: np.ndarray, values: np.ndarray,
               n_rows: int, sentinel: int,
               device_suffixes=("idx", "inv")) -> tuple[EllMeta, dict]:
@@ -234,6 +298,17 @@ class GraphShards:
         for meta in self.ell_meta.values():
             for suf in meta.device_suffixes:
                 yield f"{meta.name}_{suf}", meta, suf
+
+    def layout_signature(self) -> tuple:
+        """Hashable fingerprint of the blocked-ELL bucket structure.
+        Part of the engine's compile-cache key: a mutation-overflow
+        rebuild can reproduce every shard SHAPE while the bucket runs
+        (and therefore the traced per-bucket loops) differ, and a stale
+        cache hit would read the wrong rows.  Equal signatures trace
+        identical programs, so sharing the entry is safe."""
+        return tuple(sorted(
+            (m.name, m.n_rows, m.buckets, m.slots, m.sentinel)
+            for m in self.ell_meta.values()))
 
     def device_arrays(self, layout: str = "ell"):
         """jnp views (host->device).  ``layout="coo"`` omits the ELL

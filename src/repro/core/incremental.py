@@ -1,0 +1,146 @@
+"""Incremental recompute programs for the dynamic-graph subsystem.
+
+The dynamic server (``repro.serve.dynamic``) mutates the resident graph
+in place and wants the next answer at less than full-recompute cost.
+The registered incremental variants all share one safety property: they
+are EXACT from their cold seed (``cold_seed``), and a warm seed from a
+previous snapshot epoch is only adopted when the mutation history since
+that epoch provably preserves exactness (``IncrementalSpec.mutations``).
+Correctness therefore never depends on the seed choice — only round
+counts do.
+
+``kcore/incremental`` lives here: local support-decrement peeling.
+Define a vertex's SUPPORT under an assignment ``c`` as the number of
+incident non-loop edges (multigraph, both directions) whose other
+endpoint ``u`` has ``c[u] >= c[v]``.  Each superstep decrements every
+vertex whose support is below its own value:
+
+    cnt[v] = #{incident edges (u, v) : c[u] >= c[v]}
+    c[v]  <- c[v] - 1   where cnt[v] < c[v]
+
+Starting from ANY pointwise upper bound on the true core numbers this
+converges to exactly the core numbers:
+
+  * invariant (``c >= core`` is preserved): if ``c[v] == core[v] = k``
+    and ``c >= core`` everywhere, v has >= k neighbors in the k-core,
+    each with ``c >= core >= k = c[v]`` — so ``cnt[v] >= k`` and v never
+    drops below its core number;
+  * at the fixed point ``c`` is feasible (every v has >= c[v] incident
+    edges with ``c >= c[v]``), and any feasible assignment satisfies
+    ``c <= core``: the vertex set ``{v : c[v] >= k}`` induces min degree
+    >= k, hence sits inside the k-core.
+
+Valid upper bounds: the undirected degree (cold start — this is plain
+peeling, one threshold unit per round) and, after DELETE-only mutation
+batches, the previous epoch's core numbers (cores never grow when edges
+leave), which is the warm restart the dynamic server exploits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import localops
+from repro.core.graph import GraphShards
+from repro.core.partitioned import AXIS, broadcast_global, exchange_sum, \
+    psum_scalar
+from repro.core.superstep import SuperstepProgram
+
+# numpy dtype of each vertex-field input kind (registry.INPUT_KINDS)
+KIND_DTYPES = {"vertex_i32": np.int32, "vertex_f32": np.float32}
+
+
+def kcore_incremental_program(shards,
+                              max_rounds: int = 2048) -> SuperstepProgram:
+    """Support-decrement k-core peeling from a seed upper bound.
+
+    Inputs: ``core0`` — per-vertex upper bound on the core numbers
+    (vertex_i32).  Outputs match ``kcore/default`` (``core``, ``kmax``)
+    so both variants share the conformance referee.
+    """
+    n, n_local, n_orig = shards.n, shards.n_local, shards.n_orig
+    ell_dst = shards.ell("ell_dst")
+    ell_src = shards.ell("ell_src")
+
+    def init(g, *inputs):
+        (core0,) = inputs
+        lo = jax.lax.axis_index(AXIS) * n_local
+        gid = jnp.arange(n_local, dtype=jnp.int32) + lo
+        # padded tail vertices are edgeless (core 0); clamp real seeds
+        # at zero so any non-negative field is a usable bound
+        c0 = jnp.where(gid < n_orig,
+                       jnp.maximum(core0.astype(jnp.int32), 0), 0)
+        return c0, jnp.int32(1)
+
+    def step(g, state):
+        c, _ = state
+        lo = jax.lax.axis_index(AXIS) * n_local
+        cg = broadcast_global(c)                     # all-gather (n,) i32
+        # support contributions, one per incident non-loop edge, posted
+        # toward the endpoint being supported; both combines are
+        # blocked-ELL gather+sums and ONE fused exchange delivers owners
+        srcl, dst = g["out_src_local"], g["out_dst_global"]
+        sup_dst = ((dst < n) & (dst != srcl + lo)
+                   & (cg[srcl + lo] >= cg[dst])).astype(jnp.int32)
+        src, dstl = g["in_src_global"], g["in_dst_local"]
+        sup_src = ((src < n) & (src != dstl + lo)
+                   & (cg[dstl + lo] >= cg[src])).astype(jnp.int32)
+        acc = localops.scatter_combine(
+            g, ell_dst, sup_dst, "add", identity=jnp.int32(0))
+        acc = acc + localops.scatter_combine(
+            g, ell_src, sup_src, "add", identity=jnp.int32(0))
+        cnt = exchange_sum(acc)
+        new_c = jnp.where(cnt < c, c - 1, c)
+        changed = psum_scalar((new_c < c).sum(dtype=jnp.int32))
+        return new_c, changed
+
+    def outputs(state):
+        c, _ = state
+        kmax = jax.lax.pmax(c.max(), AXIS)
+        return c, kmax
+
+    return SuperstepProgram(
+        name="kcore", variant="incremental", inputs=("core0",),
+        init=init, step=step,
+        halt=lambda state: state[1] <= 0,
+        outputs=outputs,
+        output_names=("core", "kmax"),
+        output_is_vertex=(True, False),
+        max_rounds=max_rounds)
+
+
+# ---------------------------------------------------------------------------
+# cold seeds: exact-from-scratch starting vectors, computed host-side
+# from the shard mirrors.  The server falls back to these whenever the
+# mutation history invalidates a stored warm seed.
+# ---------------------------------------------------------------------------
+
+def host_und_degree(g: GraphShards) -> np.ndarray:
+    """(n,) undirected multigraph degree from the host out-shard mirrors
+    (self-loops dropped) — the cold upper bound for k-core peeling."""
+    deg = (g.out_degree.astype(np.int64)
+           + g.in_degree.astype(np.int64)).reshape(-1)
+    lo = (np.arange(g.parts, dtype=np.int64) * g.n_local)[:, None]
+    srcg = g.out_src_local.astype(np.int64) + lo
+    is_loop = (g.out_dst_global < g.n) & (g.out_dst_global == srcg)
+    loops = np.zeros(g.n, np.int64)
+    np.add.at(loops, srcg[is_loop], 1)
+    return deg - 2 * loops
+
+
+def cold_seed(spec, g: GraphShards) -> tuple[np.ndarray, ...]:
+    """Exact-from-scratch seed arrays ((n_orig,), kind dtypes) for an
+    incremental program's vertex inputs: identity labels for cc, the
+    degree bound for k-core, uniform mass for PageRank."""
+    inc = spec.incremental
+    if inc is None:
+        raise ValueError(f"{spec.algo}/{spec.variant} is not incremental")
+    if inc.seed_output == "labels":
+        return (np.arange(g.n_orig, dtype=np.int32),)
+    if inc.seed_output == "core":
+        return (host_und_degree(g)[:g.n_orig].astype(np.int32),)
+    if inc.seed_output == "rank":
+        return (np.full(g.n_orig, 1.0 / g.n_orig, np.float32),)
+    raise ValueError(f"no cold seed rule for output {inc.seed_output!r}")

@@ -7,9 +7,15 @@ of hard-coding algorithm names, so adding a workload is ONE registration
 plus an algorithm module — no per-layer edits.
 
 Registered pairs: ``bfs/bsp``, ``bfs/fast``, ``pagerank/bsp``,
-``pagerank/fast``, ``sssp``, ``cc``, ``triangles``, ``kcore``,
+``pagerank/fast``, ``pagerank/warm``, ``sssp``, ``cc``,
+``cc/incremental``, ``triangles``, ``kcore``, ``kcore/incremental``,
 ``betweenness`` (single-variant algorithms use the ``"default"``
 variant and may be addressed by bare algo name).
+
+Inputs come in KINDS: ``"scalar"`` per-query values (a root vertex,
+batchable through the bucket ladder) and ``"vertex_i32"`` /
+``"vertex_f32"`` whole vertex fields (the warm seeds of the
+incremental variants — one launch each, never vmapped).
 """
 
 from __future__ import annotations
@@ -20,12 +26,34 @@ from typing import Callable
 from repro.core import betweenness as _bc
 from repro.core import bfs as _bfs
 from repro.core import cc as _cc
+from repro.core import incremental as _inc
 from repro.core import kcore as _kcore
 from repro.core import pagerank as _pr
 from repro.core import sssp as _sssp
 from repro.core import triangles as _tri
 from repro.core.graph import GraphShards
 from repro.core.superstep import SuperstepProgram
+
+INPUT_KINDS = ("scalar", "vertex_i32", "vertex_f32")
+
+
+@dataclass(frozen=True)
+class IncrementalSpec:
+    """Dynamic-graph metadata for a warm-seeded program variant.
+
+    ``of`` names the static algorithm this variant refreshes;
+    ``seed_output`` is the output field of ``of``'s programs whose
+    previous-epoch value seeds this one; ``mutations`` states which
+    mutation kinds the WARM seed stays exact under ("insert", "delete",
+    or "any").  Crucially this only gates the seed choice, never
+    correctness: every incremental program is exact from its COLD seed
+    too (``repro.core.incremental.cold_seed``), so an incompatible
+    mutation history just costs a full-rate recompute.
+    """
+
+    of: str
+    seed_output: str
+    mutations: str
 
 
 @dataclass(frozen=True)
@@ -52,6 +80,25 @@ class ProgramSpec:
     # runs BOTH branches and selects), e.g. bfs/fast pins
     # direction="pull".  Explicit caller params always win.
     batch_defaults: dict = field(default_factory=dict)
+    # one kind per entry of ``inputs``; defaults to all-"scalar" so the
+    # pre-existing registrations stay untouched.
+    input_kinds: tuple[str, ...] = ()
+    # set on warm-seeded dynamic-graph variants (see IncrementalSpec)
+    incremental: IncrementalSpec | None = None
+
+    def __post_init__(self):
+        if not self.input_kinds:
+            object.__setattr__(self, "input_kinds",
+                               ("scalar",) * len(self.inputs))
+        if len(self.input_kinds) != len(self.inputs):
+            raise ValueError(
+                f"{self.algo}/{self.variant}: {len(self.inputs)} inputs "
+                f"but {len(self.input_kinds)} input_kinds")
+        bad = set(self.input_kinds) - set(INPUT_KINDS)
+        if bad:
+            raise ValueError(
+                f"{self.algo}/{self.variant}: unknown input kinds "
+                f"{sorted(bad)}; valid: {INPUT_KINDS}")
 
     @property
     def key(self) -> str:
@@ -223,6 +270,41 @@ register(ProgramSpec(
         "exchange; degeneracy rides as a scalar output"), default=True)
 
 register(ProgramSpec(
+    algo="pagerank", variant="warm",
+    make=lambda g, **p: _pr.pagerank_fast_program(g, seeded=True, **p),
+    inputs=("rank0",), input_kinds=("vertex_f32",),
+    defaults={"iters": 300, "tol": 1e-6, "compress": False,
+              "err_every": 1},
+    incremental=IncrementalSpec(of="pagerank", seed_output="rank",
+                                mutations="any"),
+    doc="push-aggregate PageRank warm-restarted from a previous epoch's "
+        "rank vector; same fixed point from any seed, so it is exact "
+        "after ANY mutation batch — the seed only buys fewer rounds"))
+
+register(ProgramSpec(
+    algo="cc", variant="incremental",
+    make=lambda g, **p: _cc.cc_program(g, seeded=True, **p),
+    inputs=("labels0",), input_kinds=("vertex_i32",),
+    defaults={"max_rounds": 128},
+    incremental=IncrementalSpec(of="cc", seed_output="labels",
+                                mutations="insert"),
+    doc="min-label propagation warm-started from a previous epoch's "
+        "labels: exact after insert-only batches (components only "
+        "merge); identity seed = the cold start"))
+
+register(ProgramSpec(
+    algo="kcore", variant="incremental",
+    make=lambda g, **p: _inc.kcore_incremental_program(g, **p),
+    inputs=("core0",), input_kinds=("vertex_i32",),
+    defaults={"max_rounds": 2048},
+    incremental=IncrementalSpec(of="kcore", seed_output="core",
+                                mutations="delete"),
+    doc="local support-decrement peeling from a previous epoch's core "
+        "numbers: exact from ANY pointwise upper bound, so old cores "
+        "are valid after delete-only batches and the degree bound is "
+        "the cold start"))
+
+register(ProgramSpec(
     algo="betweenness", variant="default",
     make=lambda g, **p: _bc.betweenness_program(g, **p),
     inputs=("root",), defaults={"max_levels": 64},
@@ -259,4 +341,24 @@ def algorithms_markdown_table() -> str:
         outs = ", ".join(prog.output_names) + ", rounds"
         lines.append(f"| `{spec.key}`{mark} | {ins} | {params} | {outs} "
                      f"| {spec.doc} |")
+    return "\n".join(lines)
+
+
+def incremental_markdown_table() -> str:
+    """Markdown table of the registered incremental (dynamic-graph)
+    variants, derived from their IncrementalSpec metadata — same
+    drift-test contract as ``algorithms_markdown_table``."""
+    lines = [
+        "| program | refreshes | seed input | warm seed | exact warm after |",
+        "| --- | --- | --- | --- | --- |",
+    ]
+    for algo, variant in available():
+        spec = _REGISTRY[(algo, variant)]
+        inc = spec.incremental
+        if inc is None:
+            continue
+        lines.append(
+            f"| `{spec.key}` | `{inc.of}` | {spec.inputs[0]} "
+            f"({spec.input_kinds[0]}) | previous-epoch `{inc.seed_output}` "
+            f"| {inc.mutations} |")
     return "\n".join(lines)

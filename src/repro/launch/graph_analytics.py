@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import graph_workloads
-from repro.core import GraphEngine, partition_graph, registry
+from repro.core import GraphEngine, incremental, partition_graph, registry
 from repro.core.registry import program_label
 from repro.graphs import generate_edges
 from repro.launch.mesh import make_graph_mesh
@@ -71,7 +71,14 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
             continue
         params = {"iters": pr_iters} if algo == "pagerank" else {}
         prog = eng.program(algo, variant, **params)
-        args = (garr,) + (root,) * len(spec.inputs)
+        if any(k != "scalar" for k in spec.input_kinds):
+            # seeded incremental variants run from their cold seed here
+            # (the warm path needs a previous epoch — that's the server)
+            (seed_arr,) = incremental.cold_seed(spec, g)
+            args = (garr, eng.scatter_vertex_field(
+                seed_arr, incremental.KIND_DTYPES[spec.input_kinds[0]]))
+        else:
+            args = (garr,) + (root,) * len(spec.inputs)
         out, dt = _timed(prog, args)
         results[name] = (out, dt)
         print(f"[graph] {name:14s} {dt*1e3:9.1f} ms")
@@ -80,8 +87,9 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
         roots = jnp.arange(multi_source, dtype=jnp.int32)
         for algo, variant in registry.available():
             spec = registry.get_spec(algo, variant)
-            if not spec.inputs or variant == "bsp":
-                continue          # batch only the traversal fast paths
+            if (not spec.inputs or variant == "bsp"
+                    or any(k != "scalar" for k in spec.input_kinds)):
+                continue          # batch only the rooted traversal fast paths
             if spec.n_budget and g.n > spec.n_budget:
                 continue
             prog = eng.program(algo, variant, batch=multi_source)

@@ -10,6 +10,11 @@ p50/p95/p99 latency per (program, bucket) cell.
   PYTHONPATH=src python -m repro.launch.graph_serve \
       --graph urand16 --parts 2 --mix bfs:8,sssp:4,cc:1 --duration 10
 
+``--mutate-every S --mutate-size K`` merges a timed mutation stream
+(``repro.serve.dynamic.mutation_stream``) into the trace: every S
+seconds a K-edge delete/insert batch applies in place and opens a new
+snapshot epoch, so the replay exercises serving under churn.
+
 (Use XLA_FLAGS=--xla_force_host_platform_device_count=N for --parts N
 on a single host, as with repro.launch.graph_analytics.)
 
@@ -32,13 +37,15 @@ from repro.core import GraphEngine, localops, partition_graph
 from repro.core.compat import runtime_fingerprint
 from repro.graphs import generate_edges
 from repro.launch.mesh import make_graph_mesh
-from repro.serve import GraphServer, parse_mix, synthetic_trace
+from repro.serve import GraphServer, mutation_stream, parse_mix, \
+    synthetic_trace
 
 
 def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
         duration: float = 10.0, rate: float = 64.0, buckets=(1, 8, 32, 128),
         depth: int = 2, zipf_s: float = 1.05, seed: int = 42,
-        layout: str = "ell", json_path: str | None = None):
+        layout: str = "ell", json_path: str | None = None,
+        mutate_every: float = 0.0, mutate_size: int = 64):
     gcfg = graph_workloads.ALL[graph_name]
     print(f"[serve] generating {graph_name}: 2^{gcfg.scale} vertices, "
           f"{gcfg.num_edges:,} edges ({gcfg.generator})")
@@ -59,11 +66,25 @@ def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
 
     trace = synthetic_trace(gcfg.num_vertices, keys, rate=rate,
                             duration=duration, zipf_s=zipf_s, seed=seed)
-    print(f"[serve] replaying {len(trace)} queries over {duration:.0f}s "
-          f"(rate={rate:.0f}/s, mix={mix}, zipf_s={zipf_s})")
+    n_mut = 0
+    if mutate_every > 0:
+        events = mutation_stream(edges, every=mutate_every,
+                                 size=mutate_size, duration=duration,
+                                 seed=seed)
+        trace = trace + events          # serve_trace sorts by time
+        n_mut = len(events)
+        print(f"[serve] merged {n_mut} mutation batches "
+              f"(every {mutate_every:.1f}s, {mutate_size} edges each)")
+    print(f"[serve] replaying {len(trace)-n_mut} queries over "
+          f"{duration:.0f}s (rate={rate:.0f}/s, mix={mix}, "
+          f"zipf_s={zipf_s})")
     results = server.serve_trace(trace)
     print(f"[serve] served {len(results)} queries "
           f"({len(results)/server.metrics.window_s:.1f} q/s overall)")
+    if server.mutation_log:
+        rebuilds = sum(m["rebuild"] for m in server.mutation_log)
+        print(f"[serve] applied {len(server.mutation_log)} mutation "
+              f"batches ({rebuilds} rebuilds); final epoch {server.epoch}")
     print(server.metrics.table())
 
     if json_path:
@@ -73,6 +94,10 @@ def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
                      "buckets": list(server.ladder.sizes), "depth": depth,
                      "zipf_s": zipf_s, "layout": layout,
                      "localops": localops.get_mode(),
+                     "mutate_every": mutate_every,
+                     "mutate_size": mutate_size,
+                     "mutations": len(server.mutation_log),
+                     "final_epoch": server.epoch,
                      **runtime_fingerprint()},
             "rows": server.metrics.rows(),
         }
@@ -111,12 +136,19 @@ def main():
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--json", default=None,
                     help="write metrics rows to this path ('-' = stdout)")
+    ap.add_argument("--mutate-every", type=float, default=0.0,
+                    help="apply a mutation batch every this many seconds "
+                         "(0 = static graph); epochs advance mid-trace")
+    ap.add_argument("--mutate-size", type=int, default=64,
+                    help="edges per mutation batch (alternating "
+                         "delete/insert; see serve.dynamic.mutation_stream)")
     args = ap.parse_args()
     run(args.graph, args.parts, mix=args.mix, duration=args.duration,
         rate=args.rate,
         buckets=tuple(int(b) for b in args.buckets.split(",")),
         depth=args.depth, zipf_s=args.zipf, seed=args.seed,
-        layout=args.layout, json_path=args.json)
+        layout=args.layout, json_path=args.json,
+        mutate_every=args.mutate_every, mutate_size=args.mutate_size)
 
 
 if __name__ == "__main__":

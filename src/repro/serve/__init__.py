@@ -9,13 +9,22 @@ launches double-buffered over JAX async dispatch, and demultiplex
 per-query answers back out — measuring queries/sec and latency
 percentiles per (program, bucket).
 
+The graph is NOT frozen: ``GraphServer.mutate`` applies batched edge
+inserts/deletes in place (``repro.serve.dynamic``) under snapshot-epoch
+versioning, and the seeded incremental programs (``pagerank/warm``,
+``cc/incremental``, ``kcore/incremental``) recompute from the previous
+epoch's served outputs.
+
 CLI: ``python -m repro.launch.graph_serve``; bench:
-``python -m benchmarks.bench_serve`` (writes ``BENCH_serve.json``).
+``python -m benchmarks.bench_serve`` (writes ``BENCH_serve.json``) and
+``python -m benchmarks.bench_mutate`` (writes ``BENCH_mutate.json``).
 The LLM token-serving driver is separate: ``repro.launch.serve``.
 """
 
 from repro.serve.coalescer import Batch, BucketLadder, Coalescer, \
     DEFAULT_BUCKETS
+from repro.serve.dynamic import DynamicGraph, EllOverflow, MutationBatch, \
+    MutationStats, mutation_stream
 from repro.serve.executor import DoubleBufferedExecutor
 from repro.serve.metrics import ServeMetrics
 from repro.serve.query import Query, QueryKey, QueryResult, make_key, query
@@ -25,7 +34,8 @@ from repro.serve.workload import parse_mix, synthetic_trace, \
 
 __all__ = [
     "Batch", "BucketLadder", "Coalescer", "DEFAULT_BUCKETS",
-    "DoubleBufferedExecutor", "GraphServer", "Query", "QueryKey",
-    "QueryResult", "ServeMetrics", "make_key", "parse_mix", "query",
+    "DoubleBufferedExecutor", "DynamicGraph", "EllOverflow", "GraphServer",
+    "MutationBatch", "MutationStats", "Query", "QueryKey", "QueryResult",
+    "ServeMetrics", "make_key", "mutation_stream", "parse_mix", "query",
     "synthetic_trace", "zipf_root_sampler",
 ]

@@ -52,12 +52,15 @@ class BucketLadder:
 class Batch:
     """One coalesced launch: ``bucket`` source queries (roots padded to
     the bucket width by duplication), or — ``bucket == 0`` — every
-    pending refresh query of one key sharing a single unbatched launch."""
+    pending refresh query of one key sharing a single unbatched launch.
+    ``epoch`` is the snapshot epoch all member queries were admitted at
+    (a batch never mixes epochs)."""
 
     key: QueryKey
     queries: list
     bucket: int
     roots: list                          # padded, len == bucket; [] refresh
+    epoch: int = -1
 
     @property
     def n_real(self) -> int:
@@ -65,36 +68,46 @@ class Batch:
 
 
 class Coalescer:
-    """Admission queue + batch formation over per-key FIFO queues."""
+    """Admission queue + batch formation over per-(key, epoch) FIFO
+    queues.  Keying the queues on the admission epoch is what keeps
+    coalescing snapshot-consistent: queries admitted before a mutation
+    never share a launch with queries admitted after it, so every
+    launch reads exactly one graph version."""
 
     def __init__(self, ladder: BucketLadder | None = None):
         self.ladder = ladder or BucketLadder()
-        self._pending: dict[QueryKey, deque[Query]] = {}
+        self._pending: dict[tuple[QueryKey, int], deque[Query]] = {}
 
     def admit(self, q: Query) -> None:
-        self._pending.setdefault(q.key, deque()).append(q)
+        self._pending.setdefault((q.key, q.epoch), deque()).append(q)
 
     def pending_count(self, key: QueryKey | None = None) -> int:
         if key is not None:
-            return len(self._pending.get(key, ()))
+            return sum(len(d) for (k, _), d in self._pending.items()
+                       if k == key)
         return sum(len(d) for d in self._pending.values())
 
     def has_pending(self) -> bool:
         return any(self._pending.values())
 
     def next_batch(self) -> Batch | None:
-        """Form ONE batch from the key whose head query is oldest."""
-        live = [(d[0].t_submit, k) for k, d in self._pending.items() if d]
+        """Form ONE batch from the (key, epoch) whose head query is
+        oldest."""
+        live = [(d[0].t_submit, ke) for ke, d in self._pending.items() if d]
         if not live:
             return None
-        _, key = min(live, key=lambda e: e[0])   # ties: admission order
-        dq = self._pending[key]
+        _, (key, epoch) = min(live, key=lambda e: e[0])  # ties: admission
+        dq = self._pending[(key, epoch)]
+        if key.seeded:
+            # one launch per seeded query: each carries (or resolves to)
+            # its own vertex-field seed, so launches never share
+            return Batch(key, [dq.popleft()], 0, [], epoch)
         if not key.rooted:
             queries = list(dq)
             dq.clear()
-            return Batch(key, queries, 0, [])
+            return Batch(key, queries, 0, [], epoch)
         bucket = self.ladder.pick(len(dq))
         queries = [dq.popleft() for _ in range(min(bucket, len(dq)))]
         roots = [q.root for q in queries]
         roots += [roots[-1]] * (bucket - len(roots))   # dup-root padding
-        return Batch(key, queries, bucket, roots)
+        return Batch(key, queries, bucket, roots, epoch)

@@ -1,0 +1,15 @@
+"""Dynamic-graph subsystem: in-place blocked-ELL mutation, snapshot
+epochs, and the mutation-stream generator for trace replay.
+
+``DynamicGraph`` (mutation.py) owns the host-side free-slot index and
+the device patch path; ``GraphServer.mutate`` wraps it with pipeline
+flushing and epoch bookkeeping; the incremental recompute programs the
+epochs feed live in ``repro.core.incremental`` / the registry.
+"""
+
+from repro.serve.dynamic.mutation import DynamicGraph, EllOverflow, \
+    MutationBatch, MutationStats
+from repro.serve.dynamic.stream import mutation_stream
+
+__all__ = ["DynamicGraph", "EllOverflow", "MutationBatch",
+           "MutationStats", "mutation_stream"]

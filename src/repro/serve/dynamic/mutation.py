@@ -1,0 +1,451 @@
+"""In-place mutation of the resident device graph: batched edge
+insert/delete as slot patches against the blocked-ELL + COO shards.
+
+The free capacity was always there: ``build_ell`` rounds row widths to
+lane multiples and maxes bucket widths across partitions, and
+``partition_graph`` pads the COO shards to an ``e_max`` multiple of 128
+— all of that slack is addressable as FREE SLOTS.  ``DynamicGraph``
+tracks it host-side (per-row ELL occupancy, per-partition COO free
+stacks and an exact (u, v) -> positions index) and turns a mutation
+batch into a handful of scatter patches:
+
+  * planning runs against host mirrors of every shard array, recording
+    the set of touched (partition, flat-slot) coordinates per array —
+    the final value of each touched slot is then read back OFF THE
+    MIRROR, so duplicate writes within a batch collapse to one
+    deterministic value and the device patch never relies on scatter
+    ordering;
+  * one jitted ``shard_map`` patch per touched array
+    (``core.graph.make_scatter_patch``) writes those values with
+    ``mode="drop"`` padding — only the patch lists cross host->device,
+    never the shards;
+  * the patch is FUNCTIONAL (copy-on-write), so launches already in
+    flight keep reading the pre-mutation buffers: that is the snapshot
+    isolation the server's epoch versioning advertises.
+
+A batch whose net growth exceeds any row's free width (or a partition's
+COO slack) cannot patch; ``apply`` detects this in a capacity dry-run
+BEFORE mutating anything and falls back to a full re-partition +
+re-upload (``MutationStats.rebuild=True``) — correct, just not cheap.
+
+Invariants preserved (the ones the kernels rely on):
+  * each ELL row's entries stay CONTIGUOUS from its slot base — inserts
+    fill at ``base + occ``, deletes move the row's last entry into the
+    hole and sentinel the tail;
+  * COO padding convention: vacated positions get the global-id
+    sentinel ``n`` and local-id 0, exactly like ``partition_graph``;
+  * degrees track live edges (pagerank contributions, kcore bounds).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import Counter
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+
+from repro.core.graph import ell_occupancy, ell_row_layout, \
+    make_scatter_patch, partition_graph
+
+P = jax.sharding.PartitionSpec
+
+_ELL_NAMES = ("ell_in", "ell_out", "ell_dst", "ell_src")
+_COO_KEYS = ("out_src_local", "out_dst_global",
+             "in_src_global", "in_dst_local")
+
+
+class EllOverflow(RuntimeError):
+    """A mutation batch does not fit the free-slot pools."""
+
+
+@dataclass
+class MutationBatch:
+    """One batched edge mutation: (k, 2) ``[u, v]`` int arrays (global
+    original vertex ids).  Deletes apply before inserts, so freed slots
+    are reusable within the batch; a delete must name an edge instance
+    present BEFORE the batch (multigraph: one instance per request)."""
+
+    inserts: np.ndarray | None = None
+    deletes: np.ndarray | None = None
+
+
+@dataclass
+class MutationStats:
+    """What one ``apply`` did: patch-path telemetry or the rebuild flag."""
+
+    epoch: int
+    n_insert: int
+    n_delete: int
+    slots_patched: int                   # touched device slots, all arrays
+    arrays_patched: int                  # device arrays that got a patch
+    rebuild: bool                        # True = re-partition fallback
+    apply_s: float
+
+
+def _as_pairs(edges) -> np.ndarray:
+    if edges is None:
+        return np.zeros((0, 2), np.int64)
+    a = np.asarray(edges, np.int64)
+    if a.ndim != 2 or a.shape[1] != 2:
+        raise ValueError(f"mutation edges must be (k, 2) [u, v]: {a.shape}")
+    return a
+
+
+class DynamicGraph:
+    """Host-side mutation planner + device patcher over one engine.
+
+    Construction builds the O(E) free-slot index from the engine's host
+    shard mirrors (so build it once and keep it — the server does,
+    lazily).  ``apply`` mutates the mirrors and the resident device
+    arrays in lockstep; ``self.garr`` always names the newest epoch's
+    device graph.
+    """
+
+    def __init__(self, engine, garr=None):
+        self.engine = engine
+        self.garr = dict(garr) if garr is not None else engine.device_graph()
+        self.epoch = 0
+        self._patch_fn = make_scatter_patch(engine.mesh)
+        self._rebuild_index()
+
+    # -- index construction ------------------------------------------------
+
+    def _rebuild_index(self):
+        g = self.engine.g
+        if not g.ell_meta:
+            raise ValueError(
+                "dynamic mutation needs the blocked-ELL layout "
+                "(partition_graph(..., build_ell_layout=True))")
+        self._row_layout = {name: ell_row_layout(g.ell_meta[name].buckets)
+                            for name in _ELL_NAMES}
+        self._occ = {name: ell_occupancy(g.ell_meta[name],
+                                         g.ell_arrays[f"{name}_idx"])
+                     for name in _ELL_NAMES}
+        # COO free-position stacks + exact (u, v) -> positions lookup
+        # (validity sentinel: global-id column == n marks padding)
+        self._free_out, self._free_in = [], []
+        self._pos_out, self._pos_in = [], []
+        for p in range(g.parts):
+            lo = p * g.n_local
+            ee = np.flatnonzero(g.out_dst_global[p] < g.n)
+            self._free_out.append(
+                np.flatnonzero(g.out_dst_global[p] >= g.n)[::-1].tolist())
+            us = g.out_src_local[p, ee].astype(np.int64) + lo
+            vs = g.out_dst_global[p, ee].astype(np.int64)
+            d: dict[tuple[int, int], list[int]] = {}
+            for e, u, v in zip(ee.tolist(), us.tolist(), vs.tolist()):
+                d.setdefault((u, v), []).append(e)
+            self._pos_out.append(d)
+            ee = np.flatnonzero(g.in_src_global[p] < g.n)
+            self._free_in.append(
+                np.flatnonzero(g.in_src_global[p] >= g.n)[::-1].tolist())
+            us = g.in_src_global[p, ee].astype(np.int64)
+            vs = g.in_dst_local[p, ee].astype(np.int64) + lo
+            d = {}
+            for e, u, v in zip(ee.tolist(), us.tolist(), vs.tolist()):
+                d.setdefault((u, v), []).append(e)
+            self._pos_in.append(d)
+
+    # -- capacity ----------------------------------------------------------
+
+    def _ell_row(self, name: str, p: int, orig_row: int) -> int:
+        inv = self.engine.g.ell_arrays[f"{name}_inv"]
+        return int(inv[p, orig_row])
+
+    def _edge_rows(self, u: int, v: int):
+        """The four (name, partition, ELL row) cells edge (u, v) lives in."""
+        n_local = self.engine.g.n_local
+        pu, pv = u // n_local, v // n_local
+        ul, vl = u - pu * n_local, v - pv * n_local
+        return ((("ell_in", pv, self._ell_row("ell_in", pv, vl)),
+                 ("ell_out", pu, self._ell_row("ell_out", pu, ul)),
+                 ("ell_dst", pu, self._ell_row("ell_dst", pu, v)),
+                 ("ell_src", pv, self._ell_row("ell_src", pv, u))),
+                pu, pv)
+
+    def _check_capacity(self, ins: np.ndarray, dels: np.ndarray) -> None:
+        """Dry-run the whole batch against the free pools; raises
+        EllOverflow (or KeyError for an absent delete) BEFORE any mirror
+        mutates, so a failed batch leaves the graph untouched."""
+        g = self.engine.g
+        n_local = g.n_local
+        # deletes must all name live edge instances
+        cd = Counter((int(u), int(v)) for u, v in dels)
+        for (u, v), c in cd.items():
+            have = len(self._pos_out[u // n_local].get((u, v), ()))
+            if c > have:
+                raise KeyError(
+                    f"delete of edge ({u}, {v}) x{c}: only {have} "
+                    "instance(s) present")
+        # net per-cell growth vs. free width / free COO positions
+        net_rows: Counter = Counter()
+        net_out: Counter = Counter()
+        net_in: Counter = Counter()
+        for arr, sign in ((ins, +1), (dels, -1)):
+            for u, v in arr:
+                cells, pu, pv = self._edge_rows(int(u), int(v))
+                for cell in cells:
+                    net_rows[cell] += sign
+                net_out[pu] += sign
+                net_in[pv] += sign
+        for p, d in net_out.items():
+            if d > len(self._free_out[p]):
+                raise EllOverflow(
+                    f"partition {p}: out-COO needs {d} free positions, "
+                    f"has {len(self._free_out[p])}")
+        for p, d in net_in.items():
+            if d > len(self._free_in[p]):
+                raise EllOverflow(
+                    f"partition {p}: in-COO needs {d} free positions, "
+                    f"has {len(self._free_in[p])}")
+        for (name, p, q), d in net_rows.items():
+            if d <= 0:
+                continue
+            width = self._row_layout[name][1][q]
+            if self._occ[name][p, q] + d > width:
+                raise EllOverflow(
+                    f"{name} partition {p} row {q}: occupancy "
+                    f"{self._occ[name][p, q]}+{d} exceeds bucket width "
+                    f"{width}")
+
+    # -- host-mirror mutation ---------------------------------------------
+
+    def _host_array(self, key: str) -> np.ndarray:
+        g = self.engine.g
+        return g.ell_arrays[key] if key.endswith("_idx") \
+            else getattr(g, key)
+
+    def _touch(self, touched, key: str, p: int, s: int) -> None:
+        touched.setdefault(key, set()).add((p, s))
+
+    def _ell_fill(self, name, p, orig_row, value, touched):
+        g = self.engine.g
+        q = self._ell_row(name, p, orig_row)
+        base, width = self._row_layout[name]
+        occ = self._occ[name]
+        if occ[p, q] >= width[q]:        # unreachable post-check; belt
+            raise EllOverflow(f"{name} row {q} overflow mid-apply")
+        s = int(base[q] + occ[p, q])
+        g.ell_arrays[f"{name}_idx"][p, s] = value
+        occ[p, q] += 1
+        self._touch(touched, f"{name}_idx", p, s)
+
+    def _ell_vacate(self, name, p, orig_row, value, touched):
+        g = self.engine.g
+        meta = g.ell_meta[name]
+        q = self._ell_row(name, p, orig_row)
+        base, _ = self._row_layout[name]
+        occ = self._occ[name]
+        o = int(occ[p, q])
+        idx = g.ell_arrays[f"{name}_idx"]
+        row = idx[p, base[q]:base[q] + o]
+        hits = np.flatnonzero(row == value)
+        if hits.size == 0:
+            raise KeyError(f"{name} row {q}: value {value} not present")
+        s = int(base[q] + hits[-1])
+        last = int(base[q] + o - 1)
+        if s != last:                     # keep the row contiguous
+            idx[p, s] = idx[p, last]
+            self._touch(touched, f"{name}_idx", p, s)
+        idx[p, last] = meta.sentinel
+        self._touch(touched, f"{name}_idx", p, last)
+        occ[p, q] -= 1
+
+    def _coo_set(self, key, p, e, value, touched):
+        getattr(self.engine.g, key)[p, e] = value
+        self._touch(touched, key, p, e)
+
+    def _bump_degree(self, key, p, vl, delta, touched):
+        getattr(self.engine.g, key)[p, vl] += delta
+        self._touch(touched, key, p, vl)
+
+    def _insert_one(self, u, v, touched):
+        g = self.engine.g
+        n_local = g.n_local
+        pu, pv = u // n_local, v // n_local
+        ul, vl = u - pu * n_local, v - pv * n_local
+        e_out = self._free_out[pu].pop()
+        e_in = self._free_in[pv].pop()
+        self._coo_set("out_src_local", pu, e_out, ul, touched)
+        self._coo_set("out_dst_global", pu, e_out, v, touched)
+        self._coo_set("in_src_global", pv, e_in, u, touched)
+        self._coo_set("in_dst_local", pv, e_in, vl, touched)
+        self._pos_out[pu].setdefault((u, v), []).append(e_out)
+        self._pos_in[pv].setdefault((u, v), []).append(e_in)
+        self._bump_degree("out_degree", pu, ul, +1, touched)
+        self._bump_degree("in_degree", pv, vl, +1, touched)
+        self._ell_fill("ell_in", pv, vl, u, touched)        # neighbor id
+        self._ell_fill("ell_out", pu, ul, e_out, touched)   # edge position
+        self._ell_fill("ell_dst", pu, v, e_out, touched)
+        self._ell_fill("ell_src", pv, u, e_in, touched)
+
+    def _delete_one(self, u, v, touched):
+        g = self.engine.g
+        n_local, n = g.n_local, g.n
+        pu, pv = u // n_local, v // n_local
+        ul, vl = u - pu * n_local, v - pv * n_local
+        e_out = self._pos_out[pu][(u, v)].pop()
+        e_in = self._pos_in[pv][(u, v)].pop()
+        self._ell_vacate("ell_in", pv, vl, u, touched)
+        self._ell_vacate("ell_out", pu, ul, e_out, touched)
+        self._ell_vacate("ell_dst", pu, v, e_out, touched)
+        self._ell_vacate("ell_src", pv, u, e_in, touched)
+        self._coo_set("out_src_local", pu, e_out, 0, touched)
+        self._coo_set("out_dst_global", pu, e_out, n, touched)
+        self._coo_set("in_src_global", pv, e_in, n, touched)
+        self._coo_set("in_dst_local", pv, e_in, 0, touched)
+        self._bump_degree("out_degree", pu, ul, -1, touched)
+        self._bump_degree("in_degree", pv, vl, -1, touched)
+        self._free_out[pu].append(e_out)
+        self._free_in[pv].append(e_in)
+
+    # -- device patching ---------------------------------------------------
+
+    def _apply_patches(self, touched) -> tuple[int, int]:
+        g = self.engine.g
+        sh = jax.sharding.NamedSharding(self.engine.mesh, P("parts", None))
+        n_slots = n_arrays = 0
+        for key, coords in sorted(touched.items()):
+            if key not in self.garr:
+                # layout="coo" engines never shipped the ELL arrays;
+                # the host mirrors still track them for a later rebuild
+                continue
+            host = self._host_array(key)
+            per_p: list[list[int]] = [[] for _ in range(g.parts)]
+            for p, s in coords:
+                per_p[p].append(s)
+            longest = max(len(x) for x in per_p)
+            if longest == 0:
+                continue
+            # pad every partition's list to a shared pow2 length with an
+            # out-of-bounds slot (dropped): patch launches quantize to a
+            # few trace shapes instead of one per batch size.  The pad
+            # index must be >= the row length — JAX ``.at[]`` wraps
+            # negative indices, so -1 would stomp the last element.
+            L = max(8, 1 << (longest - 1).bit_length())
+            slots = np.full((g.parts, L), host.shape[1], np.int32)
+            vals = np.zeros((g.parts, L), np.int32)
+            for p, ss in enumerate(per_p):
+                if ss:
+                    ss = np.asarray(sorted(ss), np.int64)
+                    slots[p, :len(ss)] = ss
+                    vals[p, :len(ss)] = host[p, ss]
+            self.garr[key] = self._patch_fn(
+                self.garr[key],
+                jax.device_put(slots, sh), jax.device_put(vals, sh))
+            n_slots += sum(len(x) for x in per_p)
+            n_arrays += 1
+        return n_slots, n_arrays
+
+    # -- public API --------------------------------------------------------
+
+    def apply(self, inserts=None, deletes=None) -> MutationStats:
+        """Apply one mutation batch; returns patch-path stats, or
+        ``rebuild=True`` when the batch overflowed the free pools and
+        the graph was re-partitioned instead.  Either way ``self.garr``
+        is the new epoch's device graph and ``self.epoch`` advanced."""
+        t0 = time.perf_counter()
+        ins, dels = _as_pairs(inserts), _as_pairs(deletes)
+        g = self.engine.g
+        for arr, what in ((ins, "insert"), (dels, "delete")):
+            if len(arr) and not ((arr >= 0) & (arr < g.n_orig)).all():
+                raise ValueError(
+                    f"{what} endpoints must be in [0, {g.n_orig})")
+        try:
+            self._check_capacity(ins, dels)
+        except EllOverflow:
+            return self._rebuild(ins, dels, t0)
+        touched: dict[str, set] = {}
+        for u, v in dels:                 # deletes first: free the slots
+            self._delete_one(int(u), int(v), touched)
+        for u, v in ins:
+            self._insert_one(int(u), int(v), touched)
+        n_slots, n_arrays = self._apply_patches(touched)
+        self.epoch += 1
+        return MutationStats(
+            epoch=self.epoch, n_insert=len(ins), n_delete=len(dels),
+            slots_patched=n_slots, arrays_patched=n_arrays, rebuild=False,
+            apply_s=time.perf_counter() - t0)
+
+    def _rebuild(self, ins, dels, t0) -> MutationStats:
+        g = self.engine.g
+        cur = self.current_edges()
+        if len(dels):
+            cd = Counter(map(tuple, dels.tolist()))
+            keep = np.ones(len(cur), bool)
+            for i, uv in enumerate(map(tuple, cur.tolist())):
+                if cd.get(uv, 0):
+                    cd[uv] -= 1
+                    keep[i] = False
+            cur = cur[keep]
+        if len(ins):
+            cur = np.concatenate([cur, ins])
+        new_g = partition_graph(cur, g.n_orig, g.parts)
+        self.engine.g = new_g
+        self.garr = self.engine.device_graph()
+        self._rebuild_index()
+        self.epoch += 1
+        return MutationStats(
+            epoch=self.epoch, n_insert=len(ins), n_delete=len(dels),
+            slots_patched=0, arrays_patched=0, rebuild=True,
+            apply_s=time.perf_counter() - t0)
+
+    def current_edges(self) -> np.ndarray:
+        """(E_live, 2) int64 edge list reconstructed from the out-shard
+        mirrors (order arbitrary) — what a rebuild re-partitions and
+        what the oracle referees post-mutation answers against."""
+        g = self.engine.g
+        out = []
+        for p in range(g.parts):
+            ee = np.flatnonzero(g.out_dst_global[p] < g.n)
+            u = g.out_src_local[p, ee].astype(np.int64) + p * g.n_local
+            v = g.out_dst_global[p, ee].astype(np.int64)
+            out.append(np.stack([u, v], axis=1))
+        return np.concatenate(out) if out else np.zeros((0, 2), np.int64)
+
+    # -- capacity-aware sampling (tests / benches) -------------------------
+
+    def sample_insertable(self, k: int, rng) -> np.ndarray:
+        """Sample k (u, v) pairs guaranteed to fit the free pools AS ONE
+        BATCH — the deterministic way to exercise the patch path (random
+        pairs may overflow a hot row, which is the rebuild path's job)."""
+        g = self.engine.g
+        n_local = g.n_local
+        occ = {name: self._occ[name].copy() for name in _ELL_NAMES}
+        free_out = [len(x) for x in self._free_out]
+        free_in = [len(x) for x in self._free_in]
+        out: list[tuple[int, int]] = []
+        tries = 0
+        while len(out) < k:
+            tries += 1
+            if tries > 200 * k + 1000:
+                raise EllOverflow(
+                    f"could not sample {k} insertable edges: free pools "
+                    "exhausted")
+            u = int(rng.integers(0, g.n_orig))
+            v = int(rng.integers(0, g.n_orig))
+            cells, pu, pv = self._edge_rows(u, v)
+            if free_out[pu] < 1 or free_in[pv] < 1:
+                continue
+            if any(occ[name][p, q] >= self._row_layout[name][1][q]
+                   for name, p, q in cells):
+                continue
+            free_out[pu] -= 1
+            free_in[pv] -= 1
+            for name, p, q in cells:
+                occ[name][p, q] += 1
+            out.append((u, v))
+        return np.asarray(out, np.int64)
+
+    def sample_deletable(self, k: int, rng) -> np.ndarray:
+        """Sample k DISTINCT live edge instances (multigraph-safe: the
+        multiset of sampled pairs never exceeds live multiplicity)."""
+        cur = self.current_edges()
+        if len(cur) < k:
+            raise ValueError(f"only {len(cur)} live edges; cannot "
+                             f"sample {k} deletions")
+        pick = rng.choice(len(cur), size=k, replace=False)
+        return cur[pick]

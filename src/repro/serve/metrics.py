@@ -6,6 +6,13 @@ number a client of the server would see.  Cells are keyed by the
 program label and the launch bucket width the query actually rode
 (0 = shared refresh launch), so the bench can compare the ladder rungs
 directly — ``qps`` at bucket 32 vs bucket 1 IS the coalescing win.
+
+The measurement window opens at the FIRST ADMISSION (``GraphServer``
+calls :meth:`ServeMetrics.start` from ``submit_query``) and closes at
+the last demux — the first query's queue wait is inside the window, so
+``qps`` never overcounts a burst that sat queued before its first
+launch.  ``start`` is idempotent; a bare :meth:`record` still
+self-opens the window for direct/standalone use.
 """
 
 from __future__ import annotations

@@ -7,7 +7,7 @@ with equal keys resolve to the same ``CompiledProgram`` family and can
 ride one batched launch (``core/api.py`` caches per batch width, so a
 bucket ladder over one key never re-traces).
 
-Two shapes of query flow through the server:
+Three shapes of query flow through the server:
 
   * **source queries** (``bfs``, ``sssp``, ``betweenness``): carry a
     ``root``; the coalescer packs up to ``bucket`` of them into one
@@ -16,6 +16,16 @@ Two shapes of query flow through the server:
     ``triangles``): no root; ONE launch serves every refresh query of
     the same key that is pending at dispatch time (they all want the
     same answer), recorded as ``bucket=0``.
+  * **seeded queries** (``pagerank/warm``, ``cc/incremental``,
+    ``kcore/incremental``): refresh queries whose program takes whole
+    vertex-field inputs.  The server resolves the seed per launch — a
+    stored previous-epoch output when the mutation history allows it,
+    the program's cold seed otherwise — so seeded queries dispatch one
+    launch each (``bucket=0``) and never vmap.
+
+Every admitted query is stamped with the server's snapshot ``epoch``;
+the epoch rides through the batch into ``QueryResult.epoch``, naming
+exactly which graph version answered.
 """
 
 from __future__ import annotations
@@ -44,7 +54,15 @@ class QueryKey:
 
     @property
     def rooted(self) -> bool:
-        return bool(self.spec.inputs)
+        """Takes SCALAR per-query inputs (a root) — batches on the ladder."""
+        spec = self.spec
+        return bool(spec.inputs) and \
+            all(k == "scalar" for k in spec.input_kinds)
+
+    @property
+    def seeded(self) -> bool:
+        """Takes vertex-field inputs the server resolves per launch."""
+        return any(k != "scalar" for k in self.spec.input_kinds)
 
 
 def make_key(algo: str, variant: str | None = None, **params) -> QueryKey:
@@ -64,12 +82,21 @@ def make_key(algo: str, variant: str | None = None, **params) -> QueryKey:
 class Query:
     """One admitted query.  ``qid`` / ``t_submit`` are assigned by the
     server at admission; ``t_submit`` doubles as the latency clock start
-    (trace replay passes the intended arrival time instead)."""
+    (trace replay passes the intended arrival time instead).  ``epoch``
+    is stamped at admission too: batches only coalesce queries of one
+    epoch, so a launch reads exactly one graph snapshot.
+
+    ``seed`` (seeded queries only) optionally pins the vertex-field
+    inputs — a tuple of (n_orig,) host arrays, one per program input;
+    left ``None``, the server resolves warm-vs-cold itself.
+    """
 
     key: QueryKey
     root: int | None = None
     qid: int = -1
     t_submit: float = 0.0
+    seed: tuple | None = None
+    epoch: int = -1
 
     def __post_init__(self):
         if self.key.rooted and self.root is None:
@@ -80,12 +107,23 @@ class Query:
             raise ValueError(
                 f"{self.key.label} takes no per-query inputs; "
                 f"root={self.root} would be silently ignored")
+        if self.seed is not None:
+            if not self.key.seeded:
+                raise ValueError(
+                    f"{self.key.label} takes no vertex-field inputs; "
+                    "seed= would be silently ignored")
+            if len(self.seed) != len(self.key.spec.inputs):
+                raise ValueError(
+                    f"{self.key.label} takes {len(self.key.spec.inputs)} "
+                    f"seed fields {self.key.spec.inputs}; got "
+                    f"{len(self.seed)}")
 
 
 def query(algo: str, variant: str | None = None, *,
-          root: int | None = None, **params) -> Query:
+          root: int | None = None, seed: tuple | None = None,
+          **params) -> Query:
     """Convenience constructor: ``query("bfs", root=7)``."""
-    return Query(make_key(algo, variant, **params), root)
+    return Query(make_key(algo, variant, **params), root, seed=seed)
 
 
 @dataclass
@@ -96,7 +134,8 @@ class QueryResult:
     arrays — ``(n_orig,)`` for vertex fields, scalars for scalars —
     exactly what a direct ``engine.program(...)`` call plus
     ``gather_vertex_field`` yields.  Refresh queries coalesced into one
-    launch SHARE the fields dict; treat it as read-only.
+    launch SHARE the fields dict; treat it as read-only.  ``epoch`` is
+    the snapshot epoch the answering launch read.
     """
 
     qid: int
@@ -106,6 +145,7 @@ class QueryResult:
     rounds: int
     latency_s: float
     bucket: int                         # launch batch width; 0 = refresh
+    epoch: int = 0
 
     def __getitem__(self, name: str):
         return self.fields[name]

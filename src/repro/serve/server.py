@@ -25,6 +25,17 @@ and the caller owns the loop (``serve`` for a closed-loop query list,
 ``serve_trace`` to replay a timed arrival trace in real time).  No
 threads — JAX's async dispatch provides the only concurrency that
 matters here, device/host overlap.
+
+**Dynamic graphs.**  ``mutate()`` applies a batched edge insert/delete
+against the resident graph through ``repro.serve.dynamic`` and opens a
+new SNAPSHOT EPOCH: pending queries are flushed against the old
+buffers first, the device patch is functional (in-flight launches keep
+their snapshot), and queries admitted afterwards read the new one.
+Seeded queries (``pagerank/warm``, ``cc/incremental``,
+``kcore/incremental``) resolve their vertex-field seed from the
+server's seed store — previously served outputs, adopted warm only
+when the mutation history since their epoch keeps them exact
+(``registry.IncrementalSpec.mutations``), cold otherwise.
 """
 
 from __future__ import annotations
@@ -35,8 +46,11 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core import registry
 from repro.core.api import GraphEngine
+from repro.core.incremental import KIND_DTYPES, cold_seed
 from repro.serve.coalescer import Batch, BucketLadder, Coalescer
+from repro.serve.dynamic import DynamicGraph, MutationBatch, MutationStats
 from repro.serve.executor import DoubleBufferedExecutor, Launch
 from repro.serve.metrics import ServeMetrics
 from repro.serve.query import Query, QueryKey, QueryResult, make_key
@@ -58,6 +72,15 @@ class GraphServer:
         # of traffic)
         self.results: dict[int, QueryResult] = {}
         self._next_qid = 0
+        # dynamic-graph state: the snapshot epoch, the lazily built
+        # mutation subsystem, the mutation history (what _seeds entries
+        # are judged against), and the seed store itself —
+        # (algo, field) -> (epoch, (n_orig,) array) harvested from
+        # served refresh results
+        self.epoch = 0
+        self.dynamic: DynamicGraph | None = None
+        self.mutation_log: list[dict] = []
+        self._seeds: dict[tuple[str, str], tuple[int, np.ndarray]] = {}
 
     # -- admission -----------------------------------------------------------
     def submit(self, algo: str, variant: str | None = None, *,
@@ -75,6 +98,10 @@ class GraphServer:
                 "Query to resubmit")
         q.qid, self._next_qid = self._next_qid, self._next_qid + 1
         q.t_submit = time.perf_counter() if t_submit is None else t_submit
+        q.epoch = self.epoch
+        # the metrics window opens at FIRST ADMISSION (idempotent), so
+        # the first launch's queue + dispatch wait counts against qps —
+        # record()'s own start() is only a fallback for standalone use
         self.metrics.start()
         self.coalescer.admit(q)
         return q.qid
@@ -101,6 +128,88 @@ class GraphServer:
         for launch in self.executor.drain():
             self._demux(launch)
         return launches
+
+    # -- dynamic graphs ------------------------------------------------------
+    def dynamic_graph(self) -> DynamicGraph:
+        """The mutation subsystem over the resident graph (built lazily:
+        the host free-slot index costs O(E) once)."""
+        if self.dynamic is None:
+            self.dynamic = DynamicGraph(self.engine, self.garr)
+            self.dynamic.epoch = self.epoch
+        return self.dynamic
+
+    def mutate(self, inserts=None, deletes=None) -> MutationStats:
+        """Apply one batched edge insert/delete and open a new snapshot
+        epoch.
+
+        Ordering vs. the pipeline: every PENDING query is flushed into
+        the executor first, so it dispatches against the pre-mutation
+        buffers it was admitted under; launches already in flight keep
+        reading their snapshot because the device patch is functional
+        (copy-on-write), never an in-place donation.  Queries admitted
+        after this call read the new epoch.  A batch that overflows the
+        free-slot pools falls back to a full re-partition + re-upload
+        (``stats.rebuild=True``; programs for the new layout re-warm on
+        first use — the compile-cache key covers the layout signature).
+        """
+        while True:
+            batch = self.coalescer.next_batch()
+            if batch is None:
+                break
+            for launch in self.executor.push(batch, self._dispatch(batch)):
+                self._demux(launch)
+        dyn = self.dynamic_graph()
+        stats = dyn.apply(inserts, deletes)
+        self.garr = dyn.garr
+        self.epoch = dyn.epoch
+        self.mutation_log.append({
+            "epoch": stats.epoch, "n_insert": stats.n_insert,
+            "n_delete": stats.n_delete, "rebuild": stats.rebuild})
+        return stats
+
+    def resolve_seed(self, key: QueryKey) -> tuple[tuple, bool]:
+        """(seed arrays, warm?) for a seeded query without an explicit
+        seed.  A stored previous-epoch output is adopted WARM only when
+        every mutation since its epoch is of a kind the program stays
+        exact under (``IncrementalSpec.mutations``); otherwise the cold
+        seed — still exact, just a full-rate recompute."""
+        inc = key.spec.incremental
+        if inc is not None:
+            stored = self._seeds.get((key.algo, inc.seed_output))
+            if stored is not None:
+                seed_epoch, arr = stored
+                if self._mutations_ok(seed_epoch, inc.mutations):
+                    return (arr,), True
+        return cold_seed(key.spec, self.engine.g), False
+
+    def _mutations_ok(self, since_epoch: int, kinds: str) -> bool:
+        if kinds == "any":
+            return True
+        for entry in self.mutation_log:
+            if entry["epoch"] <= since_epoch:
+                continue
+            if kinds == "insert" and entry["n_delete"]:
+                return False
+            if kinds == "delete" and entry["n_insert"]:
+                return False
+        return True
+
+    def _harvest_seeds(self, key: QueryKey, fields: dict,
+                       epoch: int) -> None:
+        """Keep the newest served output usable as a warm seed: any
+        incremental variant of this algo whose ``seed_output`` is among
+        the result fields gets (epoch, field) stored."""
+        for algo, variant in registry.available():
+            spec = registry.get_spec(algo, variant)
+            inc = spec.incremental
+            if inc is None or inc.of != key.algo:
+                continue
+            arr = fields.get(inc.seed_output)
+            if arr is None:
+                continue
+            prev = self._seeds.get((key.algo, inc.seed_output))
+            if prev is None or prev[0] <= epoch:
+                self._seeds[(key.algo, inc.seed_output)] = (epoch, arr)
 
     # -- the pipeline --------------------------------------------------------
     def pump(self) -> list[QueryResult]:
@@ -140,7 +249,13 @@ class GraphServer:
         ``serve.workload.synthetic_trace``) in real time: a query is
         admitted when its arrival time passes; between arrivals the
         pipeline keeps pumping, so queued work and in-flight launches
-        overlap the wait.  Latency runs from the intended arrival."""
+        overlap the wait.  Latency runs from the intended arrival.
+
+        Events may also be ``(t_s, MutationBatch)`` (e.g. merged from
+        ``serve.dynamic.mutation_stream``): the batch applies when its
+        time passes, flushing pending queries against their own epoch
+        first — so a trace interleaves queries and mutations exactly as
+        an online service would see them."""
         trace = sorted(trace, key=lambda e: e[0])
         t0 = time.perf_counter()
         done, i = [], 0
@@ -148,7 +263,11 @@ class GraphServer:
                 or len(self.executor):
             now = time.perf_counter() - t0
             while i < len(trace) and trace[i][0] <= now:
-                self.submit_query(trace[i][1], t_submit=t0 + trace[i][0])
+                item = trace[i][1]
+                if isinstance(item, MutationBatch):
+                    self.mutate(inserts=item.inserts, deletes=item.deletes)
+                else:
+                    self.submit_query(item, t_submit=t0 + trace[i][0])
                 i += 1
             if self.coalescer.has_pending() or len(self.executor):
                 for res in self.pump():
@@ -166,6 +285,16 @@ class GraphServer:
 
     def _dispatch(self, batch: Batch):
         prog = self._program(batch.key, batch.bucket)
+        if batch.key.seeded:
+            # one seeded launch per query; warmup batches (no queries)
+            # resolve a cold seed just to compile the right shapes
+            explicit = batch.queries[0].seed if batch.queries else None
+            seed = explicit if explicit is not None \
+                else self.resolve_seed(batch.key)[0]
+            args = tuple(
+                self.engine.scatter_vertex_field(a, KIND_DTYPES[kind])
+                for a, kind in zip(seed, batch.key.spec.input_kinds))
+            return prog(self.garr, *args)
         if batch.bucket:
             return prog(self.garr, jnp.asarray(batch.roots, jnp.int32))
         return prog(self.garr)
@@ -196,11 +325,15 @@ class GraphServer:
                           else np.asarray(o)[()])
                       for n, (o, v) in zip(names, zip(outs, is_vertex))}
             per_query = [(shared, int(rounds))] * batch.n_real
+            # refresh outputs double as warm seeds for the incremental
+            # variants of the same algorithm
+            self._harvest_seeds(batch.key, shared, batch.epoch)
         results = []
         for q, (fields, r) in zip(batch.queries, per_query):
             res = QueryResult(
                 qid=q.qid, key=q.key, root=q.root, fields=fields, rounds=r,
-                latency_s=launch.t_done - q.t_submit, bucket=batch.bucket)
+                latency_s=launch.t_done - q.t_submit, bucket=batch.bucket,
+                epoch=batch.epoch)
             self.metrics.record(q.key.label, batch.bucket, res.latency_s)
             self.results[q.qid] = res
             results.append(res)

@@ -1,14 +1,17 @@
 """THE correctness gate: every registered program x parts in {1, 2, 4}
-x two graph families must match its pure-NumPy oracle (tests/oracle.py).
+x three graph families must match its pure-NumPy oracle (tests/oracle.py).
 
 This replaces ad-hoc per-algorithm equality checks: a new program only
 passes the suite once it has an oracle entry, and it is exercised under
 real multi-partition exchange (2 and 4 parts run in a subprocess with
 forced host devices), not just the degenerate single-shard case.
 
-One subprocess per family runs the full program x parts sweep (54
-compile cells in two interpreter launches rather than 54); the
-per-case PASS lines are asserted host-side so a failure names its cell.
+One subprocess per family runs the full program x parts sweep (the
+per-case PASS lines are asserted host-side so a failure names its
+cell).  Seeded variants (``pagerank/warm``, ``cc/incremental``,
+``kcore/incremental``) run from their COLD seeds here — the static
+gate pins that the seeded program is exact from ANY admissible start;
+the warm-seed path on mutated graphs is gated by test_dynamic.py.
 """
 
 import os
@@ -22,7 +25,7 @@ from repro.core import registry
 
 TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
 
-FAMILIES = ("urand", "smallworld")
+FAMILIES = ("urand", "smallworld", "rmat")
 PARTS = (1, 2, 4)
 N = 384          # pads to 512 at parts=4 (n_local multiples of 128)
 SEED = 5
@@ -34,7 +37,7 @@ sys.path.insert(0, {tests_dir!r})
 import numpy as np
 import jax.numpy as jnp
 import oracle
-from repro.core import GraphEngine, partition_graph, registry
+from repro.core import GraphEngine, incremental, partition_graph, registry
 from repro.launch.mesh import make_graph_mesh
 
 family, parts_list, n, seed, root = {family!r}, {parts!r}, {n}, {seed}, {root}
@@ -47,7 +50,12 @@ for parts in parts_list:
         spec = registry.get_spec(algo, variant)
         params = oracle.CONFORMANCE_PARAMS.get((algo, variant), {{}})
         prog = eng.program(algo, variant, **params)
-        args = (garr,) + (jnp.int32(root),) * len(spec.inputs)
+        if any(k != "scalar" for k in spec.input_kinds):
+            (seed_arr,) = incremental.cold_seed(spec, g)
+            args = (garr, eng.scatter_vertex_field(
+                seed_arr, incremental.KIND_DTYPES[spec.input_kinds[0]]))
+        else:
+            args = (garr,) + (jnp.int32(root),) * len(spec.inputs)
         *outs, rounds = prog(*args)
         p = prog.program
         fields = {{name: (eng.gather_vertex_field(o) if isv

@@ -16,7 +16,7 @@ import pytest
 import jax.numpy as jnp
 
 from conftest import run_with_devices
-from repro.core import GraphEngine, partition_graph, registry
+from repro.core import GraphEngine, incremental, partition_graph, registry
 from repro.core.registry import ProgramSpec
 from repro.graphs import urand_edges
 from repro.launch.mesh import make_graph_mesh
@@ -27,6 +27,8 @@ CORE_PAIRS = {("bfs", "bsp"), ("bfs", "fast"), ("pagerank", "bsp"),
               ("pagerank", "fast"), ("sssp", "default"), ("cc", "default")}
 NEW_PAIRS = {("triangles", "default"), ("kcore", "default"),
              ("betweenness", "default")}
+SEEDED_PAIRS = {("pagerank", "warm"), ("cc", "incremental"),
+                ("kcore", "incremental")}
 
 # snapshot for parametrization (registry is append-only at runtime)
 ALL_PAIRS = sorted(registry.available())
@@ -45,7 +47,8 @@ def test_all_programs_registered():
     got = set(registry.available())
     assert got >= CORE_PAIRS
     assert got >= NEW_PAIRS
-    assert len(got) >= 9
+    assert got >= SEEDED_PAIRS
+    assert len(got) >= 12
 
 
 # light per-algorithm output sanity; deep equality lives in the oracle
@@ -66,7 +69,12 @@ def test_every_program_runs(tiny_engine, algo, variant):
     n, edges, eng, garr = tiny_engine
     spec = registry.get_spec(algo, variant)
     prog = eng.program(algo, variant)
-    args = (garr,) + (jnp.int32(3),) * len(spec.inputs)
+    if any(k != "scalar" for k in spec.input_kinds):
+        (seed_arr,) = incremental.cold_seed(spec, eng.g)
+        args = (garr, eng.scatter_vertex_field(
+            seed_arr, incremental.KIND_DTYPES[spec.input_kinds[0]]))
+    else:
+        args = (garr,) + (jnp.int32(3),) * len(spec.inputs)
     *outs, rounds = prog(*args)
     assert int(rounds) > 0
     field = eng.gather_vertex_field(outs[0])
@@ -208,6 +216,11 @@ def test_batch_rejected_for_inputless_programs(tiny_engine):
         eng.program("pagerank", "fast", batch=4)
     with pytest.raises(ValueError):
         eng.program("triangles", batch=4)
+    # seeded (vertex-input) programs can't ride root batches either
+    with pytest.raises(ValueError):
+        eng.program("pagerank", "warm", batch=4)
+    with pytest.raises(ValueError):
+        eng.program("cc", "incremental", batch=4)
 
 
 def test_static_iters_matches_early_exit(tiny_engine):
@@ -281,14 +294,18 @@ print("ROUNDS-INVARIANT OK", rounds)
 
 
 def test_docs_table_matches_registry():
-    """docs/API.md embeds registry.algorithms_markdown_table() verbatim,
-    so the algorithms table cannot drift from the registry."""
-    table = registry.algorithms_markdown_table()
+    """docs/API.md embeds registry.algorithms_markdown_table() AND
+    registry.incremental_markdown_table() verbatim, so neither table can
+    drift from the registry."""
     api_md = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "docs", "API.md")
     with open(api_md) as f:
         content = f.read()
-    assert table in content, (
+    assert registry.algorithms_markdown_table() in content, (
         "docs/API.md algorithms table is stale — regenerate with:\n"
         "  PYTHONPATH=src python -c 'from repro.core import registry; "
         "print(registry.algorithms_markdown_table())'")
+    assert registry.incremental_markdown_table() in content, (
+        "docs/API.md incremental-programs table is stale — regenerate "
+        "with:\n  PYTHONPATH=src python -c 'from repro.core import "
+        "registry; print(registry.incremental_markdown_table())'")

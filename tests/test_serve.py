@@ -11,7 +11,7 @@ import pytest
 import jax.numpy as jnp
 
 from conftest import run_with_devices
-from repro.core import GraphEngine, partition_graph, registry
+from repro.core import GraphEngine, incremental, partition_graph, registry
 from repro.graphs import urand_edges
 from repro.launch.mesh import make_graph_mesh
 from repro.serve import (
@@ -106,6 +106,69 @@ def test_executor_depth_and_order():
         DoubleBufferedExecutor(depth=0)
 
 
+def test_executor_depth_one_is_synchronous():
+    """depth=1 degenerates to a one-slot pipeline: every push retires
+    the previous launch, drain retires exactly the last one, and no
+    launch is ever dangling."""
+    ex = DoubleBufferedExecutor(depth=1)
+    assert ex.push("a", jnp.zeros(2)) == []          # first fills the slot
+    assert [l.payload for l in ex.push("b", jnp.zeros(2))] == ["a"]
+    assert [l.payload for l in ex.push("c", jnp.zeros(2))] == ["b"]
+    assert len(ex) == 1
+    assert [l.payload for l in ex.drain()] == ["c"]
+    assert len(ex) == 0 and ex.drain() == []
+
+
+def test_pump_on_empty_queue_is_a_noop(served):
+    """pump() with nothing admitted must not launch, block, or record."""
+    _, eng, _, _ = served
+    server = GraphServer(eng, buckets=(4,))
+    assert server.pump() == []
+    assert not server.results and len(server.executor) == 0
+    assert server.metrics.rows() == []
+
+
+def test_drain_after_mixed_submit_pump_interleave(served):
+    """Interleaved submit/pump/submit/drain resolves every qid in
+    submission order with no in-flight launch left behind."""
+    _, eng, _, _ = served
+    server = GraphServer(eng, buckets=(4,), depth=2)
+    q1 = server.submit("bfs", root=1)
+    q2 = server.submit("cc")
+    server.pump()                          # launches something
+    q3 = server.submit("sssp", root=2)
+    q4 = server.submit("bfs", root=5)
+    server.drain()
+    assert sorted(server.results) == sorted([q1, q2, q3, q4])
+    assert len(server.executor) == 0, "dangling in-flight launch"
+    assert not server.coalescer.has_pending()
+    # demux preserves per-query identity across the interleave
+    assert server.results[q1].key.label == "bfs_fast"
+    assert server.results[q3].key.label == "sssp"
+    for qid in (q1, q2, q3, q4):
+        server.results.pop(qid)
+
+
+def test_metrics_window_opens_at_admission(served):
+    """The qps window must include the first query's queue wait:
+    submit (admission) opens the window, so time spent queued before
+    the first pump is inside window_s."""
+    import time as _time
+    _, eng, _, _ = served
+    server = GraphServer(eng, buckets=(4,))
+    server.submit("cc")
+    _time.sleep(0.05)                      # queued, nothing launched yet
+    server.drain()
+    assert server.metrics.window_s >= 0.05, \
+        "metrics window missed the pre-launch queue wait"
+    server.results.clear()
+    # standalone ServeMetrics still self-opens on a bare record()
+    from repro.serve import ServeMetrics
+    m = ServeMetrics()
+    m.record("x", 0, 0.001)
+    assert 0 < m.window_s < 10
+
+
 # -- the no-retrace guarantee the ladder relies on -----------------------
 
 
@@ -150,17 +213,27 @@ def test_bucket_ladder_no_retrace(served):
 def test_served_matches_direct(served, algo, variant):
     """The acceptance gate: a served query's fields are bit-identical to
     a direct engine.program() call, for every registered query type.
-    Source queries ride a padded batch=4 launch; refresh queries ride a
-    shared unbatched launch."""
+    Source queries ride a padded batch=4 launch; refresh and seeded
+    queries ride unbatched bucket-0 launches.  Seeded variants pass an
+    EXPLICIT cold seed so served and direct use identical inputs no
+    matter what the module-scoped server's seed store holds."""
     _, eng, garr, server = served
     spec = registry.get_spec(algo, variant)
-    root = 7 if spec.inputs else None
-    res = server.serve([Query(make_key(f"{algo}/{variant}"), root)])[0]
-    assert res.bucket == (4 if spec.inputs else 0)
+    key = make_key(f"{algo}/{variant}")
+    if key.seeded:
+        (seed_arr,) = incremental.cold_seed(spec, eng.g)
+        q = Query(key, seed=(seed_arr,))
+        direct_extra = (eng.scatter_vertex_field(
+            seed_arr, incremental.KIND_DTYPES[spec.input_kinds[0]]),)
+    else:
+        root = 7 if spec.inputs else None
+        q = Query(key, root)
+        direct_extra = (jnp.int32(root),) if spec.inputs else ()
+    res = server.serve([q])[0]
+    assert res.bucket == (4 if key.rooted else 0)
     assert res.rounds > 0
 
-    direct_args = (garr,) + ((jnp.int32(root),) if spec.inputs else ())
-    *outs, rounds = eng.program(algo, variant)(*direct_args)
+    *outs, rounds = eng.program(algo, variant)(garr, *direct_extra)
     assert res.rounds == int(rounds)
     prog = eng.program(algo, variant)
     for name, is_v, out in zip(prog.program.output_names,
