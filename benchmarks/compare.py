@@ -7,7 +7,13 @@ Three artifacts are gated:
 
   * ``BENCH_graph.json`` — direct program launches; rows join per
     (algo, variant, graph, parts) and fail when new/old wall-time
-    exceeds the threshold.
+    exceeds the threshold.  Graph rows additionally gate their
+    DETERMINISTIC fields — ``rounds_to_converge`` (the superstep
+    driver's round count; an async variant quietly paying extra rounds
+    is an algorithmic regression wall-time jitter could hide) and
+    ``wire_mb_per_part`` (parsed from the compiled HLO) — growth past
+    the threshold plus a small absolute slack fails regardless of the
+    wall-time jitter floor, because these numbers have no jitter.
   * ``BENCH_serve.json`` — the query-serving path; rows join per
     (algo, bucket) and fail when queries/sec DROPS by more than the
     threshold (old/new qps ratio).
@@ -114,6 +120,15 @@ def config_changed(old_meta: dict, new_meta: dict) -> bool:
                if o is not None and n is not None)
 
 
+# deterministic per-row fields gated WITHOUT the jitter floor: (field,
+# short label, absolute slack added on top of the ratio threshold).
+# Absent on either side (baseline predates the field) -> not compared.
+DETERMINISTIC_FIELDS = (
+    ("rounds_to_converge", "rounds", 2),
+    ("wire_mb_per_part", "wire_mb", 0.01),
+)
+
+
 def _fmt_graph(key) -> str:
     algo, variant, graph, parts = key
     return f"{algo + '/' + variant:22s} {graph:10s} {parts:5d}"
@@ -151,6 +166,18 @@ def compare(old: dict, new: dict, threshold: float, min_ms: float = 0.0, *,
         elif ratio < 1.0 / threshold:
             flag = "  (better)"
         lines.append(f"{fmt(key)} {o:9.1f} {n:9.1f} {ratio:6.2f}{flag}")
+        if serve:
+            continue
+        for field, label, slack in DETERMINISTIC_FIELDS:
+            ov, nv = old[key].get(field), new[key].get(field)
+            if ov is None or nv is None:
+                continue
+            if nv > ov * threshold and nv - ov > slack:
+                regressions.append(key + (label,))
+                lines.append(
+                    f"{fmt(key)} {ov:9.1f} {nv:9.1f} "
+                    f"{nv / max(ov, 1e-9):6.2f}  <-- REGRESSION "
+                    f"({label}: deterministic, no jitter floor)")
     for key in sorted(set(new) - set(old)):
         lines.append(f"{fmt(key)} {'-':>9s} {new[key][metric]:9.1f}   "
                      "new row")

@@ -26,6 +26,9 @@ _BENCH_PARAMS = {
     # prices the worst one, hiding the bf16 win
     ("pagerank", "fast"): {"iters": 30, "tol": 1e-12, "compress": "always"},
     ("pagerank", "bsp"): {"iters": 30, "tol": 1e-12},
+    # async rides the same fixed 30-round budget (tol below reach) so
+    # its bsp-vs-async row pair differs only in the superstep driver
+    ("pagerank", "async"): {"iters": 30, "tol": 1e-12},
 }
 
 _POINT_CODE = r"""
@@ -65,6 +68,7 @@ print("RESULT " + json.dumps({{
     "graph": graph, "algo": algo, "mode": variant, "parts": parts,
     "ms": times[len(times)//2] * 1e3,
     "wire_bytes_per_part": wire,
+    "rounds": int(out[-1]),
     "collective_counts": stats.counts,
 }}))
 """
@@ -116,5 +120,6 @@ def scaling_table(graph: str, algo: str, parts_list=(1, 2, 4, 8),
             rows.append(run_point(graph, algo, variant, p, reps=reps))
             r = rows[-1]
             print(f"  {algo}/{variant:4s} parts={p:2d} {r['ms']:9.1f} ms  "
-                  f"wire/part {r['wire_bytes_per_part']/1e6:8.2f} MB")
+                  f"wire/part {r['wire_bytes_per_part']/1e6:8.2f} MB  "
+                  f"rounds {r['rounds']:3d}")
     return rows

@@ -41,9 +41,14 @@ def runtime_meta() -> dict:
 def write_bench_artifact(rows: list[dict], meta: dict,
                          path=None) -> pathlib.Path:
     """Write BENCH_graph.json: {meta, rows: [{algo, variant, graph,
-    parts, ms, wire_mb}]}.  ``meta`` records graphs/reps/mode — and each
-    row carries its own graph — so cross-PR comparisons never silently
-    mix measurement configurations."""
+    parts, ms, wire_mb, rounds_to_converge}]}.  ``meta`` records
+    graphs/reps/mode — and each row carries its own graph — so cross-PR
+    comparisons never silently mix measurement configurations.
+    ``rounds_to_converge`` is the driver's actual round count (early
+    exit for convergent programs, the fixed budget for iteration-capped
+    ones): deterministic per configuration, so compare.py gates it
+    exactly — an async variant silently paying extra rounds is an
+    algorithmic regression wall-time jitter could hide."""
     out = path or (REPO_ROOT / "BENCH_graph.json")
     slim = [{
         "algo": r["algo"],
@@ -52,6 +57,7 @@ def write_bench_artifact(rows: list[dict], meta: dict,
         "parts": r["parts"],
         "ms": round(r["ms"], 2),
         "wire_mb_per_part": round(r["wire_bytes_per_part"] / 1e6, 3),
+        "rounds_to_converge": r["rounds"],
     } for r in rows]
     pathlib.Path(out).write_text(
         json.dumps({"meta": meta, "rows": slim}, indent=2) + "\n")

@@ -7,14 +7,20 @@
 # The tier split uses the pytest marker `slow` (subprocess / multi-device
 # tests).  The oracle-conformance suite is deliberately NOT marked slow:
 # it is the correctness gate every registered program must pass, so it
-# runs in tier-1 in both modes.  The `tier1` marker PINS a suite to the
+# runs in tier-1 in both modes.  That includes the ASYNC lane — the
+# */async variants are registered programs, so they sweep parts
+# {1, 2, 4} x three families against the same oracles in tier-1, and
+# tests/test_async.py (rounds-accounting + exec_mode plumbing) rides
+# the fast lane with them.  The `tier1` marker PINS a suite to the
 # fast lane (selected as "tier1 or not slow", so tier1 wins even if a
 # suite someday also gets marked slow): the kernel-interpret parity
 # suites (tests/test_kernels_{spmv,frontier}.py) carry it because the
 # localops dispatch layer routes production hot loops through those
 # kernels.
 #
-# The fast benches write BENCH_graph.json (direct launches),
+# The fast benches write BENCH_graph.json (direct launches — the bfs
+# and pagerank figures emit bsp-vs-async row pairs, each row carrying
+# rounds_to_converge + wire_mb_per_part, both gated deterministically),
 # BENCH_serve.json (the query-serving path: queries/sec + latency per
 # (algo, bucket) cell) and BENCH_mutate.json (the dynamic-graph path:
 # in-place mutation apply + warm-vs-cold recompute rounds) at the repo

@@ -101,6 +101,7 @@ class GraphEngine:
     # -- the program API ----------------------------------------------------
     def program(self, algo: str, variant: str | None = None, *,
                 static_iters: int = 0, batch: int | None = None,
+                exec_mode: str | None = None,
                 **params) -> CompiledProgram:
         """Resolve, build, wrap and cache an algorithm program.
 
@@ -108,11 +109,35 @@ class GraphEngine:
         fixed-trip scan (dry-run/roofline path).  ``batch=B`` compiles
         the multi-source variant: every ("root",)-style input becomes a
         (B,) array and vertex outputs gain a leading (P, B, ...) batch
-        axis.  The cache key covers algo, variant, params, loop mode,
-        graph shapes and mesh, so repeated calls return the same object
-        and never re-trace.
+        axis.  ``exec_mode`` selects the superstep driver by mode
+        instead of variant name: with a bare algo it re-resolves to the
+        algo's variant of that mode (``program("bfs",
+        exec_mode="async")`` is ``program("bfs", "async")``); with an
+        explicit variant it is a consistency ASSERTION and a mismatch
+        raises rather than silently running the other driver.  The cache
+        key covers algo, variant, params, loop mode, exec mode, graph
+        shapes and mesh, so repeated calls return the same object and
+        never re-trace.
         """
+        bare = variant is None and "/" not in algo
         spec = registry.get_spec(algo, variant)
+        if exec_mode is not None and spec.exec_mode != exec_mode:
+            if exec_mode not in registry.EXEC_MODES:
+                raise ValueError(
+                    f"exec_mode {exec_mode!r} not in {registry.EXEC_MODES}")
+            if not bare:
+                raise ValueError(
+                    f"{spec.key} is a {spec.exec_mode} program; "
+                    f"exec_mode={exec_mode!r} contradicts the explicit "
+                    f"variant — drop one (mode-variants: "
+                    f"{registry.mode_variant(spec.algo, exec_mode)!r})")
+            alt = registry.mode_variant(spec.algo, exec_mode)
+            if alt is None:
+                raise ValueError(
+                    f"{spec.algo} has no {exec_mode} variant; "
+                    f"async-capable pairs: "
+                    f"{['/'.join(p) for p in registry.async_pairs()]}")
+            spec = registry.get_spec(spec.algo, alt)
         if batch is not None and not spec.inputs:
             raise ValueError(
                 f"{spec.key} takes no per-query inputs; batch="
@@ -135,8 +160,8 @@ class GraphEngine:
         # mutation-overflow rebuild the shard SHAPES can coincide while
         # the bucket decomposition differs, and the traced per-bucket
         # loops would silently read the wrong rows on a stale cache hit
-        key = (spec.algo, spec.variant, static_iters, batch,
-               tuple(sorted(params.items())),
+        key = (spec.algo, spec.variant, spec.exec_mode, static_iters,
+               batch, tuple(sorted(params.items())),
                (g.n, g.n_orig, g.parts, g.n_local, g.e_max),
                g.layout_signature(),
                (tuple(self.mesh.shape.items()), self.mesh.devices.shape),

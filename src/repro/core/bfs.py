@@ -37,9 +37,10 @@ import jax.numpy as jnp
 
 from repro.core import localops
 from repro.core.compat import axis_size
+from repro.core.monotone import monotone_async_program
 from repro.core.partitioned import AXIS, broadcast_global, exchange_or, \
     pack_bits, psum_scalar
-from repro.core.superstep import SuperstepProgram
+from repro.core.superstep import AsyncSuperstepProgram, SuperstepProgram
 
 
 INT_INF = jnp.int32(2 ** 30)
@@ -210,3 +211,52 @@ def bfs_fast_program(shards, max_levels: int = 64,
         outputs=lambda state: (state[0],),
         output_names=("parents",), output_is_vertex=(True,),
         max_rounds=max_levels)
+
+
+def bfs_async_program(shards, max_levels: int = 64,
+                      local_iters: int = 1) -> AsyncSuperstepProgram:
+    """Async BFS on the double-buffered exchange.
+
+    Per-level parent proposals don't survive staleness (a stale frontier
+    can propose a parent one level too deep), so the async variant runs
+    the stale-safe formulation instead: LEVELS via monotone min-combine
+    (unit-weight SSSP — level k+1's relaxations overlap level k's
+    in-flight exchange, and late/duplicate proposals are no-ops under
+    min), with the halt count piggybacked on the level exchange itself —
+    no separate psum collective per level, which is the fused
+    halt-reduction this variant exists to demonstrate.  Parents are then
+    derived AFTER convergence in one ``pull_min_eq`` pass over in-edges
+    (min-id in-neighbor one level up), reproducing the BSP variants'
+    deterministic min-id parent rule from exact levels.
+    """
+    n, n_local = shards.n, shards.n_local
+    ell_in = shards.ell("ell_in")
+    ell_dst = shards.ell("ell_dst")
+
+    def init_vals(g, root):
+        parents0, at_root = _seed_state(root, n_local)
+        level0 = jnp.where(at_root, 0, INT_INF)
+        return level0, at_root
+
+    def relax(g, level, frontier):
+        srcl = g["out_src_local"]
+        active = frontier[srcl] & (g["out_dst_global"] < n)
+        return localops.scatter_combine(
+            g, ell_dst, jnp.where(active, level[srcl] + 1, INT_INF),
+            "min", identity=INT_INF)
+
+    def outputs(g, level):
+        lvl_global = broadcast_global(level)
+        # parent of v = min-id in-neighbor exactly one level up; the
+        # root (level 0) is its own parent, unreached rows stay INT_INF
+        # (their target INT_INF - 1 matches no real level)
+        prop = localops.pull_min_eq(g, ell_in, lvl_global, level - 1)
+        lo = jax.lax.axis_index(AXIS) * n_local
+        gid = jnp.arange(n_local, dtype=jnp.int32) + lo
+        return (jnp.where(level == 0, gid, prop),)
+
+    return monotone_async_program(
+        name="bfs", inputs=("root",), init_vals=init_vals, relax=relax,
+        outputs=outputs, output_names=("parents",),
+        output_is_vertex=(True,), n=n, n_local=n_local, inf=INT_INF,
+        local_iters=local_iters, max_rounds=max_levels)

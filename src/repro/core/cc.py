@@ -15,8 +15,9 @@ import jax.numpy as jnp
 
 from repro.core import localops
 from repro.core.compat import axis_size
+from repro.core.monotone import monotone_async_program
 from repro.core.partitioned import AXIS, psum_scalar
-from repro.core.superstep import SuperstepProgram
+from repro.core.superstep import AsyncSuperstepProgram, SuperstepProgram
 
 INT_INF = jnp.int32(2 ** 30)
 
@@ -89,3 +90,47 @@ def cc_program(shards, max_rounds: int = 64,
         outputs=lambda state: (state[0],),
         output_names=("labels",), output_is_vertex=(True,),
         max_rounds=max_rounds)
+
+
+def cc_async_program(shards, max_rounds: int = 64,
+                     local_iters: int = 1) -> AsyncSuperstepProgram:
+    """Async label propagation on the double-buffered exchange.
+
+    Min-label propagation is the textbook stale-safe monotone program:
+    labels only decrease, min-combine is idempotent and commutative, so
+    applying a stale or duplicated proposal can never produce a wrong
+    label — the async run converges to the BIT-identical fixed point
+    (min vertex id per component) the BSP variant reaches.  Both edge
+    directions propose into ONE shared (n,) accumulator (a label
+    proposal is addressed to a global vertex id either way), so one
+    exchange per round carries push + pull + the piggybacked halt count.
+    """
+    n, n_local = shards.n, shards.n_local
+
+    def init_vals(g):
+        lo = jax.lax.axis_index(AXIS) * n_local
+        gid = jnp.arange(n_local, dtype=jnp.int32) + lo
+        # every vertex proposes its identity label in round one
+        return gid, jnp.ones((n_local,), bool)
+
+    def relax(g, labels, frontier):
+        srcl = g["out_src_local"]
+        valid = g["out_dst_global"] < n
+        in_dstl = g["in_dst_local"]
+        in_valid = g["in_src_global"] < n
+        push = localops.scatter_combine(
+            g, shards.ell("ell_dst"),
+            jnp.where(frontier[srcl] & valid, labels[srcl], INT_INF),
+            "min", identity=INT_INF)
+        pull = localops.scatter_combine(
+            g, shards.ell("ell_src"),
+            jnp.where(frontier[in_dstl] & in_valid, labels[in_dstl],
+                      INT_INF),
+            "min", identity=INT_INF)
+        return jnp.minimum(push, pull)
+
+    return monotone_async_program(
+        name="cc", inputs=(), init_vals=init_vals, relax=relax,
+        outputs=lambda g, labels: (labels,), output_names=("labels",),
+        output_is_vertex=(True,), n=n, n_local=n_local, inf=INT_INF,
+        local_iters=local_iters, max_rounds=max_rounds)

@@ -123,6 +123,10 @@ def lower_graph_programs(graph_name: str, mesh_name: str, out_dir=None,
         rec["jaxpr_bytes_unfused_total"] = cost.bytes_touched
         rec.update({
             "program": label,
+            # bsp | async: the superstep driver the lowering went
+            # through (async lowers the double-buffered exchange, so
+            # its collective schedule differs from the bsp twin's)
+            "exec_mode": prog.spec.exec_mode,
             "lower_compile_s": round(dt, 2),
             "arg_bytes_per_device": mem.argument_size_in_bytes,
             "temp_bytes_per_device": mem.temp_size_in_bytes,

@@ -14,6 +14,9 @@ of three primitives:
   ``scatter_combine(g, ell, vals, op, identity=...)``
       combine per-edge values into a per-row accumulator with
       op in {add, min, max, or} - the generalized push combine.
+  ``pull_min_eq(g, ell, xg, target)``
+      min-id in-neighbor u of v with xg[u] == target[v] - the
+      level-keyed frontier_pull (bfs/async parent derivation).
 
 Each primitive has THREE implementations, selected at trace time:
 
@@ -207,6 +210,54 @@ def frontier_pull(g: dict, ell: EllMeta, bits, unvisited, *,
             hit = test_bit(bits_g, blk) == 1
             cand = jnp.where(hit, blk, INT_INF).min(axis=1)
             outs.append(jnp.where(unv_b, cand, INT_INF))
+    return jnp.concatenate(outs)[inv]
+
+
+# ---------------------------------------------------------------------------
+# pull_min_eq
+# ---------------------------------------------------------------------------
+
+def pull_min_eq(g: dict, ell: EllMeta, xg, target, *,
+                mode: str | None = None):
+    """Min-id in-neighbor ``u`` of each row ``v`` with ``xg[u] ==
+    target[v]``, or INT_INF when none matches.
+
+    The level-keyed generalization of :func:`frontier_pull`: instead of
+    testing membership in one frontier bitmap, each row names the value
+    class it wants (``target``, e.g. ``level[v] - 1``) and slots whose
+    global field ``xg`` equals it qualify.  bfs/async uses it to derive
+    parents from converged levels in ONE pull — every level's parents at
+    once, where the bitmap form needs a pass per level.  ``ell`` must be
+    the neighbor-id structure (``ell_in``); no Pallas kernel applies, so
+    the kernel mode rides the ell path (the module-doc rule for
+    non-kernelizable ops).
+    """
+    mode = mode or get_mode()
+    n = ell.sentinel
+    if mode == "ref" or not _has_ell(g, ell):
+        src = g["in_src_global"]
+        dstl = g["in_dst_local"]
+        valid = src < n
+        hit = valid & (xg[jnp.where(valid, src, 0)] == target[dstl])
+        return jnp.full((ell.n_rows,), INT_INF, jnp.int32).at[
+            jnp.where(hit, dstl, ell.n_rows - 1)].min(
+            jnp.where(hit, src, INT_INF), mode="drop")
+
+    idx = g[f"{ell.name}_idx"]
+    inv = g[f"{ell.name}_inv"]
+    perm = g[f"{ell.name}_perm"]
+    tgt_ell = target[perm]
+    # sentinel n indexes one slot past xg: append a guard no real target
+    # equals (INT_INF; targets are levels < n or INT_INF - 1 for
+    # unreached rows)
+    xg_g = jnp.concatenate([xg, jnp.full((1,), INT_INF, xg.dtype)])
+    outs = []
+    for r0, rows, k, blk in _buckets(ell, idx):
+        if k == 0:
+            outs.append(jnp.full((rows,), INT_INF, jnp.int32))
+            continue
+        hit = xg_g[blk] == tgt_ell[r0:r0 + rows][:, None]
+        outs.append(jnp.where(hit, blk, INT_INF).min(axis=1))
     return jnp.concatenate(outs)[inv]
 
 

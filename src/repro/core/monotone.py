@@ -1,0 +1,125 @@
+"""Shared machinery for the monotone async program family.
+
+bfs/async, cc/async and sssp/async are all the SAME algorithm shape:
+a value per vertex (level / label / distance) that only ever DECREASES
+under an idempotent, commutative MIN-combine.  That algebra is what
+makes them stale-safe *exactly*: applying a proposal late, twice, or
+out of order can never push a value below its true fixed point nor keep
+it above one (every improvement is eventually delivered and min-applied),
+so the async run converges to the bit-identical answer the BSP oracle
+checks — the "min-combine tolerates staleness" claim, made executable.
+
+:func:`monotone_async_program` builds the
+:class:`~repro.core.superstep.AsyncSuperstepProgram` from one
+algorithm-specific ``relax`` callback.  Per round:
+
+  ``local``  runs ``local_iters`` relaxation sweeps on already-resident
+      data while the previous round's exchange is still in flight (the
+      overlap window): own-partition improvements are applied
+      IMMEDIATELY (multi-hop progress inside one round — the async
+      latency win), remote proposals accumulate into a carried ``(n,)``
+      min-accumulator.
+  ``fold``  finishes the in-flight handle, min-applies the delivered
+      updates, relaxes ONCE from them (so a cross-partition hop still
+      costs one round — BSP parity, the local closure only *adds*
+      progress), then ships the accumulator through
+      ``exchange_min_start`` with the round's change count piggybacked
+      as the halt scalar — no separate psum collective anywhere.
+
+Termination: the loop halts when TWO consecutive piggybacked global
+change counts are zero.  One zero is not enough — proposals shipped in
+a zero-change round may still derive from the round before it — but two
+quiescent rounds imply the last shipped accumulator was empty and every
+frontier is drained, so the state is a global fixed point.  Both counts
+arrive on the data exchange, so ``halt`` is globally uniform and every
+partition runs the same trip count (the while-loop requirement).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partitioned import AXIS, exchange_min_start, \
+    exchange_min_finish
+from repro.core.superstep import AsyncSuperstepProgram
+
+
+def _own_slice(vec, n_local: int):
+    """This partition's (n_local,) slice of a global (n,) accumulator."""
+    lo = jax.lax.axis_index(AXIS) * n_local
+    return jax.lax.dynamic_slice_in_dim(vec, lo, n_local)
+
+
+def monotone_async_program(*, name: str, variant: str = "async",
+                           inputs, init_vals, relax, outputs,
+                           output_names, output_is_vertex,
+                           n: int, n_local: int, inf,
+                           local_iters: int = 1, max_rounds: int = 64,
+                           prepare=None) -> AsyncSuperstepProgram:
+    """Build a monotone min-combine async program.
+
+    ``init_vals(g, *inputs) -> (vals0, frontier0)`` seeds the (n_local,)
+    value vector and the changed-vertex mask; ``relax(g, vals, frontier)
+    -> (n,)`` proposes min-candidates for ALL vertices from the frontier
+    sources (identity ``inf`` elsewhere); ``outputs(g, vals) -> tuple``
+    finalizes (it runs outside the loop and may use collectives).
+    ``local_iters`` is the closure depth: relaxation sweeps per overlap
+    window (>= 1; more sweeps trade local FLOPs for rounds on graphs
+    with long intra-partition chains).
+    """
+    if local_iters < 1:
+        raise ValueError(f"local_iters must be >= 1, got {local_iters}")
+
+    def _sweep(g, vals, frontier, acc, cnt):
+        """One relaxation sweep: propose from ``frontier``, min-apply the
+        own slice now, accumulate the rest for the next ship."""
+        prop = relax(g, vals, frontier)
+        acc = jnp.minimum(acc, prop)
+        new_vals = jnp.minimum(vals, _own_slice(prop, n_local))
+        changed = new_vals < vals
+        return new_vals, changed, acc, cnt + changed.sum(dtype=jnp.int32)
+
+    def init(g, *ins):
+        vals0, frontier0 = init_vals(g, *ins)
+        acc0 = jnp.full((n,), inf, vals0.dtype)
+        # seed exchange: empty payload, count 1 so halt can't fire before
+        # the first real round's count arrives
+        handle0 = exchange_min_start(acc0, jnp.ones((), vals0.dtype))
+        state0 = (vals0, frontier0, acc0,
+                  jnp.int32(1), jnp.int32(1), jnp.int32(0))
+        return state0, handle0
+
+    def local(g, state):
+        vals, frontier, acc, gprev, gprev2, cnt = state
+        for _ in range(local_iters):
+            vals, frontier, acc, cnt = _sweep(g, vals, frontier, acc, cnt)
+        return vals, frontier, acc, gprev, gprev2, cnt
+
+    def fold(g, state, handle):
+        vals, frontier, acc, gprev, _, cnt = state
+        mine, total = exchange_min_finish(handle)
+        v1 = jnp.minimum(vals, mine)
+        recv = v1 < vals
+        # relax once from the delivered changes before shipping, so a
+        # cross-partition relay costs one round, not two
+        v2, own_changed, acc, _ = _sweep(g, v1, recv, acc, jnp.int32(0))
+        cnt = cnt + recv.sum(dtype=jnp.int32) \
+            + own_changed.sum(dtype=jnp.int32)
+        new_handle = exchange_min_start(acc, cnt.astype(vals.dtype))
+        state = (v2, frontier | own_changed,
+                 jnp.full((n,), inf, vals.dtype),
+                 total.astype(jnp.int32), gprev, jnp.int32(0))
+        return state, new_handle
+
+    def halt(state):
+        return (state[3] <= 0) & (state[4] <= 0)
+
+    kwargs = {} if prepare is None else {"prepare": prepare}
+    return AsyncSuperstepProgram(
+        name=name, variant=variant, inputs=tuple(inputs),
+        init=init, local=local, fold=fold, halt=halt,
+        outputs=lambda g, state: outputs(g, state[0]),
+        output_names=tuple(output_names),
+        output_is_vertex=tuple(output_is_vertex),
+        max_rounds=max_rounds, **kwargs)

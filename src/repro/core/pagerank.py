@@ -36,8 +36,8 @@ import jax.numpy as jnp
 
 from repro.core import localops
 from repro.core.partitioned import AXIS, broadcast_global, exchange_sum, \
-    psum_scalar
-from repro.core.superstep import SuperstepProgram
+    exchange_sum_finish, exchange_sum_start, psum_scalar
+from repro.core.superstep import AsyncSuperstepProgram, SuperstepProgram
 
 
 ALPHA = 0.85
@@ -172,4 +172,106 @@ def pagerank_fast_program(shards, iters: int = 50,
         halt=lambda state: state[2] <= tol,
         outputs=lambda state: (state[0], state[2]),
         output_names=("rank", "err"), output_is_vertex=(True, False),
+        max_rounds=iters)
+
+
+def pagerank_async_program(shards, iters: int = 64, tol: float = 1e-6,
+                           staleness: int = 1) -> AsyncSuperstepProgram:
+    """Bounded-staleness push PageRank on the double-buffered exchange.
+
+    The rank update splits into an own-partition term (always fresh —
+    computed in the overlap window every round) and a remote term
+    (delivered by the in-flight reduce-scatter): each round runs
+    ``rank = base + alpha * (own + remote_snapshot)``, and the remote
+    snapshot refreshes only every ``staleness`` rounds — the bounded-
+    staleness knob.  Between refreshes NO collective runs at all (wire
+    per round drops by the same factor); at a refresh the exchange that
+    has been in flight since the previous one is finished and the next
+    is started, with the local residual ``sum |delta rank|`` piggybacked
+    as the payload's trailing column so convergence detection never pays
+    a separate psum barrier.
+
+    Staleness is BOUNDED, not best-effort: the remote term used in any
+    round derives from ranks at most ``2 * staleness + 1`` rounds old
+    (shipped <= staleness rounds after they were computed, then served
+    for <= staleness rounds).  The program tracks the realized maximum
+    and reports it as the ``max_age`` output, which the conformance
+    lane asserts against that bound.  Power iteration is an alpha-
+    contraction with ONE fixed point, so the stale recurrence
+    ``e(k+1) <= alpha * max(e(k), ..., e(k - 2*staleness - 1))`` still
+    converges to the exact BSP answer — per-round error may oscillate,
+    but its max over windows of ``2*staleness + 2`` rounds (delay bound
+    + 1) is monotone non-increasing (the property suite pins this on
+    the NumPy model of the recurrence).
+    """
+    n, n_local, n_orig = shards.n, shards.n_local, shards.n_orig
+    ell_dst = shards.ell("ell_dst")
+    base = (1.0 - ALPHA) / n_orig
+    if staleness < 1:
+        raise ValueError(f"staleness must be >= 1, got {staleness}")
+
+    def _contrib_acc(g, rank):
+        """(n,) push accumulator with the OWN slice zeroed for shipping:
+        the exchange must deliver purely-remote contributions."""
+        srcl = g["out_src_local"]
+        valid = g["out_dst_global"] < n
+        contrib = _local_contrib(rank, g["out_degree"])
+        acc = localops.scatter_combine(
+            g, ell_dst, jnp.where(valid, contrib[srcl], 0.0), "add",
+            identity=jnp.float32(0.0))
+        lo = jax.lax.axis_index(AXIS) * n_local
+        own = jax.lax.dynamic_slice_in_dim(acc, lo, n_local)
+        ship = jax.lax.dynamic_update_slice_in_dim(
+            acc, jnp.zeros((n_local,), jnp.float32), lo, axis=0)
+        return own, ship
+
+    def init(g):
+        rank0 = jnp.full((n_local,), 1.0 / n_orig, jnp.float32)
+        _, ship0 = _contrib_acc(g, rank0)
+        # the err column ships 1.0 per partition so halt can't fire
+        # before a real residual arrives
+        handle0 = exchange_sum_start(ship0, jnp.float32(1.0))
+        state0 = (rank0, jnp.zeros((n_local,), jnp.float32), ship0,
+                  jnp.float32(1.0), jnp.float32(1.0), jnp.int32(0),
+                  jnp.int32(1), jnp.int32(1), jnp.int32(1))
+        return state0, handle0
+
+    def local(g, state):
+        rank, remote, _, _, err_g, it, age_cur, age_infl, max_age = state
+        own, ship = _contrib_acc(g, rank)
+        new_rank = base + ALPHA * (own + remote)
+        err_local = jnp.abs(new_rank - rank).sum()
+        max_age = jnp.maximum(max_age, age_cur)
+        return (new_rank, remote, ship, err_local, err_g, it,
+                age_cur, age_infl, max_age)
+
+    def fold(g, state, handle):
+        (rank, remote, ship, err_local, err_g, it,
+         age_cur, age_infl, max_age) = state
+
+        def refresh(_):
+            remote_new, err_glob = exchange_sum_finish(handle)
+            new_handle = exchange_sum_start(ship, err_local)
+            # delivered snapshot: shipped age_infl rounds of aging ago,
+            # +1 for this round; the fresh payload is 1 round old
+            return (remote_new, err_glob, new_handle,
+                    age_infl + jnp.int32(1), jnp.int32(1))
+
+        def keep(_):
+            return (remote, err_g, handle,
+                    age_cur + jnp.int32(1), age_infl + jnp.int32(1))
+
+        remote, err_g, handle, age_cur, age_infl = jax.lax.cond(
+            it % staleness == 0, refresh, keep, operand=None)
+        state = (rank, remote, ship, err_local, err_g, it + 1,
+                 age_cur, age_infl, max_age)
+        return state, handle
+
+    return AsyncSuperstepProgram(
+        name="pagerank", variant="async", inputs=(),
+        init=init, local=local, fold=fold,
+        halt=lambda state: state[4] <= tol,
+        outputs=lambda g, state: (state[0], state[4], state[8]),
+        output_names=("rank", "err", "max_age"),
+        output_is_vertex=(True, False, False),
         max_rounds=iters)

@@ -118,3 +118,91 @@ def broadcast_global(local_vals, axis_name: str = AXIS):
 
 def psum_scalar(x, axis_name: str = AXIS):
     return jax.lax.psum(x, axis_name)
+
+
+# --------------------------------------------------------------------------
+# Double-buffered exchange: start / finish pairs.
+#
+# The blocking primitives above fuse "ship the proposals" and "combine at
+# the owner" into one call, which is exactly the BSP barrier the source
+# paper blames for latency-bound scaling.  The ``*_start`` forms below
+# issue ONLY the wire movement (all_to_all / psum_scatter) and return the
+# raw received rows as an opaque in-flight handle — a plain array pytree
+# that an async driver carries across a ``lax.while_loop`` iteration.  The
+# matching ``*_finish`` forms are pure local reductions over the handle.
+# Round k's handle is finished AFTER round k+1's local compute, so the
+# local work overlaps the in-flight collective (the serve executor's
+# device/host overlap, replayed inside the superstep loop).
+#
+# Every start form also piggybacks one reduction scalar (a halt count or
+# residual) as an extra payload column, so convergence detection rides
+# the data exchange instead of paying a separate psum collective per
+# round.  Each partition stamps its local scalar on all P outgoing rows;
+# after the exchange the receiver holds all P stamps, and summing them
+# reproduces ``psum_scalar`` bit-for-bit (integer-valued scalars stay
+# exact in f32 payloads up to 2**24; the property suite pins this).
+# --------------------------------------------------------------------------
+
+
+def exchange_min_start(val_global, scalar, axis_name: str = AXIS):
+    """Issue the MIN-combine exchange of ``(n,)`` proposals without
+    reducing.  ``scalar`` (the piggybacked halt count) is appended as a
+    trailing payload column in the proposal dtype.  Returns the in-flight
+    handle: ``(1, P, n_local + 1)`` received rows."""
+    parts = axis_size(axis_name)
+    n_local = val_global.shape[0] // parts
+    blocks = val_global.reshape(parts, n_local)
+    payload = jnp.concatenate(
+        [blocks, jnp.full((parts, 1), scalar, blocks.dtype)], axis=1)
+    return jax.lax.all_to_all(payload.reshape(parts, 1, n_local + 1),
+                              axis_name, split_axis=0, concat_axis=1)
+
+
+def exchange_min_finish(handle):
+    """Pure-local reduction of an :func:`exchange_min_start` handle:
+    ``((n_local,) combined minima, global scalar sum)``."""
+    rows = handle[0]                            # (P, n_local + 1)
+    return rows[:, :-1].min(axis=0), rows[:, -1].sum()
+
+
+def exchange_sum_start(acc_global, scalar, axis_name: str = AXIS):
+    """Issue the SUM-combine reduce-scatter of ``(n,)`` proposals with a
+    piggybacked scalar column.  ``psum_scatter`` combines on the wire, so
+    the handle is already reduced data — the split still buys the driver
+    a full local-compute window before :func:`exchange_sum_finish` reads
+    it.  Returns the ``(n_local + 1,)`` handle."""
+    parts = axis_size(axis_name)
+    n_local = acc_global.shape[0] // parts
+    blocks = acc_global.reshape(parts, n_local)
+    payload = jnp.concatenate(
+        [blocks, jnp.full((parts, 1), scalar, blocks.dtype)], axis=1)
+    return jax.lax.psum_scatter(payload, axis_name, scatter_dimension=0,
+                                tiled=False)
+
+
+def exchange_sum_finish(handle):
+    """``((n_local,) combined sums, global scalar sum)``."""
+    return handle[:-1], handle[-1]
+
+
+def exchange_or_start(mask_global, scalar, axis_name: str = AXIS):
+    """Issue the bit-packed OR exchange of an ``(n,)`` bool mask with a
+    piggybacked uint32 count word.  Returns the ``(1, P, n_words + 1)``
+    handle; finish with :func:`exchange_or_finish` (which needs the
+    static ``n_local`` because the handle itself stays a pure array
+    pytree a loop carry can hold)."""
+    parts = axis_size(axis_name)
+    n_local_words = mask_global.shape[0] // parts // 32
+    blocks = pack_bits(mask_global).reshape(parts, n_local_words)
+    payload = jnp.concatenate(
+        [blocks, jnp.full((parts, 1), scalar, jnp.uint32)], axis=1)
+    return jax.lax.all_to_all(payload.reshape(parts, 1, n_local_words + 1),
+                              axis_name, split_axis=0, concat_axis=1)
+
+
+def exchange_or_finish(handle, n_local: int):
+    """``((n_local,) bool OR-combined mask, global int32 scalar sum)``."""
+    rows = handle[0]                            # (P, n_words + 1)
+    acc = jax.lax.reduce(rows[:, :-1], jnp.uint32(0),
+                         jax.lax.bitwise_or, (0,))
+    return unpack_bits(acc, n_local), rows[:, -1].sum().astype(jnp.int32)

@@ -6,16 +6,24 @@ launcher, the benchmark harness) enumerates programs from here instead
 of hard-coding algorithm names, so adding a workload is ONE registration
 plus an algorithm module — no per-layer edits.
 
-Registered pairs: ``bfs/bsp``, ``bfs/fast``, ``pagerank/bsp``,
-``pagerank/fast``, ``pagerank/warm``, ``sssp``, ``cc``,
-``cc/incremental``, ``triangles``, ``kcore``, ``kcore/incremental``,
-``betweenness`` (single-variant algorithms use the ``"default"``
-variant and may be addressed by bare algo name).
+Registered pairs: ``bfs/bsp``, ``bfs/fast``, ``bfs/async``,
+``pagerank/bsp``, ``pagerank/fast``, ``pagerank/warm``,
+``pagerank/async``, ``sssp``, ``sssp/async``, ``cc``,
+``cc/incremental``, ``cc/async``, ``triangles``, ``kcore``,
+``kcore/incremental``, ``betweenness`` (single-variant algorithms use
+the ``"default"`` variant and may be addressed by bare algo name).
 
 Inputs come in KINDS: ``"scalar"`` per-query values (a root vertex,
 batchable through the bucket ladder) and ``"vertex_i32"`` /
 ``"vertex_f32"`` whole vertex fields (the warm seeds of the
 incremental variants — one launch each, never vmapped).
+
+Every spec carries an ``exec_mode``: ``"bsp"`` programs run the
+barrier-per-round driver, ``"async"`` programs the double-buffered
+``run_program_async`` driver (``core/superstep.py``).  Callers that
+think in modes rather than variant names resolve through
+:func:`mode_variant` (``GraphEngine.program(..., exec_mode="async")``
+rides it).
 """
 
 from __future__ import annotations
@@ -35,6 +43,7 @@ from repro.core.graph import GraphShards
 from repro.core.superstep import SuperstepProgram
 
 INPUT_KINDS = ("scalar", "vertex_i32", "vertex_f32")
+EXEC_MODES = ("bsp", "async")
 
 
 @dataclass(frozen=True)
@@ -85,6 +94,10 @@ class ProgramSpec:
     input_kinds: tuple[str, ...] = ()
     # set on warm-seeded dynamic-graph variants (see IncrementalSpec)
     incremental: IncrementalSpec | None = None
+    # which superstep driver the built program runs under: "bsp"
+    # (barrier per round) or "async" (double-buffered exchange with the
+    # halt scalar piggybacked on the data payload)
+    exec_mode: str = "bsp"
 
     def __post_init__(self):
         if not self.input_kinds:
@@ -99,6 +112,10 @@ class ProgramSpec:
             raise ValueError(
                 f"{self.algo}/{self.variant}: unknown input kinds "
                 f"{sorted(bad)}; valid: {INPUT_KINDS}")
+        if self.exec_mode not in EXEC_MODES:
+            raise ValueError(
+                f"{self.algo}/{self.variant}: exec_mode "
+                f"{self.exec_mode!r} not in {EXEC_MODES}")
 
     @property
     def key(self) -> str:
@@ -200,6 +217,28 @@ def available() -> list[tuple[str, str]]:
 
 def variants(algo: str) -> list[str]:
     return [v for (a, v) in _REGISTRY if a == algo]
+
+
+def async_pairs() -> list[tuple[str, str]]:
+    """All registered pairs whose programs run the async driver."""
+    return [k for k, spec in _REGISTRY.items() if spec.exec_mode == "async"]
+
+
+def mode_variant(algo: str, exec_mode: str) -> str | None:
+    """The variant bare-``algo`` resolution picks under ``exec_mode``:
+    the algo's default variant for ``"bsp"``, its first registered async
+    variant for ``"async"`` (``None`` when the algo has no async
+    variant — e.g. ``triangles``, whose rotation is barrier-shaped)."""
+    if exec_mode not in EXEC_MODES:
+        raise ValueError(f"exec_mode {exec_mode!r} not in {EXEC_MODES}")
+    if exec_mode == "bsp":
+        v = _DEFAULT_VARIANT.get(algo)
+        return v if v is not None \
+            and _REGISTRY[(algo, v)].exec_mode == "bsp" else None
+    for (a, v), spec in _REGISTRY.items():
+        if a == algo and spec.exec_mode == "async":
+            return v
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -313,6 +352,44 @@ register(ProgramSpec(
         "two-phase program; sum over batched sources for centrality)"),
     default=True)
 
+# -- async (double-buffered) variants: stale-tolerant programs on
+#    run_program_async, each conformance-gated against the same NumPy
+#    oracle as its BSP siblings ------------------------------------------
+
+register(ProgramSpec(
+    algo="bfs", variant="async", exec_mode="async",
+    make=lambda g, **p: _bfs.bfs_async_program(g, **p),
+    inputs=("root",), defaults={"max_levels": 64, "local_iters": 1},
+    doc="async BFS: monotone min-combine levels overlap the in-flight "
+        "exchange, halt count piggybacked on the level payload (no "
+        "separate psum), parents derived post-loop from exact levels"))
+
+register(ProgramSpec(
+    algo="pagerank", variant="async", exec_mode="async",
+    make=lambda g, **p: _pr.pagerank_async_program(g, **p),
+    inputs=(),
+    defaults={"iters": 64, "tol": 1e-6, "staleness": 1},
+    doc="bounded-staleness push PageRank: fresh own-slice term every "
+        "round, remote term refreshed every `staleness` rounds by the "
+        "double-buffered reduce-scatter with the residual piggybacked; "
+        "remote age provably <= 2*staleness+1 (reported as max_age)"))
+
+register(ProgramSpec(
+    algo="cc", variant="async", exec_mode="async",
+    make=lambda g, **p: _cc.cc_async_program(g, **p),
+    inputs=(), defaults={"max_rounds": 64, "local_iters": 1},
+    doc="async min-label propagation: both edge directions share one "
+        "min-accumulator exchange per round; staleness-exact (labels "
+        "only decrease under idempotent min-combine)"))
+
+register(ProgramSpec(
+    algo="sssp", variant="async", exec_mode="async",
+    make=lambda g, **p: _sssp.sssp_async_program(g, **p),
+    inputs=("root",), defaults={"max_rounds": 64, "local_iters": 1},
+    doc="async Bellman-Ford: local closure relaxes own-partition "
+        "improvements while the distance exchange is in flight; "
+        "staleness-exact under min-combine"))
+
 
 # ---------------------------------------------------------------------------
 # Docs generation: the algorithms table in docs/API.md is this function's
@@ -326,8 +403,9 @@ def algorithms_markdown_table() -> str:
     from repro.core.graph import abstract_graph
     g = abstract_graph(256, 8, 1)
     lines = [
-        "| program | inputs | params (defaults) | outputs | description |",
-        "| --- | --- | --- | --- | --- |",
+        "| program | exec | inputs | params (defaults) | outputs "
+        "| description |",
+        "| --- | --- | --- | --- | --- | --- |",
     ]
     for algo, variant in available():
         spec = _REGISTRY[(algo, variant)]
@@ -339,8 +417,8 @@ def algorithms_markdown_table() -> str:
         params = ", ".join(
             f"{k}={spec.defaults[k]!r}" for k in sorted(spec.defaults)) or "—"
         outs = ", ".join(prog.output_names) + ", rounds"
-        lines.append(f"| `{spec.key}`{mark} | {ins} | {params} | {outs} "
-                     f"| {spec.doc} |")
+        lines.append(f"| `{spec.key}`{mark} | {spec.exec_mode} | {ins} "
+                     f"| {params} | {outs} | {spec.doc} |")
     return "\n".join(lines)
 
 

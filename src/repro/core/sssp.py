@@ -20,8 +20,9 @@ import jax.numpy as jnp
 
 from repro.core import localops
 from repro.core.compat import axis_size
+from repro.core.monotone import monotone_async_program
 from repro.core.partitioned import AXIS, psum_scalar
-from repro.core.superstep import SuperstepProgram
+from repro.core.superstep import AsyncSuperstepProgram, SuperstepProgram
 
 F32_INF = jnp.float32(1e30)
 
@@ -80,3 +81,47 @@ def sssp_program(shards, max_rounds: int = 64) -> SuperstepProgram:
         outputs=lambda state: (state[0],),
         output_names=("dist",), output_is_vertex=(True,),
         max_rounds=max_rounds)
+
+
+def sssp_async_program(shards, max_rounds: int = 64,
+                       local_iters: int = 1) -> AsyncSuperstepProgram:
+    """Async Bellman-Ford on the double-buffered exchange.
+
+    Distance relaxation is monotone min-combine, so staleness is exact:
+    a late or duplicated proposal ``dist[u] + w`` is still a valid upper
+    bound and min-application can neither overshoot the true distance
+    nor stick above it (every improvement is eventually delivered).
+    The async run converges to the same distances as the BSP variant,
+    with the halt count riding the distance exchange (the int-valued
+    count is exact in the f32 payload).  The halt-count transport-dtype
+    trick and the quiescence rule live in ``core/monotone.py``.
+    """
+    n, n_local = shards.n, shards.n_local
+    ell_dst = shards.ell("ell_dst")
+
+    def prepare(g):
+        lo = jax.lax.axis_index(AXIS) * n_local
+        g = dict(g)
+        g["out_weight"] = edge_weight(g["out_src_local"] + lo,
+                                      g["out_dst_global"])
+        return g
+
+    def init_vals(g, root):
+        lo = jax.lax.axis_index(AXIS) * n_local
+        owned = (root >= lo) & (root < lo + n_local)
+        at_root = owned & (jnp.arange(n_local) == root - lo)
+        return jnp.where(at_root, 0.0, F32_INF), at_root
+
+    def relax(g, dist, frontier):
+        srcl = g["out_src_local"]
+        active = frontier[srcl] & (g["out_dst_global"] < n)
+        return localops.scatter_combine(
+            g, ell_dst,
+            jnp.where(active, dist[srcl] + g["out_weight"], F32_INF),
+            "min", identity=F32_INF)
+
+    return monotone_async_program(
+        name="sssp", inputs=("root",), init_vals=init_vals, relax=relax,
+        outputs=lambda g, dist: (dist,), output_names=("dist",),
+        output_is_vertex=(True,), n=n, n_local=n_local, inf=F32_INF,
+        local_iters=local_iters, max_rounds=max_rounds, prepare=prepare)

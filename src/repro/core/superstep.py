@@ -75,6 +75,102 @@ class SuperstepProgram:
         return f"{self.name}/{self.variant}"
 
 
+# Documented rounds slack for async vs BSP runs of the SAME monotone
+# program: fold() relaxes delivered updates before re-shipping, so a
+# cross-partition hop still costs one round (BSP parity) and the local
+# closure only adds progress — the overhead is pipeline fill plus the
+# two-quiescent-rounds halt rule.  tests/test_async.py and the
+# benchmarks/compare.py rounds gate both read these.
+ASYNC_ROUNDS_SLACK_FACTOR = 1.5
+ASYNC_ROUNDS_SLACK_CONST = 4
+
+
+@dataclass(frozen=True)
+class AsyncSuperstepProgram:
+    """A stale-tolerant algorithm for the double-buffered driver.
+
+    Where :class:`SuperstepProgram.step` blocks on a full exchange every
+    round (the BSP barrier), an async program splits one round into:
+
+      init(g, *inputs) -> (state, handle)
+                             seed the state AND issue the first exchange
+                             (``partitioned.exchange_*_start``) so round
+                             one has an in-flight handle to finish
+      local(g, state) -> state
+                             the overlap window: compute on already-
+                             resident data only — NO collectives here;
+                             this work hides the in-flight exchange
+      fold(g, state, handle) -> (state, handle)
+                             finish the handle (pure local reduction),
+                             apply the delivered updates, and start the
+                             next exchange
+      halt(state) -> bool    must read only globally-uniform values (the
+                             piggybacked scalar a finish returned) — all
+                             partitions run the same trip count
+      outputs(g, state) -> tuple
+                             post-loop finalization; unlike the BSP form
+                             it receives ``g`` (and MAY use collectives:
+                             it runs outside the loop, uniformly)
+
+    The driver calls ``local`` then ``fold`` each round, so the exchange
+    started in round k's ``fold`` crosses the loop carry and is consumed
+    after round k+1's ``local`` — local compute and wire movement
+    overlap, which is the HPX insight the source paper's follow-up names
+    as the fix for latency-bound BSP scaling.
+    """
+
+    name: str
+    variant: str
+    inputs: tuple[str, ...]
+    init: Callable[..., Any]
+    local: Callable[[dict, Any], Any]
+    fold: Callable[[dict, Any, Any], Any]
+    halt: Callable[[Any], Any]
+    outputs: Callable[[dict, Any], tuple]
+    output_names: tuple[str, ...]
+    output_is_vertex: tuple[bool, ...]
+    max_rounds: int = 64
+    prepare: Callable[[dict], dict] = field(default=lambda g: g)
+
+    @property
+    def key(self) -> str:
+        return f"{self.name}/{self.variant}"
+
+
+def run_program_async(prog: AsyncSuperstepProgram, g: dict, *inputs,
+                      static_iters: int = 0):
+    """The double-buffered driver: same ``(outputs, rounds)`` contract
+    as :func:`run_program`, same while/scan split, but each round is
+    ``local`` (overlap window) then ``fold`` (finish + restart the
+    exchange), with the in-flight handle carried across iterations."""
+    g = prog.prepare(g)
+    state0, handle0 = prog.init(g, *inputs)
+
+    if static_iters:
+        def sbody(carry, _):
+            state, handle, r = carry
+            state, handle = prog.fold(g, prog.local(g, state), handle)
+            return (state, handle, r + 1), None
+
+        (state, _, rounds), _ = jax.lax.scan(
+            sbody, (state0, handle0, jnp.int32(0)), None,
+            length=static_iters)
+        return prog.outputs(g, state), rounds
+
+    def cond(carry):
+        state, _, r = carry
+        return jnp.logical_not(prog.halt(state)) & (r < prog.max_rounds)
+
+    def body(carry):
+        state, handle, r = carry
+        state, handle = prog.fold(g, prog.local(g, state), handle)
+        return state, handle, r + 1
+
+    state, _, rounds = jax.lax.while_loop(
+        cond, body, (state0, handle0, jnp.int32(0)))
+    return prog.outputs(g, state), rounds
+
+
 @dataclass(frozen=True)
 class PhasedProgram:
     """A multi-phase algorithm: a tuple of :class:`SuperstepProgram`s run
@@ -129,6 +225,9 @@ def run_program(prog, g: dict, *inputs, static_iters: int = 0):
     """
     if isinstance(prog, PhasedProgram):
         return run_phases(prog, g, *inputs, static_iters=static_iters)
+    if isinstance(prog, AsyncSuperstepProgram):
+        return run_program_async(prog, g, *inputs,
+                                 static_iters=static_iters)
     g = prog.prepare(g)
     state0 = prog.init(g, *inputs)
 

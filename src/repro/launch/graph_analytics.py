@@ -45,7 +45,7 @@ def _timed(fn, args):
 
 def run(graph_name: str, parts: int, *, pr_iters: int = 50,
         verify: bool = True, seed: int = 42, multi_source: int = 0,
-        layout: str = "ell"):
+        layout: str = "ell", exec_mode: str = "all"):
     from repro.core import localops
     gcfg = graph_workloads.ALL[graph_name]
     print(f"[graph] generating {graph_name}: 2^{gcfg.scale} vertices, "
@@ -65,6 +65,8 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
     for algo, variant in registry.available():
         spec = registry.get_spec(algo, variant)
         name = program_label(algo, variant)
+        if exec_mode != "all" and spec.exec_mode != exec_mode:
+            continue
         if spec.n_budget and g.n > spec.n_budget:
             print(f"[graph] {name:14s}   skipped (n={g.n:,} exceeds its "
                   f"n_budget={spec.n_budget:,})")
@@ -90,6 +92,8 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
             if (not spec.inputs or variant == "bsp"
                     or any(k != "scalar" for k in spec.input_kinds)):
                 continue          # batch only the rooted traversal fast paths
+            if exec_mode != "all" and spec.exec_mode != exec_mode:
+                continue
             if spec.n_budget and g.n > spec.n_budget:
                 continue
             prog = eng.program(algo, variant, batch=multi_source)
@@ -100,14 +104,37 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
                   f"({dt*1e3/multi_source:7.1f} ms/query)")
 
     if verify:
-        p_bsp = eng.gather_vertex_field(results["bfs_bsp"][0][0])
-        p_fast = eng.gather_vertex_field(results["bfs_fast"][0][0])
-        same = ((p_bsp < 2 ** 30) == (p_fast < 2 ** 30)).all()
-        print(f"[verify] BFS reachability bsp==fast: {bool(same)}")
-        r_bsp = eng.gather_vertex_field(results["pagerank_bsp"][0][0])
-        r_fast = eng.gather_vertex_field(results["pagerank_fast"][0][0])
-        rel = np.abs(r_bsp - r_fast).max() / r_bsp.max()
-        print(f"[verify] PageRank bsp-vs-fast max rel diff: {rel:.2e}")
+        if "bfs_bsp" in results and "bfs_fast" in results:
+            p_bsp = eng.gather_vertex_field(results["bfs_bsp"][0][0])
+            p_fast = eng.gather_vertex_field(results["bfs_fast"][0][0])
+            same = ((p_bsp < 2 ** 30) == (p_fast < 2 ** 30)).all()
+            print(f"[verify] BFS reachability bsp==fast: {bool(same)}")
+        if "pagerank_bsp" in results and "pagerank_fast" in results:
+            r_bsp = eng.gather_vertex_field(results["pagerank_bsp"][0][0])
+            r_fast = eng.gather_vertex_field(results["pagerank_fast"][0][0])
+            rel = np.abs(r_bsp - r_fast).max() / r_bsp.max()
+            print(f"[verify] PageRank bsp-vs-fast max rel diff: {rel:.2e}")
+        # async-vs-bsp cross-checks when both modes ran
+        if "bfs_async" in results and "bfs_fast" in results:
+            pa = eng.gather_vertex_field(results["bfs_async"][0][0])
+            pf = eng.gather_vertex_field(results["bfs_fast"][0][0])
+            same = ((pa < 2 ** 30) == (pf < 2 ** 30)).all()
+            print(f"[verify] BFS reachability async==fast: {bool(same)}")
+        if "pagerank_async" in results and "pagerank_bsp" in results:
+            ra = eng.gather_vertex_field(results["pagerank_async"][0][0])
+            rb = eng.gather_vertex_field(results["pagerank_bsp"][0][0])
+            rel = np.abs(ra - rb).max() / rb.max()
+            print(f"[verify] PageRank bsp-vs-async max rel diff: {rel:.2e}")
+        if "cc_async" in results and "cc" in results:
+            la = eng.gather_vertex_field(results["cc_async"][0][0])
+            lb = eng.gather_vertex_field(results["cc"][0][0])
+            print(f"[verify] CC labels async==bsp: "
+                  f"{bool((la == lb).all())}")
+        if "sssp_async" in results and "sssp" in results:
+            da = eng.gather_vertex_field(results["sssp_async"][0][0])
+            db = eng.gather_vertex_field(results["sssp"][0][0])
+            print(f"[verify] SSSP dist async==bsp: "
+                  f"{bool((da == db).all())}")
         if "kcore" in results:
             kmax = int(results["kcore"][0][1])
             print(f"[verify] k-core degeneracy: {kmax}")
@@ -143,11 +170,17 @@ def main():
                          "COO scatter reference path (escape hatch); "
                          "REPRO_LOCALOPS={auto,ref,kernel} further "
                          "overrides the localops dispatch")
+    ap.add_argument("--exec-mode", choices=("all", "bsp", "async"),
+                    default="all",
+                    help="restrict to one superstep driver: bsp runs "
+                         "the synchronous programs only, async the "
+                         "stale-tolerant double-buffered ones; all "
+                         "runs both and cross-checks them in verify")
     ap.add_argument("--no-verify", action="store_true")
     args = ap.parse_args()
     run(args.graph, args.parts, pr_iters=args.pr_iters,
         verify=not args.no_verify, multi_source=args.multi_source,
-        layout=args.layout)
+        layout=args.layout, exec_mode=args.exec_mode)
 
 
 if __name__ == "__main__":

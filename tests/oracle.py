@@ -255,6 +255,37 @@ def _check_pagerank_converged(fields, edges, n, root):
     assert rel < 1e-4, f"pagerank(converged) max rel err {rel:.2e}"
 
 
+# conformance settings for the async lane: pagerank/async sweeps with a
+# non-default staleness so the knob is exercised, and its remote term is
+# then provably at most 2*staleness + 1 rounds old (shipped at most
+# staleness rounds after its source ranks were computed, then served for
+# at most staleness rounds) — the program reports the realized maximum
+# as ``max_age`` and the check asserts the bound.
+ASYNC_PR_STALENESS = 2
+ASYNC_PR_AGE_BOUND = 2 * ASYNC_PR_STALENESS + 1
+# documented staleness tolerance: the bounded-staleness iteration is
+# still an alpha-contraction to the same fixed point, so after a
+# converged run the rank must match the converged oracle to the SAME
+# 1e-4 relative bound the warm variant meets (measured headroom at
+# parts {1,2,4}: worst rel ~1e-5).
+ASYNC_PR_REL_TOL = 1e-4
+
+
+def _check_pagerank_async(fields, edges, n, root):
+    """Variant check for ``pagerank/async``: converged-oracle match
+    within the documented staleness tolerance, PLUS the staleness bound
+    itself — a run whose remote term aged beyond 2*staleness + 1 rounds
+    would be unbounded staleness, which is a different (and unchecked)
+    convergence claim."""
+    ref = pagerank(edges, n, iters=300)
+    rel = np.abs(fields["rank"] - ref).max() / ref.max()
+    assert rel < ASYNC_PR_REL_TOL, \
+        f"pagerank/async max rel err {rel:.2e} (tol {ASYNC_PR_REL_TOL})"
+    assert int(fields["max_age"]) <= ASYNC_PR_AGE_BOUND, \
+        (f"staleness bound violated: max_age {int(fields['max_age'])} > "
+         f"2*{ASYNC_PR_STALENESS}+1")
+
+
 CHECKS = {
     "bfs": _check_bfs,
     "sssp": _check_sssp,
@@ -271,21 +302,29 @@ CHECKS = {
 # cold iteration count) pin against their own oracle form.
 VARIANT_CHECKS = {
     ("pagerank", "warm"): _check_pagerank_converged,
+    ("pagerank", "async"): _check_pagerank_async,
 }
 
 # conformance-run parameter overrides: pagerank runs a fixed iteration
 # budget (tol below reach) so the oracle's power iteration is an exact
 # peer; the fast variant's bf16 compression is off for a tight bound.
 # pagerank/warm instead runs TO CONVERGENCE (300-round cap, tight tol)
-# because its check compares against the converged oracle.
+# because its check compares against the converged oracle —
+# pagerank/async likewise (a stale trajectory can't replay the cold
+# iteration count, but the fixed point is shared).  The monotone async
+# variants (bfs/cc/sssp) run their defaults: staleness never changes
+# their answer, so the base algorithm checks apply EXACTLY.
 CONFORMANCE_PR_ITERS = 40
 CONFORMANCE_PARAMS = {
     ("pagerank", "bsp"): {"iters": CONFORMANCE_PR_ITERS, "tol": 1e-12},
     ("pagerank", "fast"): {"iters": CONFORMANCE_PR_ITERS, "tol": 1e-12,
                            "compress": False},
     ("pagerank", "warm"): {"iters": 300, "tol": 1e-9},
+    ("pagerank", "async"): {"iters": 300, "tol": 1e-9,
+                            "staleness": ASYNC_PR_STALENESS},
     ("cc", "default"): {"max_rounds": 128},
     ("cc", "incremental"): {"max_rounds": 128},
+    ("cc", "async"): {"max_rounds": 128},
 }
 
 

@@ -1,0 +1,173 @@
+"""Async execution mode: rounds accounting, exec_mode resolution and
+loop-mode parity.
+
+The conformance gate (test_oracle_conformance.py) already pins async
+OUTPUTS against the oracles; this module pins the async-specific
+contracts around them:
+
+* rounds-accounting regression — the async variants pay extra rounds
+  for overlap (a cross-partition hop still takes one exchange, and the
+  two-zero quiescence rule adds a constant tail), but that overhead is
+  BOUNDED: async_rounds <= SLACK_FACTOR * bsp_rounds + SLACK_CONST,
+  with identical converged outputs.  The same slack constants gate the
+  benchmark artifact (benchmarks/compare.py), so a regression here
+  fails before it reaches a perf dashboard.
+* exec_mode plumbing — ``program(algo, exec_mode=...)`` re-resolves a
+  bare algo to its mode variant (same cache entry as naming the
+  variant), asserts consistency against an explicit variant, and
+  rejects modes/algos without a variant of that mode.
+* loop parity — ``static_iters`` swaps the async while loop for a
+  fixed-trip scan without changing converged outputs, and batched
+  async programs match their single-source runs.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import run_with_devices
+
+from repro.core import GraphEngine, registry
+from repro.core.graph import partition_graph
+from repro.core.superstep import (ASYNC_ROUNDS_SLACK_CONST,
+                                  ASYNC_ROUNDS_SLACK_FACTOR)
+from repro.graphs import urand_edges
+from repro.launch.mesh import make_graph_mesh
+
+N, E, SEED, ROOT = 512, 2048, 11, 3
+
+# (algo, params) pairs with BOTH a bsp-mode and an async-mode variant
+# whose converged outputs must agree exactly (monotone min-combine)
+MONOTONE = (
+    ("bfs", {"max_levels": 64}),
+    ("cc", {"max_rounds": 64}),
+    ("sssp", {"max_rounds": 64}),
+)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    g = partition_graph(urand_edges(N, E, seed=SEED), N, parts=1)
+    return GraphEngine(g, make_graph_mesh(1))
+
+
+def _run(eng, algo, exec_mode, params, **kw):
+    spec = registry.get_spec(algo, registry.mode_variant(algo, exec_mode))
+    prog = eng.program(algo, exec_mode=exec_mode, **params, **kw)
+    args = (eng.device_graph(),) + (jnp.int32(ROOT),) * len(spec.inputs)
+    *outs, rounds = prog(*args)
+    return [eng.gather_vertex_field(o) for o, isv in
+            zip(outs, prog.program.output_is_vertex) if isv], int(rounds)
+
+
+@pytest.mark.parametrize("algo,params", MONOTONE)
+def test_async_rounds_within_documented_slack(engine, algo, params):
+    """Same outputs, bounded extra rounds — parts=1 in-process."""
+    bsp_outs, bsp_rounds = _run(engine, algo, "bsp", params)
+    async_outs, async_rounds = _run(engine, algo, "async", params)
+    for b, a in zip(bsp_outs, async_outs):
+        np.testing.assert_array_equal(b, a)
+    cap = ASYNC_ROUNDS_SLACK_FACTOR * bsp_rounds + ASYNC_ROUNDS_SLACK_CONST
+    assert async_rounds <= cap, \
+        f"{algo}: async {async_rounds} rounds vs bsp {bsp_rounds} (cap {cap})"
+
+
+_MULTIPART_CODE = """
+import numpy as np
+import jax.numpy as jnp
+from repro.core import GraphEngine, registry
+from repro.core.graph import partition_graph
+from repro.core.superstep import (ASYNC_ROUNDS_SLACK_CONST,
+                                  ASYNC_ROUNDS_SLACK_FACTOR)
+from repro.graphs import urand_edges
+from repro.launch.mesh import make_graph_mesh
+
+n, e, seed, root, parts = {n}, {e}, {seed}, {root}, {parts}
+g = partition_graph(urand_edges(n, e, seed=seed), n, parts=parts)
+eng = GraphEngine(g, make_graph_mesh(parts))
+garr = eng.device_graph()
+for algo, params in {monotone!r}:
+    spec = registry.get_spec(algo)
+    nroot = len(spec.inputs)
+    outs = {{}}
+    rounds = {{}}
+    for mode in ("bsp", "async"):
+        prog = eng.program(algo, exec_mode=mode, **params)
+        *o, r = prog(garr, *([jnp.int32(root)] * nroot))
+        outs[mode] = [eng.gather_vertex_field(x) for x, isv in
+                      zip(o, prog.program.output_is_vertex) if isv]
+        rounds[mode] = int(r)
+    for b, a in zip(outs["bsp"], outs["async"]):
+        np.testing.assert_array_equal(b, a)
+    cap = (ASYNC_ROUNDS_SLACK_FACTOR * rounds["bsp"]
+           + ASYNC_ROUNDS_SLACK_CONST)
+    assert rounds["async"] <= cap, (algo, rounds, cap)
+    print(f"ROUNDS-OK {{algo}} bsp={{rounds['bsp']}} "
+          f"async={{rounds['async']}}")
+"""
+
+
+def test_async_rounds_within_slack_multipart():
+    """Same regression under real multi-partition exchange (parts=4):
+    the slack must absorb the cross-partition relay latency, not just
+    the degenerate single-shard quiescence tail."""
+    out = run_with_devices(
+        _MULTIPART_CODE.format(n=N, e=E, seed=SEED, root=ROOT, parts=4,
+                               monotone=MONOTONE),
+        devices=4, timeout=900)
+    for algo, _ in MONOTONE:
+        assert f"ROUNDS-OK {algo} " in out
+
+
+def test_exec_mode_resolves_bare_algo(engine):
+    """exec_mode='async' on a bare algo is exactly the async variant —
+    the SAME cached compile, not a sibling entry."""
+    via_mode = engine.program("bfs", exec_mode="async")
+    via_name = engine.program("bfs", "async")
+    assert via_mode is via_name
+    assert via_mode.spec.exec_mode == "async"
+    # bsp re-resolution lands on the default variant of that mode
+    bsp = engine.program("bfs", exec_mode="bsp")
+    assert bsp.spec.exec_mode == "bsp"
+    assert bsp is engine.program("bfs", bsp.spec.variant)
+
+
+def test_exec_mode_conflicts_raise(engine):
+    with pytest.raises(ValueError, match="contradicts"):
+        engine.program("bfs", "fast", exec_mode="async")
+    with pytest.raises(ValueError, match="contradicts"):
+        engine.program("pagerank/async", exec_mode="bsp")
+    with pytest.raises(ValueError, match="no async variant"):
+        engine.program("triangles", exec_mode="async")
+    with pytest.raises(ValueError, match="exec_mode"):
+        engine.program("bfs", exec_mode="speculative")
+
+
+def test_exec_mode_in_cache_key(engine):
+    """bsp and async compiles of one algo must coexist in the cache."""
+    a = engine.program("cc", exec_mode="async")
+    b = engine.program("cc", exec_mode="bsp")
+    assert a is not b
+    assert a is engine.program("cc", exec_mode="async")
+
+
+def test_async_static_iters_scan_parity(engine):
+    """Fixed-trip scan (the dry-run path) runs exactly static_iters
+    rounds and still lands on the converged outputs."""
+    (dist,), rounds = _run(engine, "sssp", "async", {}, static_iters=24)
+    assert rounds == 24
+    (dist_dyn,), _ = _run(engine, "sssp", "async", {})
+    np.testing.assert_array_equal(dist, dist_dyn)
+
+
+def test_async_batched_matches_single_source(engine):
+    roots = np.asarray([0, 3, 17, 200], np.int32)
+    prog = engine.program("bfs", exec_mode="async", batch=len(roots))
+    parents, rounds = prog(engine.device_graph(), jnp.asarray(roots))
+    batched = engine.gather_batched_vertex_field(parents)
+    single = engine.program("bfs", exec_mode="async")
+    for i, r in enumerate(roots):
+        p, _ = single(engine.device_graph(), jnp.int32(r))
+        np.testing.assert_array_equal(batched[i],
+                                      engine.gather_vertex_field(p))

@@ -12,6 +12,16 @@ cell).  Seeded variants (``pagerank/warm``, ``cc/incremental``,
 ``kcore/incremental``) run from their COLD seeds here — the static
 gate pins that the seeded program is exact from ANY admissible start;
 the warm-seed path on mutated graphs is gated by test_dynamic.py.
+
+The ASYNC lane rides the same sweep: ``registry.available()``
+enumerates the ``*/async`` pairs, so every async variant runs at parts
+{1, 2, 4} on all three families against the SAME oracles as its BSP
+counterpart — exactly, for the monotone min-combine trio (bfs/cc/sssp:
+staleness never changes a min-combine fixed point), and within the
+documented staleness tolerance for ``pagerank/async`` (whose variant
+check also asserts the realized ``max_age`` against the 2s+1 bound).
+``test_every_async_variant_has_an_oracle`` makes a missing entry a
+HARD registration-time failure, not a silently skipped cell.
 """
 
 import os
@@ -93,3 +103,31 @@ def test_every_algorithm_has_an_oracle():
     algos = {a for a, _ in registry.available()}
     missing = algos - set(oracle.CHECKS)
     assert not missing, f"algorithms without oracles: {sorted(missing)}"
+
+
+def test_every_async_variant_has_an_oracle():
+    """HARD failure: a registered async variant with neither a base
+    algorithm oracle nor a variant-check override would register into
+    the sweep but assert nothing meaningful about staleness."""
+    pairs = registry.async_pairs()
+    assert pairs, "no async variants registered"
+    missing = [f"{a}/{v}" for a, v in pairs
+               if a not in oracle.CHECKS
+               and (a, v) not in oracle.VARIANT_CHECKS]
+    assert not missing, f"async variants without oracles: {missing}"
+
+
+def test_async_lane_shape():
+    """The async lane must cover the four stale-tolerant algorithms,
+    and pagerank/async must run its OWN check: the base pagerank oracle
+    replays a fixed iteration count, which a stale trajectory cannot
+    match — it needs the converged-fixed-point + staleness-bound form."""
+    pairs = registry.async_pairs()
+    assert {a for a, _ in pairs} >= {"bfs", "pagerank", "cc", "sssp"}
+    for algo, variant in pairs:
+        assert registry.get_spec(algo, variant).exec_mode == "async"
+    assert ("pagerank", "async") in oracle.VARIANT_CHECKS
+    # the sweep must run pagerank/async to convergence with the
+    # non-default staleness the check's age bound is stated for
+    params = oracle.CONFORMANCE_PARAMS[("pagerank", "async")]
+    assert params["staleness"] == oracle.ASYNC_PR_STALENESS

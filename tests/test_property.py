@@ -1,4 +1,13 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+The async-exchange properties run the REAL partitioned collectives
+under ``jax.vmap(..., axis_name=AXIS)``: vmap's batching rules for
+``all_to_all``/``psum_scatter``/``psum`` execute the same cross-part
+semantics on one device, so hypothesis can drive random (parts,
+n_local, payload) cases in-process instead of one subprocess per
+example.  Multi-device coverage of the identical code path is gated by
+tests/test_oracle_conformance.py and tests/test_async.py.
+"""
 
 import numpy as np
 import pytest
@@ -9,8 +18,12 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 
-from repro.core.partitioned import pack_bits as _pack_bits, \
-    test_bit as _test_bits
+from repro.core.partitioned import AXIS, \
+    exchange_min_finish, exchange_min_start, \
+    exchange_or_finish, exchange_or_start, \
+    exchange_sum_finish, exchange_sum_start, \
+    pack_bits as _pack_bits, psum_scalar, \
+    test_bit as _test_bits, unpack_bits
 from repro.distributed.compression import quantize_int8
 from repro.graphs import urand_edges
 from repro.core.graph import partition_graph
@@ -88,6 +101,153 @@ def test_int8_error_feedback_bounded(seed, scale):
     np.testing.assert_allclose(
         np.asarray(q.astype(jnp.float32) * s + r), np.asarray(x),
         rtol=1e-5, atol=1e-5)
+
+
+# -- async double-buffered exchange properties ----------------------------
+
+def _parted(fn, *arrays):
+    """Run a partitioned-collective body on one device: vmap over the
+    leading parts axis with the partition axis NAME bound, so
+    all_to_all/psum_scatter/psum execute their real cross-part
+    semantics in-process."""
+    return jax.vmap(fn, axis_name=AXIS)(*arrays)
+
+
+@given(st.sampled_from([2, 3, 4, 8]), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_double_buffered_exchange_matches_blocking(parts, nw, seed):
+    """Splitting an exchange into start (ship) + finish (reduce) must
+    deliver EXACTLY what the blocking collective delivers — same rows,
+    same reduction, bit for bit — for all three reduction flavors."""
+    n_local = 32 * nw
+    n = parts * n_local
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.normal(size=(parts, n)).astype(np.float32))
+    scal = jnp.asarray(rng.integers(0, 1 << 20, parts).astype(np.float32))
+    mask = jnp.asarray(rng.integers(0, 2, size=(parts, n)).astype(bool))
+    cnt = jnp.asarray(rng.integers(0, 1 << 20, parts).astype(np.uint32))
+
+    def min_async(v, s):
+        return exchange_min_finish(exchange_min_start(v, s))
+
+    def min_blocking(v, s):
+        rows = jax.lax.all_to_all(v.reshape(parts, 1, n_local), AXIS,
+                                  split_axis=0, concat_axis=1)
+        return rows.min(axis=(0, 1)), psum_scalar(s)
+
+    for got, ref in zip(_parted(min_async, vals, scal),
+                        _parted(min_blocking, vals, scal)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def sum_async(v, s):
+        return exchange_sum_finish(exchange_sum_start(v, s))
+
+    def sum_blocking(v, s):
+        acc = jax.lax.psum_scatter(v.reshape(parts, n_local), AXIS,
+                                   scatter_dimension=0, tiled=False)
+        return acc, psum_scalar(s)
+
+    for got, ref in zip(_parted(sum_async, vals, scal),
+                        _parted(sum_blocking, vals, scal)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def or_async(m, c):
+        return exchange_or_finish(exchange_or_start(m, c), n_local)
+
+    def or_blocking(m, c):
+        rows = jax.lax.all_to_all(
+            _pack_bits(m).reshape(parts, 1, -1), AXIS,
+            split_axis=0, concat_axis=1).reshape(parts, -1)
+        acc = jax.lax.reduce(rows, jnp.uint32(0), jax.lax.bitwise_or, (0,))
+        return unpack_bits(acc, n_local), \
+            psum_scalar(c.astype(jnp.int32))
+
+    for got, ref in zip(_parted(or_async, mask, cnt),
+                        _parted(or_blocking, mask, cnt)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@given(st.sampled_from([2, 4, 8]), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_piggybacked_halt_is_bitexact_psum(parts, seed):
+    """The halt count stamped on every outgoing row and summed at the
+    receiver must equal a separate psum_scalar BIT FOR BIT: int-valued
+    counts are exact in the f32 payload column up to 2^24, and every
+    receiver sums the same P stamps in the same order."""
+    n_local = 32
+    rng = np.random.default_rng(seed)
+    # per-part change counts; bound so even parts * max stays < 2^24
+    counts = rng.integers(0, 1 << 20, parts).astype(np.int32)
+    vals = jnp.asarray(rng.normal(size=(parts, parts * n_local))
+                       .astype(np.float32))
+
+    def piggy(v, c):
+        _, tot = exchange_min_finish(
+            exchange_min_start(v, c.astype(jnp.float32)))
+        return tot
+
+    def separate(_, c):
+        return psum_scalar(c)
+
+    tot = _parted(piggy, vals, jnp.asarray(counts))
+    ref = _parted(separate, vals, jnp.asarray(counts))
+    # every partition observes the identical, exactly-integral total
+    np.testing.assert_array_equal(np.asarray(tot).astype(np.int64),
+                                  np.asarray(ref).astype(np.int64))
+    assert int(np.asarray(tot)[0]) == int(counts.sum())
+
+
+def _stale_pagerank_residuals(edges, n, parts, staleness, rounds,
+                              alpha=0.85):
+    """NumPy model of pagerank/async's stale recurrence: the push
+    matrix splits into a same-partition block D (always fresh) and a
+    cross-partition block R whose product is shipped at refresh rounds
+    and served stale in between — exactly the program's schedule
+    (init ships R@x0; fold refreshes when it % staleness == 0)."""
+    n_local = n // parts
+    deg = np.bincount(edges[:, 0], minlength=n).astype(np.float64)
+    inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1.0), 0.0)
+    M = np.zeros((n, n))
+    np.add.at(M, (edges[:, 1], edges[:, 0]), inv[edges[:, 0]])
+    owner = np.arange(n) // n_local
+    same = owner[:, None] == owner[None, :]
+    D, R = M * same, M * ~same
+    base = (1.0 - alpha) / n
+    x = np.full(n, 1.0 / n)
+    inflight = R @ x
+    remote = np.zeros(n)
+    res = []
+    for r in range(rounds):
+        new_x = base + alpha * (D @ x + remote)
+        res.append(np.abs(new_x - x).sum())
+        if r % staleness == 0:
+            remote, inflight = inflight, R @ x
+        x = new_x
+    return np.asarray(res)
+
+
+@given(st.integers(2, 8), st.integers(1, 8), st.sampled_from([2, 4]),
+       st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_stale_pagerank_window_max_residual_monotone(
+        nb, degree, parts, staleness, seed):
+    """Bounded staleness keeps pagerank an alpha-contraction with delay
+    bound d = 2*staleness + 1: per-round residual may oscillate, but
+    its max over consecutive windows of d + 1 rounds must be monotone
+    non-increasing — the convergence claim pagerank/async's docstring
+    makes, pinned on the NumPy model of the exact refresh schedule."""
+    n = 16 * nb * parts
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(n * degree, 2))
+    res = _stale_pagerank_residuals(edges, n, parts, staleness, rounds=64)
+    w = 2 * staleness + 2
+    wm = np.asarray([res[i * w:(i + 1) * w].max()
+                     for i in range(len(res) // w)])
+    assert np.all(wm[1:] <= wm[:-1] * (1 + 1e-9) + 1e-15), \
+        f"window-max residual increased: {wm}"
+    # and the tail actually decays (contraction, not mere boundedness)
+    assert wm[-1] < wm[0] * 0.9
 
 
 @given(st.integers(0, 2 ** 16))

@@ -298,6 +298,69 @@ def test_mixed_stream_all_answered(served):
     assert ("bfs_fast", 4) in cells and ("cc", 0) in cells
 
 
+def test_async_served_matches_direct_depth2(served):
+    """Async-mode programs under the serving stack: rooted async
+    queries coalesce onto the padded batch launch, async refreshes ride
+    bucket 0, and with depth=2 two async launches are genuinely in
+    flight together in the executor — every served field must still be
+    bit-identical to the direct async engine call.  (The ALL_PAIRS
+    parametrization above covers each async pair alone; this pins the
+    interleaved, overlapped stream.)"""
+    _, eng, garr, _ = served
+    server = GraphServer(eng, buckets=(4,), depth=2)
+    qs = [query("bfs/async", root=5), query("cc/async"),
+          query("sssp/async", root=9), query("pagerank/async"),
+          query("bfs/async", root=31)]
+    results = server.serve(qs)
+    assert [r.qid for r in results] == [q.qid for q in qs]
+    assert [r.bucket for r in results] == [4, 0, 4, 0, 4]
+    for q, r in zip(qs, results):
+        prog = eng.program(r.key.algo, r.key.variant)
+        assert prog.spec.exec_mode == "async"
+        extra = (jnp.int32(q.root),) if q.root is not None else ()
+        *outs, rounds = prog(garr, *extra)
+        assert r.rounds == int(rounds)
+        for name, isv, o in zip(prog.program.output_names,
+                                prog.program.output_is_vertex, outs):
+            want = (eng.gather_vertex_field(o) if isv
+                    else np.asarray(o)[()])
+            np.testing.assert_array_equal(
+                r[name], want,
+                err_msg=f"{r.key.label} field {name!r}: served != direct")
+
+
+def test_async_epoch_snapshot_isolation():
+    """An ASYNC launch in flight when mutate() runs answers for the
+    pre-mutation epoch: the double-buffered exchange loop reads the
+    graph buffers captured at dispatch for its whole lifetime, so the
+    copy-on-write patch must never swap them out from under it (the
+    BSP twin of this test lives in test_dynamic.py)."""
+    import oracle
+    from test_dynamic import _apply_host
+    n, e = 512, 6100
+    edges = urand_edges(n, e, seed=7)
+    g = partition_graph(edges, n, parts=1)
+    eng = GraphEngine(g, make_graph_mesh(1))
+    server = GraphServer(eng, buckets=(4,))
+    q_old = query("cc/async")
+    server.submit_query(q_old)
+    server.pump()                      # epoch-0 async launch in flight
+    dyn = server.dynamic_graph()
+    dels = dyn.sample_deletable(40, np.random.default_rng(1))
+    server.mutate(deletes=dels)
+    res_new = server.serve([query("cc/async")])[0]
+    server.drain()
+    res_old = server.results.pop(q_old.qid)
+
+    assert res_old.epoch == 0 and res_new.epoch == 1
+    np.testing.assert_array_equal(
+        res_old["labels"], oracle.cc_labels(edges, n),
+        err_msg="in-flight async launch must answer pre-mutation epoch")
+    np.testing.assert_array_equal(
+        res_new["labels"],
+        oracle.cc_labels(_apply_host(edges, deletes=dels), n))
+
+
 # -- workload generator --------------------------------------------------
 
 
