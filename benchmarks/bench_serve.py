@@ -13,6 +13,13 @@ batched-BFS ratio (recorded in the artifact's ``speedup`` section)
 stays >= 3x.  Refresh programs (``cc``) bench as sequential shared
 launches (``bucket=0``).
 
+A final ``bucket="overload"`` row replays a bfs trace at 2x the
+measured closed-loop capacity through a bounded-queue, deadlined
+server: it records admitted qps / p99 plus ``shed`` and ``timed_out``
+counts, and the subprocess asserts in-line that p99 of admitted
+answers holds the deadline and that ok answers under overload stay
+bit-identical to direct ``program()`` calls.
+
 Like ``benchmarks/graph_scaling.py``, the measurement runs in ONE
 subprocess so ``XLA_FLAGS=--xla_force_host_platform_device_count`` can
 force the partition count before jax imports; the harness process never
@@ -65,6 +72,7 @@ g = partition_graph(edges, gcfg.num_vertices, parts)
 eng = GraphEngine(g, make_graph_mesh(parts))
 print("META " + json.dumps({{
     "localops": localops.get_mode(), **runtime_fingerprint()}}))
+rows_all = []
 for algo, bucket in cells:
     key = make_key(algo)
     server = GraphServer(eng, buckets=(max(bucket, 1),))
@@ -81,14 +89,57 @@ for algo, bucket in cells:
                  for i in range(n_launch * bucket)]
         server.serve([Query(key, r) for r in roots])
     (row,) = server.metrics.rows()
+    rows_all.append(row)
     print("RESULT " + json.dumps(row))
+
+# -- overload cell: a 2x-capacity bfs trace through a bounded-queue,
+# deadlined server.  Offered rate = 2x the measured closed-loop qps of
+# the same bucket, so the cell tracks "how gracefully does the server
+# degrade": p99 of ADMITTED answers must hold the deadline (lapsed ones
+# resolve timed_out, never recorded), the bounded queue sheds the rest,
+# and every ok answer stays bit-identical to a direct program() call.
+import numpy as np
+import jax.numpy as jnp
+from repro.serve import synthetic_trace
+
+ob, deadline = {overload_bucket}, {deadline_s}
+cap_qps = max(r["qps"] for r in rows_all
+              if r["algo"].startswith("bfs") and r["bucket"] == ob)
+server = GraphServer(eng, buckets=(ob,), max_queued=4 * ob,
+                     default_deadline_s=deadline)
+server.warmup([make_key("bfs")])
+trace = synthetic_trace(gcfg.num_vertices, "bfs", rate=2.0 * cap_qps,
+                        duration={overload_duration}, seed=99)
+res = server.serve_trace(trace)
+by_qid = {{q.qid: q for _, q in trace}}
+garr, prog, checked = eng.device_graph(), eng.program("bfs"), 0
+for r in res:
+    if r.ok and checked < 8:
+        p, _ = prog(garr, jnp.int32(by_qid[r.qid].root))
+        assert (np.asarray(r["parents"])
+                == eng.gather_vertex_field(p)).all(), \
+            "overload ok answer differs from direct program() call"
+        checked += 1
+assert checked > 0, "overload trace produced no ok answers"
+(orow,) = server.metrics.rows()
+assert orow["p99_ms"] <= deadline * 1e3, \
+    "p99 of admitted answers exceeds the deadline"
+orow = dict(orow, bucket="overload",
+            offered_qps=round(2.0 * cap_qps, 1),
+            shed=server.metrics.counts["shed"],
+            timed_out=server.metrics.counts["timed_out"],
+            deadline_s=deadline)
+print("RESULT " + json.dumps(orow))
 """
 
 
-def run_cells(graph: str, parts: int, cells, launches: int):
+def run_cells(graph: str, parts: int, cells, launches: int,
+              overload_duration: float = 0.5):
     flat = [(a, b) for a, bs in cells for b in bs]
     code = _CELL_CODE.format(graph=graph, parts=parts, cells=flat,
-                             launches=launches)
+                             launches=launches, overload_bucket=8,
+                             deadline_s=0.25,
+                             overload_duration=overload_duration)
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={parts} "
@@ -110,7 +161,8 @@ def run_cells(graph: str, parts: int, cells, launches: int):
 
 def speedup_section(rows: list[dict], algo_label: str = "bfs_fast") -> dict:
     """Coalesced-vs-single throughput for one program's ladder."""
-    cells = {r["bucket"]: r["qps"] for r in rows if r["algo"] == algo_label}
+    cells = {r["bucket"]: r["qps"] for r in rows
+             if r["algo"] == algo_label and isinstance(r["bucket"], int)}
     if 1 not in cells or len(cells) < 2:
         return {}
     top = max(b for b in cells if b != 1)
@@ -142,12 +194,16 @@ def main(argv=None) -> int:
     print(f"[bench_serve] {graph} parts={args.parts} "
           f"launches/cell={launches} "
           f"cells={[(a, list(b)) for a, b in cells]}")
-    rows, sub_meta = run_cells(graph, args.parts, cells, launches)
+    rows, sub_meta = run_cells(graph, args.parts, cells, launches,
+                               overload_duration=0.5 if args.fast else 1.0)
     for r in rows:
         b = str(r["bucket"]) if r["bucket"] else "shared"
-        print(f"[bench_serve] {r['algo']:16s} bucket={b:>6s} "
+        extra = (f" shed={r['shed']} timed_out={r['timed_out']} "
+                 f"offered={r['offered_qps']:.0f}q/s"
+                 if r["bucket"] == "overload" else "")
+        print(f"[bench_serve] {r['algo']:16s} bucket={b:>8s} "
               f"qps={r['qps']:8.1f} p50={r['p50_ms']:7.1f}ms "
-              f"p99={r['p99_ms']:7.1f}ms")
+              f"p99={r['p99_ms']:7.1f}ms" + extra)
 
     speedup = speedup_section(rows)
     below_floor = (speedup and args.speedup_floor

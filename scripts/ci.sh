@@ -29,6 +29,13 @@
 # (>1.25x wall-time growth or queries/sec drop on any cell fails CI).
 # bench_mutate additionally fails outright when the PageRank warm
 # restart stops beating the cold start on rounds-to-converge.
+#
+# The `chaos` marker is the seeded fault-injection acceptance sweep
+# (tests/test_chaos.py): every registered (algo, variant) pair at
+# parts {2, 4} under a drop+corrupt+stall schedule must detect via its
+# guard, recover from the last checkpoint, and match the NumPy oracle
+# exactly.  It runs as its own lane in BOTH modes (multi-device
+# subprocesses — isolating it keeps the tier-1 signal fast and clean).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -36,13 +43,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--markers" ]]; then
     echo "== tier-1: pytest -m 'tier1 or not slow' (fast lane: conformance + kernel parity) =="
-    python -m pytest -x -q -m "tier1 or not slow"
+    python -m pytest -x -q -m "(tier1 or not slow) and not chaos"
     echo "== tier-2: pytest -m 'slow and not tier1' (subprocess / multi-device) =="
-    python -m pytest -q -m "slow and not tier1"
+    python -m pytest -q -m "slow and not tier1 and not chaos"
 else
     echo "== tier-1: pytest =="
-    python -m pytest -x -q
+    python -m pytest -x -q -m "not chaos"
 fi
+
+echo "== chaos lane: pytest -m chaos (seeded fault-injection sweep, parts {2,4}) =="
+python -m pytest -q -m chaos
 
 echo "== bench smoke: benchmarks.run --fast =="
 python -m benchmarks.run --fast

@@ -9,12 +9,16 @@ notes and DESIGN.md for the system view."""
 
 from repro.core import localops, registry
 from repro.core.api import CompiledProgram, GraphEngine
+from repro.core.faults import FaultEvent, FaultSchedule
 from repro.core.graph import EllMeta, GraphShards, abstract_graph, \
     partition_graph
+from repro.core.recovery import Checkpoint, CheckpointRunner, \
+    RecoveryError, RunReport
 from repro.core.superstep import SuperstepProgram, run_program
 
 __all__ = [
-    "CompiledProgram", "EllMeta", "GraphEngine", "GraphShards",
-    "SuperstepProgram", "abstract_graph", "localops", "partition_graph",
-    "registry", "run_program",
+    "Checkpoint", "CheckpointRunner", "CompiledProgram", "EllMeta",
+    "FaultEvent", "FaultSchedule", "GraphEngine", "GraphShards",
+    "RecoveryError", "RunReport", "SuperstepProgram", "abstract_graph",
+    "localops", "partition_graph", "registry", "run_program",
 ]

@@ -23,6 +23,7 @@ dry-run (core/dryrun.py) via :meth:`CompiledProgram.lower` /
 
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -31,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import localops, registry
+from repro.core import faults as faults_mod
 from repro.core.compat import shard_map
 from repro.core.graph import GraphShards
 from repro.core.superstep import run_program, run_program_batched
@@ -59,11 +61,14 @@ class CompiledProgram:
     compile-cache hit test.
     """
 
-    def __init__(self, spec, program, fn, abstract_args):
+    def __init__(self, spec, program, fn, abstract_args,
+                 guarded=False, faults=None):
         self.spec = spec                  # registry ProgramSpec
         self.program = program            # SuperstepProgram instance
         self.fn = fn                      # jitted shard_map callable
         self.abstract_args = abstract_args
+        self.guarded = guarded            # trailing ok output appended
+        self.faults = faults              # FaultSchedule or None
         self._aot = None
 
     def __call__(self, garr, *inputs):
@@ -101,8 +106,8 @@ class GraphEngine:
     # -- the program API ----------------------------------------------------
     def program(self, algo: str, variant: str | None = None, *,
                 static_iters: int = 0, batch: int | None = None,
-                exec_mode: str | None = None,
-                **params) -> CompiledProgram:
+                exec_mode: str | None = None, guard: bool = False,
+                faults=None, **params) -> CompiledProgram:
         """Resolve, build, wrap and cache an algorithm program.
 
         ``static_iters > 0`` replaces the early-exit while loop with a
@@ -114,10 +119,22 @@ class GraphEngine:
         algo's variant of that mode (``program("bfs",
         exec_mode="async")`` is ``program("bfs", "async")``); with an
         explicit variant it is a consistency ASSERTION and a mismatch
-        raises rather than silently running the other driver.  The cache
-        key covers algo, variant, params, loop mode, exec mode, graph
-        shapes and mesh, so repeated calls return the same object and
-        never re-trace.
+        raises rather than silently running the other driver.
+
+        ``guard=True`` compiles the GUARDED driver: the program's
+        per-round invariant check (``core/faults`` docs) plus the
+        transport-stamp detector run every round, the loop stops on the
+        first violation, and ONE extra replicated int32 output (1 = run
+        clean, 0 = violation detected) is appended after ``rounds``.
+        ``faults=`` takes a :class:`repro.core.faults.FaultSchedule`
+        (or its string spec) and compiles deterministic fault injection
+        into the exchange taps — detection fires only when ``guard``
+        is also set.  Neither composes with ``batch``/``static_iters``
+        (checkpointed recovery lives in ``core/recovery.py``).
+
+        The cache key covers algo, variant, params, loop mode, exec
+        mode, guard/fault schedule, graph shapes and mesh, so repeated
+        calls return the same object and never re-trace.
         """
         bare = variant is None and "/" not in algo
         spec = registry.get_spec(algo, variant)
@@ -146,6 +163,15 @@ class GraphEngine:
             raise ValueError(
                 f"{spec.key} takes whole vertex-field inputs "
                 f"{spec.inputs}; only scalar per-query inputs batch")
+        schedule = faults_mod.as_schedule(faults)
+        if guard and static_iters:
+            raise ValueError(
+                "guard=True is incompatible with static_iters: the "
+                "guarded loop must stop on the detected round")
+        if (guard or schedule is not None) and batch is not None:
+            raise ValueError(
+                "guard/faults do not compose with batch: fault rounds "
+                "and guard verdicts are per-run, not per-lane")
         # normalize params into full (defaults + overrides) form so an
         # explicitly spelled default hits the same cache entry; batched
         # builds additionally merge the spec's vmap-friendly overrides
@@ -161,7 +187,7 @@ class GraphEngine:
         # the bucket decomposition differs, and the traced per-bucket
         # loops would silently read the wrong rows on a stale cache hit
         key = (spec.algo, spec.variant, spec.exec_mode, static_iters,
-               batch, tuple(sorted(params.items())),
+               batch, guard, schedule, tuple(sorted(params.items())),
                (g.n, g.n_orig, g.parts, g.n_local, g.e_max),
                g.layout_signature(),
                (tuple(self.mesh.shape.items()), self.mesh.devices.shape),
@@ -178,19 +204,29 @@ class GraphEngine:
             garr = {k: v[0] for k, v in garr.items()}
             inputs = tuple(x[0] if kind != "scalar" else x
                            for x, kind in zip(inputs, kinds))
-            if batch is None:
-                outs, rounds = run_program(prog, garr, *inputs,
-                                           static_iters=static_iters)
-            else:
-                outs, rounds = run_program_batched(
-                    prog, garr, *inputs, static_iters=static_iters)
+            # the fault context is entered INSIDE the traced fn so taps
+            # see the schedule at trace time (it's part of the cache key)
+            cm = faults_mod.active(schedule, detect=guard) \
+                if schedule is not None else contextlib.nullcontext()
+            with cm:
+                if guard:
+                    outs, rounds, ok = run_program(prog, garr, *inputs,
+                                                   guard=True)
+                elif batch is None:
+                    outs, rounds = run_program(prog, garr, *inputs,
+                                               static_iters=static_iters)
+                else:
+                    outs, rounds = run_program_batched(
+                        prog, garr, *inputs, static_iters=static_iters)
             shaped = tuple(o[None] if is_v else o
                            for o, is_v in zip(outs, prog.output_is_vertex))
-            return shaped + (rounds,)
+            tail = (rounds,) + ((ok.astype(jnp.int32),) if guard else ())
+            return shaped + tail
 
         vspec = P("parts", None) if batch is None else P("parts", None, None)
         out_specs = tuple(vspec if is_v else P()
-                          for is_v in prog.output_is_vertex) + (P(),)
+                          for is_v in prog.output_is_vertex) \
+            + ((P(), P()) if guard else (P(),))
         in_specs = (_graph_specs(g, self.layout),) + tuple(
             P() if kind == "scalar" else P("parts", None) for kind in kinds)
         jitted = jax.jit(shard_map(
@@ -203,7 +239,8 @@ class GraphEngine:
                 root_shape if kind == "scalar" else (g.parts, g.n_local),
                 _KIND_DTYPE[kind])
             for kind in kinds)
-        compiled = CompiledProgram(spec, prog, jitted, abstract_args)
+        compiled = CompiledProgram(spec, prog, jitted, abstract_args,
+                                   guarded=guard, faults=schedule)
         self._cache[key] = compiled
         return compiled
 

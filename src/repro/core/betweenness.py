@@ -81,13 +81,21 @@ def bc_forward_program(shards, max_levels: int = 64) -> SuperstepProgram:
         cnt = psum_scalar(newly.sum(dtype=jnp.int32))
         return dist, sigma, newly, level + 1, cnt
 
+    def guard(g, prev, state):
+        # forward invariants: levels adopt once (non-increasing from
+        # INT_INF), path counts finite / non-negative / non-decreasing
+        dist, sigma, _, level, cnt = state
+        return (dist >= 0).all() & (dist <= prev[0]).all() \
+            & jnp.isfinite(sigma).all() & (sigma >= prev[1]).all() \
+            & (level >= prev[3]) & (cnt >= 0)
+
     return SuperstepProgram(
         name="betweenness", variant="forward", inputs=("root",),
         init=init, step=step,
         halt=lambda state: state[4] <= 0,
         outputs=lambda state: (state[0], state[1]),
         output_names=("dist", "sigma"), output_is_vertex=(True, True),
-        max_rounds=max_levels)
+        max_rounds=max_levels, guard=guard)
 
 
 def bc_backward_program(shards, max_levels: int = 64) -> SuperstepProgram:
@@ -125,6 +133,16 @@ def bc_backward_program(shards, max_levels: int = 64) -> SuperstepProgram:
         bc = jnp.where(dist == 0, 0.0, delta)       # delta_s(s) := 0
         return bc, sigma, dist
 
+    def guard(g, prev, state):
+        # dependency accumulation is a sum of non-negative coefficient
+        # terms: finite and non-negative (a NaN coefficient broadcast
+        # lands in delta unfiltered); the frozen forward fields must
+        # stay bit-frozen
+        delta, dist, sigma, _, changed = state
+        return jnp.isfinite(delta).all() & (delta >= 0).all() \
+            & (dist == prev[1]).all() & (sigma == prev[2]).all() \
+            & (changed >= 0)
+
     return SuperstepProgram(
         name="betweenness", variant="backward", inputs=(),
         init=init, step=step,
@@ -132,7 +150,7 @@ def bc_backward_program(shards, max_levels: int = 64) -> SuperstepProgram:
         outputs=outputs,
         output_names=("bc", "sigma", "dist"),
         output_is_vertex=(True, True, True),
-        max_rounds=max_levels)
+        max_rounds=max_levels, guard=guard)
 
 
 def betweenness_program(shards, max_levels: int = 64) -> PhasedProgram:

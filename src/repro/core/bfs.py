@@ -36,10 +36,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import localops
-from repro.core.compat import axis_size
 from repro.core.monotone import monotone_async_program
-from repro.core.partitioned import AXIS, broadcast_global, exchange_or, \
-    pack_bits, psum_scalar
+from repro.core.partitioned import AXIS, broadcast_global, \
+    exchange_min_int, exchange_or, pack_bits, psum_scalar
 from repro.core.superstep import AsyncSuperstepProgram, SuperstepProgram
 
 
@@ -59,7 +58,6 @@ def _derive_parents(g, ell_in, gf_packed, unvisited):
 
 def _bsp_level(g, ell_dst, n, n_local, parents, frontier):
     """One BSP level: full (n,) parent-proposal exchange via a2a MIN."""
-    parts = axis_size(AXIS)
     lo = jax.lax.axis_index(AXIS) * n_local
     srcl = g["out_src_local"]
     dst = g["out_dst_global"]
@@ -69,9 +67,7 @@ def _bsp_level(g, ell_dst, n, n_local, parents, frontier):
         g, ell_dst, jnp.where(active, src_g, INT_INF), "min",
         identity=INT_INF)
     # exchange: every partition contributes proposals for every vertex
-    rows = jax.lax.all_to_all(prop.reshape(parts, 1, n_local), AXIS,
-                              split_axis=0, concat_axis=1)
-    mine = rows.min(axis=(0, 1))                   # (n_local,)
+    mine = exchange_min_int(prop)                  # (n_local,)
     unvisited = parents == INT_INF
     new_mask = (mine < INT_INF) & unvisited
     parents = jnp.where(new_mask, mine, parents)
@@ -115,6 +111,21 @@ def _fast_level_push(g, ell_in, ell_dst, n, parents,
     return parents, new_mask, gf_next, count
 
 
+def _parents_guard(count_idx: int):
+    """Invariant guard shared by the BSP/fast variants: parents stay in
+    ``[0, INT_INF]`` and never move once set (min-combine on unvisited
+    vertices only — a parent can only go INT_INF -> id), and the
+    frontier count is non-negative.  A ``-2**30`` payload corruption
+    lands straight in ``parents`` and trips the lower bound."""
+
+    def guard(g, prev, state):
+        parents, pparents = state[0], prev[0]
+        return (parents >= 0).all() & (parents <= pparents).all() \
+            & (state[count_idx] >= 0)
+
+    return guard
+
+
 def _seed_state(root, n_local):
     """(parents0, frontier0) with only the owner's root slot set."""
     lo = jax.lax.axis_index(AXIS) * n_local
@@ -149,7 +160,7 @@ def bfs_bsp_program(shards, max_levels: int = 64) -> SuperstepProgram:
         halt=lambda state: state[2] <= 0,
         outputs=lambda state: (state[0],),
         output_names=("parents",), output_is_vertex=(True,),
-        max_rounds=max_levels)
+        max_rounds=max_levels, guard=_parents_guard(2))
 
 
 def bfs_fast_program(shards, max_levels: int = 64,
@@ -210,7 +221,7 @@ def bfs_fast_program(shards, max_levels: int = 64,
         halt=lambda state: state[3] <= 0,
         outputs=lambda state: (state[0],),
         output_names=("parents",), output_is_vertex=(True,),
-        max_rounds=max_levels)
+        max_rounds=max_levels, guard=_parents_guard(3))
 
 
 def bfs_async_program(shards, max_levels: int = 64,

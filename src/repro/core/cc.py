@@ -14,9 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import localops
-from repro.core.compat import axis_size
 from repro.core.monotone import monotone_async_program
-from repro.core.partitioned import AXIS, psum_scalar
+from repro.core.partitioned import AXIS, exchange_min_int, psum_scalar
 from repro.core.superstep import AsyncSuperstepProgram, SuperstepProgram
 
 INT_INF = jnp.int32(2 ** 30)
@@ -54,7 +53,6 @@ def cc_program(shards, max_rounds: int = 64,
 
     def step(g, state):
         labels, _ = state
-        parts = axis_size(AXIS)
         srcl = g["out_src_local"]
         dst = g["out_dst_global"]
         valid = dst < n
@@ -66,21 +64,24 @@ def cc_program(shards, max_rounds: int = 64,
         prop = localops.scatter_combine(
             g, ell_dst, jnp.where(valid, labels[srcl], INT_INF), "min",
             identity=INT_INF)
-        rows = jax.lax.all_to_all(prop.reshape(parts, 1, n_local), AXIS,
-                                  split_axis=0, concat_axis=1)
-        mine = rows.min(axis=(0, 1))
+        mine = exchange_min_int(prop)
         new_labels = jnp.minimum(labels, mine)
         # pull direction: adopt min label of in-neighbors (needs their
         # labels -> ship proposals keyed by in-edge source owner)
         prop2 = localops.scatter_combine(
             g, ell_src, jnp.where(in_valid, new_labels[in_dstl], INT_INF),
             "min", identity=INT_INF)
-        rows2 = jax.lax.all_to_all(prop2.reshape(parts, 1, n_local), AXIS,
-                                   split_axis=0, concat_axis=1)
-        mine2 = rows2.min(axis=(0, 1))
+        mine2 = exchange_min_int(prop2)
         new_labels = jnp.minimum(new_labels, mine2)
         cnt = psum_scalar((new_labels < labels).sum(dtype=jnp.int32))
         return new_labels, cnt
+
+    def guard(g, prev, state):
+        # min-propagation invariants: labels non-negative and
+        # non-increasing; change count non-negative
+        labels, plabels = state[0], prev[0]
+        return (labels >= 0).all() & (labels <= plabels).all() \
+            & (state[1] >= 0)
 
     return SuperstepProgram(
         name="cc", variant="incremental" if seeded else "default",
@@ -89,7 +90,7 @@ def cc_program(shards, max_rounds: int = 64,
         halt=lambda state: state[1] <= 0,
         outputs=lambda state: (state[0],),
         output_names=("labels",), output_is_vertex=(True,),
-        max_rounds=max_rounds)
+        max_rounds=max_rounds, guard=guard)
 
 
 def cc_async_program(shards, max_rounds: int = 64,

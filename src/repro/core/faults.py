@@ -1,0 +1,304 @@
+"""Deterministic fault injection for the exchange primitives.
+
+Chaos engineering for the SPMD engine: every exchange primitive in
+``partitioned.py`` calls :func:`tap` on its OUTGOING payload, and when a
+:class:`FaultSchedule` is active the tap compiles seeded, schedule-
+addressed perturbations straight into the traced program — so a chaos
+run is exactly as reproducible as a clean one (same schedule, same
+graph, same faults, bit for bit).  With no schedule active the tap is a
+Python-level no-op and nothing reaches the jaxpr.
+
+Fault model (one :class:`FaultEvent` per fault):
+
+  * ``drop``    — the partition's outgoing payload for one exchange is
+                  replaced by the combine identity (0 for sum/or/bcast/
+                  perm, +max for min): the message never arrives.
+  * ``stall``   — ``drop`` sustained for ``rounds`` consecutive rounds:
+                  a partition that stops answering.
+  * ``dup``     — duplicate delivery: sum payloads arrive twice
+                  (doubled); min/or/bcast/perm payloads are idempotent
+                  so the duplicate changes nothing — but the transport
+                  still observes the replayed sequence number.
+  * ``corrupt`` — one seeded payload element is overwritten with a
+                  semantically invalid value: NaN for float payloads,
+                  ``-2**30`` for signed ints (all legitimate engine state
+                  is non-negative), all-ones for a packed uint32 word.
+  * ``stale``   — a seeded ~half of the payload reverts to the combine
+                  identity: partial delivery, the link flaking mid-
+                  message.  Monotone programs absorb this exactly (the
+                  lost half is re-proposed next round); it exists to
+                  exercise the stale-tolerant ``/async`` variants and is
+                  deliberately NOT transport-detectable.
+
+Detection runs on two channels, both feeding the driver's per-round
+``ok`` scalar (see ``superstep.run_program(..., guard=...)``):
+
+  * **transport stamps** — in detect mode the driver's per-round check
+    asks :func:`stamp_violation` whether a stamped-kind event (drop /
+    stall / dup / corrupt) covers the current round: the emulation of
+    sequence numbers + payload CRCs (in-flight corruption is what
+    checksums exist for).  The verdict is a pure function of the static
+    schedule and the traced round counter — it deliberately does NOT
+    thread values out of the taps, because exchanges may execute inside
+    ``lax.cond`` branches (bfs/fast direction switching) where an
+    escaping intermediate would be a leaked tracer.  Consequence: a
+    stamped event reports its round tainted whether or not a matching
+    exchange actually consumed it that round (the transport layer knows
+    a fault occurred even when the algorithm never read the payload);
+    ``stale`` stays transport-silent.
+  * **value guards** — the per-algorithm invariant checks (NaN screens,
+    monotone non-increase, mass conservation, degree bounds) are the
+    SECOND line: they catch semantic corruption no transport check can
+    see — a bug, a bad kernel, memory corruption past the NIC — and in
+    chaos runs they independently flag injected corruption whose value
+    lands in the state (min-combines and rank sums apply payloads
+    unfiltered, so NaN / negative-sentinel injection trips them the
+    same round the CRC does).
+
+Round addressing: ``FaultEvent.round`` matches the driver's round
+counter at the moment the primitive executes (the driver publishes it
+via :func:`set_round` before each step/fold).  For async programs the
+exchange issued by ``init`` is round 0.
+"""
+
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+AXIS = "parts"
+
+KINDS = ("drop", "dup", "corrupt", "stall", "stale")
+OPS = ("sum", "min", "or", "bcast", "perm")
+
+# kinds the transport stamp marks: sequence-number / liveness class
+# plus CRC-detected payload corruption; ``stale`` alone is deliberately
+# transport-silent (partial loss the monotone family absorbs).
+_STAMP_KINDS = ("drop", "stall", "dup", "corrupt")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One schedule-addressable fault: ``kind`` fired by partition
+    ``part`` at driver round ``round``, optionally restricted to one
+    exchange ``op`` (None = every op that round), ``stall`` sustained
+    for ``rounds``."""
+
+    round: int
+    part: int
+    kind: str
+    op: str | None = None
+    rounds: int = 1
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"fault kind {self.kind!r} not in {KINDS}")
+        if self.op is not None and self.op not in OPS:
+            raise ValueError(f"fault op {self.op!r} not in {OPS}")
+        if self.round < 0 or self.part < 0 or self.rounds < 1:
+            raise ValueError(f"bad fault addressing: {self}")
+
+    def spec(self) -> str:
+        s = f"{self.kind}@r{self.round}p{self.part}"
+        if self.op is not None:
+            s += f":{self.op}"
+        if self.rounds != 1:
+            s += f"x{self.rounds}"
+        return s
+
+
+_EVENT_RE = re.compile(
+    r"^(?P<kind>[a-z]+)@r(?P<round>\d+)p(?P<part>\d+)"
+    r"(?::(?P<op>[a-z]+))?(?:x(?P<rounds>\d+))?$")
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """A hashable, seeded set of fault events (fits the compile-cache
+    key).  ``seed`` feeds every seeded choice (corrupt element index,
+    stale mask), so one (schedule, graph) pair is one deterministic
+    chaos run."""
+
+    events: tuple[FaultEvent, ...]
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+
+    def spec(self) -> str:
+        return " ".join(ev.spec() for ev in self.events) + f" seed={self.seed}"
+
+    @classmethod
+    def parse(cls, text: str, seed: int = 0) -> "FaultSchedule":
+        """Parse the compact CLI form: whitespace-separated
+        ``kind@r<round>p<part>[:<op>][x<rounds>]`` events plus an
+        optional ``seed=<n>`` token, e.g.
+        ``"drop@r1p0 corrupt@r2p1:min stall@r3p0x2 seed=7"``."""
+        events = []
+        for tok in text.split():
+            if tok.startswith("seed="):
+                seed = int(tok[len("seed="):])
+                continue
+            m = _EVENT_RE.match(tok)
+            if not m:
+                raise ValueError(
+                    f"bad fault event {tok!r}; expected "
+                    "kind@r<round>p<part>[:<op>][x<rounds>]")
+            events.append(FaultEvent(
+                round=int(m.group("round")), part=int(m.group("part")),
+                kind=m.group("kind"), op=m.group("op"),
+                rounds=int(m.group("rounds") or 1)))
+        return cls(events=tuple(events), seed=seed)
+
+
+def as_schedule(faults) -> "FaultSchedule | None":
+    """Coerce a schedule argument: None, a FaultSchedule, or the
+    compact string form accepted by :meth:`FaultSchedule.parse`."""
+    if faults is None or isinstance(faults, FaultSchedule):
+        return faults
+    if isinstance(faults, str):
+        return FaultSchedule.parse(faults)
+    raise TypeError(f"faults must be None, FaultSchedule, or str: "
+                    f"{type(faults).__name__}")
+
+
+# --------------------------------------------------------------------------
+# Trace-time context.  ``active`` is entered INSIDE the traced function
+# (api.py / recovery.py wrap the driver call), so every trace — first
+# compile, shape retrace, lower()/aot() — sees the same schedule.
+# --------------------------------------------------------------------------
+
+
+class _Ctx:
+    __slots__ = ("schedule", "detect", "round")
+
+    def __init__(self, schedule: FaultSchedule, detect: bool):
+        self.schedule = schedule
+        self.detect = detect
+        self.round = jnp.int32(0)
+
+
+_ctx: _Ctx | None = None
+
+
+@contextmanager
+def active(schedule: FaultSchedule | None, detect: bool = False):
+    """Arm ``schedule`` for taps traced inside the block.  ``detect``
+    additionally compiles the transport-stamp checks in."""
+    global _ctx
+    prev = _ctx
+    _ctx = _Ctx(schedule, detect) if schedule is not None else None
+    try:
+        yield
+    finally:
+        _ctx = prev
+
+
+def is_active() -> bool:
+    return _ctx is not None
+
+
+def set_round(r) -> None:
+    """Publish the driver's (traced) round counter for event matching."""
+    if _ctx is not None:
+        _ctx.round = r
+
+
+def stamp_violation():
+    """Transport-stamp verdict for the CURRENT round: a traced bool
+    (uniform across partitions — it is a pure function of the static
+    schedule and the published round scalar), True when a stamped-kind
+    event covers this round.  None when no schedule is armed, detection
+    is off, or the schedule has no stamped events.  The driver folds
+    this into its per-round ``ok``."""
+    if _ctx is None or not _ctx.detect:
+        return None
+    r = _ctx.round
+    viol = None
+    for ev in _ctx.schedule.events:
+        if ev.kind not in _STAMP_KINDS:
+            continue
+        span = ev.rounds if ev.kind == "stall" else 1
+        hit = (r >= ev.round) & (r < ev.round + span)
+        viol = hit if viol is None else (viol | hit)
+    return viol
+
+
+# --------------------------------------------------------------------------
+# The tap.
+# --------------------------------------------------------------------------
+
+
+def _identity_value(op: str, dtype):
+    if op == "min":
+        if jnp.issubdtype(dtype, jnp.floating):
+            return jnp.array(jnp.inf, dtype)
+        return jnp.array(jnp.iinfo(dtype).max, dtype)
+    return jnp.array(0, dtype)
+
+
+def _corrupt_value(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.nan, dtype)
+    if jnp.issubdtype(dtype, jnp.unsignedinteger):
+        return jnp.array(jnp.iinfo(dtype).max, dtype)
+    return jnp.array(-(2 ** 30), dtype)
+
+
+def _rng(ev: FaultEvent, seed: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.array([seed, ev.round, ev.part, KINDS.index(ev.kind)],
+                 np.uint64))
+
+
+def _fire(ev: FaultEvent, axis_name: str):
+    """Traced bool: does ``ev`` hit THIS partition at the CURRENT
+    round?  (part/op are static; only the round is dynamic.)"""
+    r = _ctx.round
+    if ev.kind == "stall":
+        in_round = (r >= ev.round) & (r < ev.round + ev.rounds)
+    else:
+        in_round = r == ev.round
+    return in_round & (jax.lax.axis_index(axis_name) == ev.part)
+
+
+def tap(op: str, payload, axis_name: str = AXIS):
+    """Perturb an OUTGOING exchange payload per the active schedule.
+
+    Called by every primitive in ``partitioned.py`` just before the
+    collective.  Returns the (possibly perturbed) payload.  A no-op
+    (returns ``payload`` untouched, traces nothing) when no schedule
+    is active.  Detection is NOT the tap's job — see
+    :func:`stamp_violation` for why.
+    """
+    if _ctx is None:
+        return payload
+    sched, dtype = _ctx.schedule, payload.dtype
+    for ev in sched.events:
+        if ev.op is not None and ev.op != op:
+            continue
+        fire = _fire(ev, axis_name)
+        if ev.kind in ("drop", "stall"):
+            ident = jnp.full(payload.shape, _identity_value(op, dtype))
+            payload = jnp.where(fire, ident, payload)
+        elif ev.kind == "dup":
+            if op == "sum":                 # others are idempotent
+                payload = jnp.where(fire, payload * 2, payload)
+        elif ev.kind == "corrupt":
+            idx = int(_rng(ev, sched.seed).integers(payload.size))
+            flat = payload.reshape(-1)
+            bad = flat.at[idx].set(_corrupt_value(dtype)).reshape(
+                payload.shape)
+            payload = jnp.where(fire, bad, payload)
+        else:                               # stale: seeded partial loss
+            keep = _rng(ev, sched.seed).random(payload.shape) < 0.5
+            ident = jnp.full(payload.shape, _identity_value(op, dtype))
+            stale = jnp.where(jnp.asarray(keep), payload, ident)
+            payload = jnp.where(fire, stale, payload)
+    return payload

@@ -101,6 +101,12 @@ def kcore_incremental_program(shards,
         kmax = jax.lax.pmax(c.max(), AXIS)
         return c, kmax
 
+    def guard(g, prev, state):
+        # support-decrement peeling: the assignment is non-negative and
+        # non-increasing (decrements only); change count non-negative
+        c, changed = state
+        return (c >= 0).all() & (c <= prev[0]).all() & (changed >= 0)
+
     return SuperstepProgram(
         name="kcore", variant="incremental", inputs=("core0",),
         init=init, step=step,
@@ -108,7 +114,7 @@ def kcore_incremental_program(shards,
         outputs=outputs,
         output_names=("core", "kmax"),
         output_is_vertex=(True, False),
-        max_rounds=max_rounds)
+        max_rounds=max_rounds, guard=guard)
 
 
 # ---------------------------------------------------------------------------

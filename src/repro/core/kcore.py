@@ -93,6 +93,19 @@ def kcore_program(shards, max_rounds: int = 512) -> SuperstepProgram:
         kmax = jax.lax.pmax(core.max(), AXIS)
         return core, kmax
 
+    def guard(g, prev, state):
+        # peeling invariants: live degrees bounded by the static
+        # undirected degree (a corrupted decrement moves deg OUT of
+        # [0, und_degree] in either direction), core/threshold
+        # non-decreasing and non-negative.  Dead vertices' degrees are
+        # never read, so they are exempt from the bound.
+        alive, core, deg, k, n_alive = state
+        live_deg = jnp.where(alive, deg, 0)
+        return (live_deg >= 0).all() \
+            & (live_deg <= g["und_degree"]).all() \
+            & (core >= prev[1]).all() & (core >= 0).all() \
+            & (k >= prev[3]) & (k >= 0) & (n_alive >= 0)
+
     return SuperstepProgram(
         name="kcore", variant="default", inputs=(),
         prepare=prepare, init=init, step=step,
@@ -100,4 +113,4 @@ def kcore_program(shards, max_rounds: int = 512) -> SuperstepProgram:
         outputs=outputs,
         output_names=("core", "kmax"),
         output_is_vertex=(True, False),
-        max_rounds=max_rounds)
+        max_rounds=max_rounds, guard=guard)

@@ -115,6 +115,16 @@ def monotone_async_program(*, name: str, variant: str = "async",
     def halt(state):
         return (state[3] <= 0) & (state[4] <= 0)
 
+    def guard(g, prev, state):
+        """Monotone invariants: values only ever DECREASE and stay in
+        ``[0, inf]`` (min-combine applies delivered payloads unfiltered,
+        so NaN / negative-sentinel corruption lands in ``vals`` and
+        fails a comparison here), and the carried change counts are
+        non-negative."""
+        vals, pvals = state[0], prev[0]
+        return (vals >= 0).all() & (vals <= pvals).all() \
+            & (state[3] >= 0) & (state[4] >= 0) & (state[5] >= 0)
+
     kwargs = {} if prepare is None else {"prepare": prepare}
     return AsyncSuperstepProgram(
         name=name, variant=variant, inputs=tuple(inputs),
@@ -122,4 +132,4 @@ def monotone_async_program(*, name: str, variant: str = "async",
         outputs=lambda g, state: outputs(g, state[0]),
         output_names=tuple(output_names),
         output_is_vertex=tuple(output_is_vertex),
-        max_rounds=max_rounds, **kwargs)
+        max_rounds=max_rounds, guard=guard, **kwargs)

@@ -48,6 +48,23 @@ def _local_contrib(rank, out_degree):
                      0.0)
 
 
+def _rank_mass_ok(rank, n, n_orig, margin):
+    """Mass-conservation invariant for the fault guards.
+
+    Rank mass starts at ``n / n_orig`` (padded tail vertices carry an
+    initial 1/n_orig in the unseeded variants) and only shrinks toward
+    the dangling-adjusted fixed point >= (1 - alpha), so any round's
+    global mass must sit in ``((1 - alpha) * 0.9, n/n_orig * margin)``.
+    ``margin`` absorbs transient overshoot (bf16 error feedback, stale
+    remote snapshots); a dropped/duplicated/corrupted contribution
+    block moves mass outside the band, and NaN fails the element-wise
+    non-negativity check.
+    """
+    mass = psum_scalar(rank.sum())
+    cap = (1.0 + (n - n_orig) / n_orig) * margin
+    return (rank >= 0).all() & (mass > (1.0 - ALPHA) * 0.9) & (mass < cap)
+
+
 def pagerank_bsp_program(shards, iters: int = 50,
                          tol: float = 1e-6) -> SuperstepProgram:
     """BGL-style pull PageRank (ghost replication via all-gather)."""
@@ -68,13 +85,17 @@ def pagerank_bsp_program(shards, iters: int = 50,
         err = psum_scalar(jnp.abs(new_rank - rank).sum())  # extra barrier
         return new_rank, err
 
+    def guard(g, prev, state):
+        rank, err = state
+        return _rank_mass_ok(rank, n, n_orig, 1.02) & (err >= 0)
+
     return SuperstepProgram(
         name="pagerank", variant="bsp", inputs=(),
         init=init, step=step,
         halt=lambda state: state[1] <= tol,
         outputs=lambda state: (state[0], state[1]),
         output_names=("rank", "err"), output_is_vertex=(True, False),
-        max_rounds=iters)
+        max_rounds=iters, guard=guard)
 
 
 def pagerank_fast_program(shards, iters: int = 50,
@@ -165,6 +186,11 @@ def pagerank_fast_program(shards, iters: int = 50,
             operand=None)
         return new_rank, new_resid, err, it + 1
 
+    def guard(g, prev, state):
+        rank, resid, err, it = state
+        return _rank_mass_ok(rank, n, n_orig, 1.02) \
+            & jnp.isfinite(resid).all() & (err >= 0) & (it >= 0)
+
     return SuperstepProgram(
         name="pagerank", variant="warm" if seeded else "fast",
         inputs=("rank0",) if seeded else (),
@@ -172,7 +198,7 @@ def pagerank_fast_program(shards, iters: int = 50,
         halt=lambda state: state[2] <= tol,
         outputs=lambda state: (state[0], state[2]),
         output_names=("rank", "err"), output_is_vertex=(True, False),
-        max_rounds=iters)
+        max_rounds=iters, guard=guard)
 
 
 def pagerank_async_program(shards, iters: int = 64, tol: float = 1e-6,
@@ -267,6 +293,16 @@ def pagerank_async_program(shards, iters: int = 64, tol: float = 1e-6,
                  age_cur, age_infl, max_age)
         return state, handle
 
+    def guard(g, prev, state):
+        # looser mass margin: the remote snapshot lags the local term by
+        # up to 2*staleness+1 rounds, so transient overshoot is larger
+        rank, remote, ship = state[0], state[1], state[2]
+        return _rank_mass_ok(rank, n, n_orig, 1.05) \
+            & jnp.isfinite(remote).all() & (remote >= 0).all() \
+            & jnp.isfinite(ship).all() & (ship >= 0).all() \
+            & (state[3] >= 0) & (state[4] >= 0) \
+            & (state[6] >= 0) & (state[7] >= 0) & (state[8] >= 0)
+
     return AsyncSuperstepProgram(
         name="pagerank", variant="async", inputs=(),
         init=init, local=local, fold=fold,
@@ -274,4 +310,4 @@ def pagerank_async_program(shards, iters: int = 64, tol: float = 1e-6,
         outputs=lambda g, state: (state[0], state[4], state[8]),
         output_names=("rank", "err", "max_age"),
         output_is_vertex=(True, False, False),
-        max_rounds=iters)
+        max_rounds=iters, guard=guard)

@@ -25,6 +25,15 @@ the frontier-pull kernels.
 
 All exchange functions are meant to be called INSIDE shard_map over
 axis "parts".
+
+Every primitive routes its OUTGOING payload through ``faults.tap``
+before the collective — the deterministic chaos-injection point (see
+``core/faults.py``; a Python-level no-op unless a schedule is armed).
+Ops: ``sum`` / ``min`` / ``or`` / ``bcast``; the blocking and
+double-buffered forms share op names so one schedule addresses both
+execution modes.  ``psum_scalar`` is NOT tapped: the BSP halt scalar is
+control plane, not payload — async programs piggyback their halt count
+on the data exchange, where it IS faultable.
 """
 
 from __future__ import annotations
@@ -34,6 +43,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults
 from repro.core.compat import axis_size
 
 AXIS = "parts"
@@ -74,7 +84,7 @@ def exchange_sum(acc_global, axis_name: str = AXIS):
     owns.  One reduce-scatter on the wire: (P-1)/P * n elements.
     """
     parts = axis_size(axis_name)
-    blocks = acc_global.reshape(parts, -1)
+    blocks = faults.tap("sum", acc_global.reshape(parts, -1), axis_name)
     return jax.lax.psum_scatter(blocks, axis_name, scatter_dimension=0,
                                 tiled=False).reshape(-1)
 
@@ -89,7 +99,9 @@ def exchange_or(mask_global, axis_name: str = AXIS):
     """
     parts = axis_size(axis_name)
     n_local_words = mask_global.shape[0] // parts // 32
-    packed = pack_bits(mask_global)                     # (n/32,) u32
+    packed = faults.tap(
+        "or", pack_bits(mask_global).reshape(parts, n_local_words),
+        axis_name)
     rows = jax.lax.all_to_all(
         packed.reshape(parts, 1, n_local_words), axis_name,
         split_axis=0, concat_axis=1)                    # (1, P, nl/32)
@@ -98,22 +110,24 @@ def exchange_or(mask_global, axis_name: str = AXIS):
 
 
 def exchange_min_int(val_global, axis_name: str = AXIS, big=None):
-    """Element-wise MIN combine of int32 proposals.
+    """Element-wise MIN combine of proposals (any ordered dtype —
+    int32 parents/labels, f32 distances).
 
     all_to_all moves each partition's (P, n_local) proposal matrix so
     that owners receive P candidate rows; min over the row axis.
     """
     parts = axis_size(axis_name)
-    blocks = val_global.reshape(parts, 1, -1)
-    rows = jax.lax.all_to_all(blocks, axis_name, split_axis=0,
+    blocks = faults.tap("min", val_global.reshape(parts, -1), axis_name)
+    rows = jax.lax.all_to_all(blocks.reshape(parts, 1, -1), axis_name,
+                              split_axis=0,
                               concat_axis=1)          # (1, P, n_local)
     return rows.min(axis=(0, 1))
 
 
 def broadcast_global(local_vals, axis_name: str = AXIS):
     """(n_local,) -> (n,) full replica (all-gather)."""
-    return jax.lax.all_gather(local_vals, axis_name, axis=0,
-                              tiled=True)
+    return jax.lax.all_gather(faults.tap("bcast", local_vals, axis_name),
+                              axis_name, axis=0, tiled=True)
 
 
 def psum_scalar(x, axis_name: str = AXIS):
@@ -152,8 +166,9 @@ def exchange_min_start(val_global, scalar, axis_name: str = AXIS):
     parts = axis_size(axis_name)
     n_local = val_global.shape[0] // parts
     blocks = val_global.reshape(parts, n_local)
-    payload = jnp.concatenate(
-        [blocks, jnp.full((parts, 1), scalar, blocks.dtype)], axis=1)
+    payload = faults.tap("min", jnp.concatenate(
+        [blocks, jnp.full((parts, 1), scalar, blocks.dtype)], axis=1),
+        axis_name)
     return jax.lax.all_to_all(payload.reshape(parts, 1, n_local + 1),
                               axis_name, split_axis=0, concat_axis=1)
 
@@ -174,8 +189,9 @@ def exchange_sum_start(acc_global, scalar, axis_name: str = AXIS):
     parts = axis_size(axis_name)
     n_local = acc_global.shape[0] // parts
     blocks = acc_global.reshape(parts, n_local)
-    payload = jnp.concatenate(
-        [blocks, jnp.full((parts, 1), scalar, blocks.dtype)], axis=1)
+    payload = faults.tap("sum", jnp.concatenate(
+        [blocks, jnp.full((parts, 1), scalar, blocks.dtype)], axis=1),
+        axis_name)
     return jax.lax.psum_scatter(payload, axis_name, scatter_dimension=0,
                                 tiled=False)
 
@@ -194,8 +210,9 @@ def exchange_or_start(mask_global, scalar, axis_name: str = AXIS):
     parts = axis_size(axis_name)
     n_local_words = mask_global.shape[0] // parts // 32
     blocks = pack_bits(mask_global).reshape(parts, n_local_words)
-    payload = jnp.concatenate(
-        [blocks, jnp.full((parts, 1), scalar, jnp.uint32)], axis=1)
+    payload = faults.tap("or", jnp.concatenate(
+        [blocks, jnp.full((parts, 1), scalar, jnp.uint32)], axis=1),
+        axis_name)
     return jax.lax.all_to_all(payload.reshape(parts, 1, n_local_words + 1),
                               axis_name, split_axis=0, concat_axis=1)
 

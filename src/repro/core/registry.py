@@ -98,6 +98,10 @@ class ProgramSpec:
     # (barrier per round) or "async" (double-buffered exchange with the
     # halt scalar piggybacked on the data payload)
     exec_mode: str = "bsp"
+    # human statement of the per-round invariant the program's guard
+    # checks under guard=True runs (the value-detection channel of the
+    # fault-tolerance layer); "" means the default NaN/Inf screen
+    guard_doc: str = ""
 
     def __post_init__(self):
         if not self.input_kinds:
@@ -252,7 +256,9 @@ register(ProgramSpec(
     make=lambda g, **p: _bfs.bfs_bsp_program(g, **p),
     inputs=("root",), defaults={"max_levels": 64},
     doc="level-synchronous push BFS; full parent-proposal exchange "
-        "(the rigid-barrier Boost/PBGL baseline)"))
+        "(the rigid-barrier Boost/PBGL baseline)",
+    guard_doc="parents non-negative and element-wise non-increasing; "
+              "frontier count >= 0"))
 
 register(ProgramSpec(
     algo="bfs", variant="fast",
@@ -262,14 +268,18 @@ register(ProgramSpec(
               "direction": "adaptive"},
     batch_defaults={"direction": "pull"},
     doc="direction-optimizing BFS with bit-packed frontier exchange "
-        "(the HPX-adapted implementation)"), default=True)
+        "(the HPX-adapted implementation)",
+    guard_doc="parents non-negative and element-wise non-increasing; "
+              "frontier count >= 0"), default=True)
 
 register(ProgramSpec(
     algo="pagerank", variant="bsp",
     make=lambda g, **p: _pr.pagerank_bsp_program(g, **p),
     inputs=(), defaults={"iters": 50, "tol": 1e-6},
     doc="pull PageRank with full contribution all-gather (ghost "
-        "replication baseline)"))
+        "replication baseline)",
+    guard_doc="rank non-negative; global mass in ((1-alpha)*0.9, "
+              "(n/n_orig)*1.02); residual >= 0"))
 
 register(ProgramSpec(
     algo="pagerank", variant="fast",
@@ -278,20 +288,28 @@ register(ProgramSpec(
     defaults={"iters": 50, "tol": 1e-6, "compress": True,
               "switch_factor": 1e3, "err_every": 5},
     doc="push-aggregate PageRank: fused reduce-scatter + adaptive bf16 "
-        "error-feedback compression"), default=True)
+        "error-feedback compression",
+    guard_doc="rank non-negative; global mass in ((1-alpha)*0.9, "
+              "(n/n_orig)*1.02); error-feedback residual finite"),
+    default=True)
 
 register(ProgramSpec(
     algo="sssp", variant="default",
     make=lambda g, **p: _sssp.sssp_program(g, **p),
-    inputs=("root",), defaults={"max_rounds": 64},
-    doc="frontier-pruned Bellman-Ford with MIN-combine exchange"),
-    default=True)
+    inputs=("root",), defaults={"max_rounds": 64, "weight_scale": 1.0},
+    doc="frontier-pruned Bellman-Ford with MIN-combine exchange; "
+        "weight_scale uniformly scales the synthesized weights (must "
+        "be finite and positive — serve admission rejects the rest)",
+    guard_doc="distances non-negative and element-wise non-increasing "
+              "(NaN fails both); change count >= 0"), default=True)
 
 register(ProgramSpec(
     algo="cc", variant="default",
     make=lambda g, **p: _cc.cc_program(g, **p),
     inputs=(), defaults={"max_rounds": 64},
-    doc="label propagation over both edge directions"), default=True)
+    doc="label propagation over both edge directions",
+    guard_doc="labels non-negative and element-wise non-increasing; "
+              "change count >= 0"), default=True)
 
 register(ProgramSpec(
     algo="triangles", variant="default",
@@ -299,14 +317,19 @@ register(ProgramSpec(
     inputs=(), defaults={},
     doc="rotation triangle counting: bit-packed neighbor-set exchange "
         "(ppermute ring, P supersteps), intersection as masked matmul",
-    n_budget=1 << 13), default=True)
+    n_budget=1 << 13,
+    guard_doc="per-vertex double-counts finite and non-decreasing"),
+    default=True)
 
 register(ProgramSpec(
     algo="kcore", variant="default",
     make=lambda g, **p: _kcore.kcore_program(g, **p),
     inputs=(), defaults={"max_rounds": 512},
     doc="iterative peeling (threshold form) with fused degree-decrement "
-        "exchange; degeneracy rides as a scalar output"), default=True)
+        "exchange; degeneracy rides as a scalar output",
+    guard_doc="live degrees within [0, undirected degree]; core numbers "
+              "and threshold non-decreasing; alive count >= 0"),
+    default=True)
 
 register(ProgramSpec(
     algo="pagerank", variant="warm",
@@ -318,7 +341,9 @@ register(ProgramSpec(
                                 mutations="any"),
     doc="push-aggregate PageRank warm-restarted from a previous epoch's "
         "rank vector; same fixed point from any seed, so it is exact "
-        "after ANY mutation batch — the seed only buys fewer rounds"))
+        "after ANY mutation batch — the seed only buys fewer rounds",
+    guard_doc="rank non-negative; global mass in ((1-alpha)*0.9, "
+              "(n/n_orig)*1.02); error-feedback residual finite"))
 
 register(ProgramSpec(
     algo="cc", variant="incremental",
@@ -329,7 +354,9 @@ register(ProgramSpec(
                                 mutations="insert"),
     doc="min-label propagation warm-started from a previous epoch's "
         "labels: exact after insert-only batches (components only "
-        "merge); identity seed = the cold start"))
+        "merge); identity seed = the cold start",
+    guard_doc="labels non-negative and element-wise non-increasing; "
+              "change count >= 0"))
 
 register(ProgramSpec(
     algo="kcore", variant="incremental",
@@ -341,7 +368,9 @@ register(ProgramSpec(
     doc="local support-decrement peeling from a previous epoch's core "
         "numbers: exact from ANY pointwise upper bound, so old cores "
         "are valid after delete-only batches and the degree bound is "
-        "the cold start"))
+        "the cold start",
+    guard_doc="assignment non-negative and element-wise non-increasing; "
+              "change count >= 0"))
 
 register(ProgramSpec(
     algo="betweenness", variant="default",
@@ -349,8 +378,10 @@ register(ProgramSpec(
     inputs=("root",), defaults={"max_levels": 64},
     doc="Brandes single-source dependencies: path-counting forward BFS "
         "then a dependency-accumulation backward sweep (the first "
-        "two-phase program; sum over batched sources for centrality)"),
-    default=True)
+        "two-phase program; sum over batched sources for centrality)",
+    guard_doc="forward: levels adopt-once non-increasing, path counts "
+              "finite/non-decreasing; backward: dependencies finite and "
+              "non-negative, forward fields bit-frozen"), default=True)
 
 # -- async (double-buffered) variants: stale-tolerant programs on
 #    run_program_async, each conformance-gated against the same NumPy
@@ -362,7 +393,9 @@ register(ProgramSpec(
     inputs=("root",), defaults={"max_levels": 64, "local_iters": 1},
     doc="async BFS: monotone min-combine levels overlap the in-flight "
         "exchange, halt count piggybacked on the level payload (no "
-        "separate psum), parents derived post-loop from exact levels"))
+        "separate psum), parents derived post-loop from exact levels",
+    guard_doc="monotone values non-negative and element-wise "
+              "non-increasing; quiescence counters >= 0"))
 
 register(ProgramSpec(
     algo="pagerank", variant="async", exec_mode="async",
@@ -372,7 +405,10 @@ register(ProgramSpec(
     doc="bounded-staleness push PageRank: fresh own-slice term every "
         "round, remote term refreshed every `staleness` rounds by the "
         "double-buffered reduce-scatter with the residual piggybacked; "
-        "remote age provably <= 2*staleness+1 (reported as max_age)"))
+        "remote age provably <= 2*staleness+1 (reported as max_age)",
+    guard_doc="rank non-negative; global mass in ((1-alpha)*0.9, "
+              "(n/n_orig)*1.05) (staleness transients); remote/ship "
+              "terms finite and non-negative; ages >= 0"))
 
 register(ProgramSpec(
     algo="cc", variant="async", exec_mode="async",
@@ -380,15 +416,20 @@ register(ProgramSpec(
     inputs=(), defaults={"max_rounds": 64, "local_iters": 1},
     doc="async min-label propagation: both edge directions share one "
         "min-accumulator exchange per round; staleness-exact (labels "
-        "only decrease under idempotent min-combine)"))
+        "only decrease under idempotent min-combine)",
+    guard_doc="monotone values non-negative and element-wise "
+              "non-increasing; quiescence counters >= 0"))
 
 register(ProgramSpec(
     algo="sssp", variant="async", exec_mode="async",
     make=lambda g, **p: _sssp.sssp_async_program(g, **p),
-    inputs=("root",), defaults={"max_rounds": 64, "local_iters": 1},
+    inputs=("root",),
+    defaults={"max_rounds": 64, "local_iters": 1, "weight_scale": 1.0},
     doc="async Bellman-Ford: local closure relaxes own-partition "
         "improvements while the distance exchange is in flight; "
-        "staleness-exact under min-combine"))
+        "staleness-exact under min-combine",
+    guard_doc="monotone values non-negative and element-wise "
+              "non-increasing; quiescence counters >= 0"))
 
 
 # ---------------------------------------------------------------------------
@@ -419,6 +460,32 @@ def algorithms_markdown_table() -> str:
         outs = ", ".join(prog.output_names) + ", rounds"
         lines.append(f"| `{spec.key}`{mark} | {spec.exec_mode} | {ins} "
                      f"| {params} | {outs} | {spec.doc} |")
+    return "\n".join(lines)
+
+
+def guards_markdown_table() -> str:
+    """Markdown table of every registered program's fault-guard
+    invariant, derived from the registry AND the built programs (the
+    guarded column reads the program object's ``guard`` field, not a
+    parallel claim) — same drift-test contract as
+    ``algorithms_markdown_table``."""
+    from repro.core.graph import abstract_graph
+    from repro.core.superstep import PhasedProgram
+    g = abstract_graph(256, 8, 1)
+    lines = [
+        "| program | guard | per-round invariant (guard=True) |",
+        "| --- | --- | --- |",
+    ]
+    for algo, variant in available():
+        spec = _REGISTRY[(algo, variant)]
+        prog = spec.build(g)
+        if isinstance(prog, PhasedProgram):
+            guarded = all(ph.guard is not None for ph in prog.phases)
+        else:
+            guarded = prog.guard is not None
+        mark = "custom" if guarded else "NaN/Inf screen"
+        inv = spec.guard_doc or "float state leaves finite"
+        lines.append(f"| `{spec.key}` | {mark} | {inv} |")
     return "\n".join(lines)
 
 

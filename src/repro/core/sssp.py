@@ -19,9 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import localops
-from repro.core.compat import axis_size
 from repro.core.monotone import monotone_async_program
-from repro.core.partitioned import AXIS, psum_scalar
+from repro.core.partitioned import AXIS, exchange_min_int, psum_scalar
 from repro.core.superstep import AsyncSuperstepProgram, SuperstepProgram
 
 F32_INF = jnp.float32(1e30)
@@ -34,8 +33,17 @@ def edge_weight(src, dst):
     return 1.0 + (h % jnp.uint32(1 << 16)).astype(jnp.float32) / float(1 << 16)
 
 
-def sssp_program(shards, max_rounds: int = 64) -> SuperstepProgram:
-    """Frontier-pruned Bellman-Ford as a superstep program."""
+def sssp_program(shards, max_rounds: int = 64,
+                 weight_scale: float = 1.0) -> SuperstepProgram:
+    """Frontier-pruned Bellman-Ford as a superstep program.
+
+    ``weight_scale`` uniformly scales the synthesized edge weights (a
+    query-time parameter for serving; 1.0 reproduces the oracle's
+    weights bit-for-bit).  It must be finite and positive — the serve
+    layer rejects anything else at admission (``validate_query``)
+    because a NaN/Inf scale would poison every distance in a coalesced
+    launch.
+    """
     n, n_local = shards.n, shards.n_local
     ell_dst = shards.ell("ell_dst")
 
@@ -43,7 +51,8 @@ def sssp_program(shards, max_rounds: int = 64) -> SuperstepProgram:
         lo = jax.lax.axis_index(AXIS) * n_local
         g = dict(g)
         g["out_weight"] = edge_weight(g["out_src_local"] + lo,
-                                      g["out_dst_global"])
+                                      g["out_dst_global"]) \
+            * jnp.float32(weight_scale)
         return g
 
     def init(g, root):
@@ -55,7 +64,6 @@ def sssp_program(shards, max_rounds: int = 64) -> SuperstepProgram:
 
     def step(g, state):
         dist, changed, _ = state
-        parts = axis_size(AXIS)
         srcl = g["out_src_local"]
         dst = g["out_dst_global"]
         valid = dst < n
@@ -66,13 +74,18 @@ def sssp_program(shards, max_rounds: int = 64) -> SuperstepProgram:
         prop = localops.scatter_combine(
             g, ell_dst, jnp.where(active, dist[srcl] + w, F32_INF), "min",
             identity=F32_INF)
-        rows = jax.lax.all_to_all(prop.reshape(parts, 1, n_local), AXIS,
-                                  split_axis=0, concat_axis=1)
-        mine = rows.min(axis=(0, 1))
+        mine = exchange_min_int(prop)
         new_dist = jnp.minimum(dist, mine)
         new_changed = new_dist < dist
         cnt = psum_scalar(new_changed.sum(dtype=jnp.int32))
         return new_dist, new_changed, cnt
+
+    def guard(g, prev, state):
+        # distances non-negative and non-increasing (NaN corruption
+        # fails both comparisons); change count non-negative
+        dist, pdist = state[0], prev[0]
+        return (dist >= 0).all() & (dist <= pdist).all() \
+            & (state[2] >= 0)
 
     return SuperstepProgram(
         name="sssp", variant="default", inputs=("root",),
@@ -80,11 +93,11 @@ def sssp_program(shards, max_rounds: int = 64) -> SuperstepProgram:
         halt=lambda state: state[2] <= 0,
         outputs=lambda state: (state[0],),
         output_names=("dist",), output_is_vertex=(True,),
-        max_rounds=max_rounds)
+        max_rounds=max_rounds, guard=guard)
 
 
-def sssp_async_program(shards, max_rounds: int = 64,
-                       local_iters: int = 1) -> AsyncSuperstepProgram:
+def sssp_async_program(shards, max_rounds: int = 64, local_iters: int = 1,
+                       weight_scale: float = 1.0) -> AsyncSuperstepProgram:
     """Async Bellman-Ford on the double-buffered exchange.
 
     Distance relaxation is monotone min-combine, so staleness is exact:
@@ -103,7 +116,8 @@ def sssp_async_program(shards, max_rounds: int = 64,
         lo = jax.lax.axis_index(AXIS) * n_local
         g = dict(g)
         g["out_weight"] = edge_weight(g["out_src_local"] + lo,
-                                      g["out_dst_global"])
+                                      g["out_dst_global"]) \
+            * jnp.float32(weight_scale)
         return g
 
     def init_vals(g, root):

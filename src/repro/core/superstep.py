@@ -35,6 +35,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults
+from repro.core.compat import axis_size
+from repro.core.partitioned import AXIS, psum_scalar
+
 
 @dataclass(frozen=True)
 class SuperstepProgram:
@@ -56,6 +60,15 @@ class SuperstepProgram:
       outputs(state) -> tuple
                              final per-shard outputs, aligned with
                              ``output_names`` / ``output_is_vertex``
+      guard(g, prev, state) -> bool
+                             optional per-round invariant check (local
+                             per-shard verdict; the driver makes it
+                             uniform): True = the round's state is
+                             consistent with the algorithm's invariants
+                             (monotone non-increase, mass conservation,
+                             non-negativity).  ``None`` falls back to
+                             the NaN/Inf screen over float state leaves.
+                             Compiled in only under ``guard=True`` runs.
     """
 
     name: str
@@ -69,6 +82,7 @@ class SuperstepProgram:
     output_is_vertex: tuple[bool, ...]  # True: (n_local,) field -> sharded
     max_rounds: int = 64
     prepare: Callable[[dict], dict] = field(default=lambda g: g)
+    guard: Callable[[dict, Any, Any], Any] | None = None
 
     @property
     def key(self) -> str:
@@ -131,31 +145,92 @@ class AsyncSuperstepProgram:
     output_is_vertex: tuple[bool, ...]
     max_rounds: int = 64
     prepare: Callable[[dict], dict] = field(default=lambda g: g)
+    guard: Callable[[dict, Any, Any], Any] | None = None
 
     @property
     def key(self) -> str:
         return f"{self.name}/{self.variant}"
 
 
+# --------------------------------------------------------------------------
+# Guard machinery.  A guard run folds THREE signals into one per-round
+# uniform ``ok`` scalar: the program's invariant verdict (or the default
+# NaN/Inf screen), the transport-stamp violations drained from the fault
+# taps, and the previous round's ok (sticky — once bad, stays bad so the
+# loop exits and the caller can roll back).
+# --------------------------------------------------------------------------
+
+
+def finite_state(state):
+    """Default guard: every float leaf of the state is finite."""
+    ok = jnp.bool_(True)
+    for leaf in jax.tree_util.tree_leaves(state):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            ok = ok & jnp.isfinite(leaf).all()
+    return ok
+
+
+def _round_ok(prog, g, prev, state):
+    """Uniform per-round verdict: invariant guard AND transport stamps."""
+    gfn = prog.guard if prog.guard is not None \
+        else (lambda g_, p_, s_: finite_state(s_))
+    local = jnp.asarray(gfn(g, prev, state), bool)
+    ok = psum_scalar(local.astype(jnp.int32)) == axis_size(AXIS)
+    viol = faults.stamp_violation()
+    if viol is not None:
+        ok = ok & jnp.logical_not(viol)
+    return ok
+
+
 def run_program_async(prog: AsyncSuperstepProgram, g: dict, *inputs,
-                      static_iters: int = 0):
+                      static_iters: int = 0, guard: bool = False):
     """The double-buffered driver: same ``(outputs, rounds)`` contract
     as :func:`run_program`, same while/scan split, but each round is
     ``local`` (overlap window) then ``fold`` (finish + restart the
-    exchange), with the in-flight handle carried across iterations."""
+    exchange), with the in-flight handle carried across iterations.
+
+    Fault-round addressing: the exchange issued by ``init`` is round 0;
+    the one started in body iteration ``r`` is round ``r + 1`` (the
+    (k+1)-th exchange started is round k+1).  With ``guard=True`` the
+    return is ``(outputs, rounds, ok)``.
+    """
     g = prog.prepare(g)
+    faults.set_round(jnp.int32(0))
     state0, handle0 = prog.init(g, *inputs)
 
     if static_iters:
         def sbody(carry, _):
             state, handle, r = carry
+            faults.set_round(r + 1)
             state, handle = prog.fold(g, prog.local(g, state), handle)
             return (state, handle, r + 1), None
 
         (state, _, rounds), _ = jax.lax.scan(
             sbody, (state0, handle0, jnp.int32(0)), None,
             length=static_iters)
+        faults.set_round(jnp.int32(-1))   # outputs are not addressable
         return prog.outputs(g, state), rounds
+
+    if guard:
+        ok0 = _round_ok(prog, g, state0, state0)
+
+        def gcond(carry):
+            state, _, r, ok = carry
+            return ok & jnp.logical_not(prog.halt(state)) \
+                & (r < prog.max_rounds)
+
+        def gbody(carry):
+            state, handle, r, ok = carry
+            faults.set_round(r + 1)
+            prev = state
+            state, handle = prog.fold(g, prog.local(g, state), handle)
+            return state, handle, r + 1, ok & _round_ok(prog, g, prev,
+                                                        state)
+
+        state, _, rounds, ok = jax.lax.while_loop(
+            gcond, gbody, (state0, handle0, jnp.int32(0), ok0))
+        faults.set_round(jnp.int32(-1))
+        return prog.outputs(g, state), rounds, ok
 
     def cond(carry):
         state, _, r = carry
@@ -163,11 +238,13 @@ def run_program_async(prog: AsyncSuperstepProgram, g: dict, *inputs,
 
     def body(carry):
         state, handle, r = carry
+        faults.set_round(r + 1)
         state, handle = prog.fold(g, prog.local(g, state), handle)
         return state, handle, r + 1
 
     state, _, rounds = jax.lax.while_loop(
         cond, body, (state0, handle0, jnp.int32(0)))
+    faults.set_round(jnp.int32(-1))
     return prog.outputs(g, state), rounds
 
 
@@ -201,44 +278,85 @@ class PhasedProgram:
 
 
 def run_phases(prog: PhasedProgram, g: dict, *inputs,
-               static_iters: int = 0):
+               static_iters: int = 0, guard: bool = False):
     """Chain the phases of a :class:`PhasedProgram`: phase ``i+1`` is
     initialized with phase ``i``'s outputs.  Returns the last phase's
     outputs and the TOTAL round count (each phase runs ``static_iters``
     supersteps on the scan path, so the total is ``len(phases) *
-    static_iters`` there)."""
+    static_iters`` there).  Fault rounds address each phase's own
+    counter (a round-2 event fires in EVERY phase's round 2).  Under
+    ``guard=True`` the per-phase ok scalars AND together."""
     chained = inputs
     total = jnp.int32(0)
+    ok = jnp.bool_(True)
     for phase in prog.phases:
-        chained, rounds = run_program(phase, g, *chained,
-                                      static_iters=static_iters)
+        res = run_program(phase, g, *chained, static_iters=static_iters,
+                          guard=guard)
+        if guard:
+            chained, rounds, phase_ok = res
+            ok = ok & phase_ok
+        else:
+            chained, rounds = res
         total = total + rounds
-    return chained, total
+    return (chained, total, ok) if guard else (chained, total)
 
 
-def run_program(prog, g: dict, *inputs, static_iters: int = 0):
+def run_program(prog, g: dict, *inputs, static_iters: int = 0,
+                guard: bool = False):
     """The ONE shared superstep driver (call inside shard_map).
 
     Returns ``(outputs_tuple, rounds)`` where ``rounds`` is the number of
     supersteps executed (== ``static_iters`` on the scan path).  A
     :class:`PhasedProgram` dispatches to :func:`run_phases`.
+
+    ``guard=True`` compiles the per-round invariant check in: the while
+    cond gains a sticky uniform ``ok`` scalar (invariant guard AND
+    fault-transport stamps), the loop exits on the FIRST violated round,
+    and the return becomes ``(outputs_tuple, rounds, ok)``.  Not
+    supported on the ``static_iters`` scan path (the dry-run costs a
+    clean loop).
     """
+    if guard and static_iters:
+        raise ValueError("guard=True is incompatible with static_iters")
     if isinstance(prog, PhasedProgram):
-        return run_phases(prog, g, *inputs, static_iters=static_iters)
+        return run_phases(prog, g, *inputs, static_iters=static_iters,
+                          guard=guard)
     if isinstance(prog, AsyncSuperstepProgram):
         return run_program_async(prog, g, *inputs,
-                                 static_iters=static_iters)
+                                 static_iters=static_iters, guard=guard)
     g = prog.prepare(g)
+    faults.set_round(jnp.int32(0))
     state0 = prog.init(g, *inputs)
 
     if static_iters:
         def sbody(carry, _):
             state, r = carry
+            faults.set_round(r)
             return (prog.step(g, state), r + 1), None
 
         (state, rounds), _ = jax.lax.scan(
             sbody, (state0, jnp.int32(0)), None, length=static_iters)
+        faults.set_round(jnp.int32(-1))   # outputs are not addressable
         return prog.outputs(state), rounds
+
+    if guard:
+        ok0 = _round_ok(prog, g, state0, state0)
+
+        def gcond(carry):
+            state, r, ok = carry
+            return ok & jnp.logical_not(prog.halt(state)) \
+                & (r < prog.max_rounds)
+
+        def gbody(carry):
+            state, r, ok = carry
+            faults.set_round(r)
+            new = prog.step(g, state)
+            return new, r + 1, ok & _round_ok(prog, g, state, new)
+
+        state, rounds, ok = jax.lax.while_loop(
+            gcond, gbody, (state0, jnp.int32(0), ok0))
+        faults.set_round(jnp.int32(-1))
+        return prog.outputs(state), rounds, ok
 
     def cond(carry):
         state, r = carry
@@ -246,9 +364,11 @@ def run_program(prog, g: dict, *inputs, static_iters: int = 0):
 
     def body(carry):
         state, r = carry
+        faults.set_round(r)
         return prog.step(g, state), r + 1
 
     state, rounds = jax.lax.while_loop(cond, body, (state0, jnp.int32(0)))
+    faults.set_round(jnp.int32(-1))
     return prog.outputs(state), rounds
 
 
@@ -275,3 +395,76 @@ def run_program_batched(prog, g: dict, *batched_inputs,
 
     res = jax.vmap(one)(*batched_inputs)
     return res[:-1], res[-1]
+
+
+# --------------------------------------------------------------------------
+# Chunked execution: the checkpointing substrate.
+#
+# ``core/recovery.py`` drives a program as a sequence of guarded CHUNKS of
+# at most k rounds, snapshotting the carry to host between chunks.  The
+# carry is ``(state, handle, rounds, ok)`` — handle is ``()`` for BSP
+# programs, the in-flight exchange for async ones (it is plain array
+# data, so it checkpoints and restores like any state leaf).  Chunking
+# never changes the traced per-round computation, so a chunked run is
+# bit-identical to the guarded un-chunked driver, which is bit-identical
+# to the plain driver on fault-free rounds.
+# --------------------------------------------------------------------------
+
+
+def init_carry(prog, g: dict, *inputs):
+    """Build the initial checkpointable carry ``(state, handle, rounds,
+    ok)`` — prepare + init + the round-0 verdict (init-time exchanges
+    are fault-addressable as round 0, so a tainted init reports
+    ``ok=False`` and the caller re-inits clean rather than checkpointing
+    poison)."""
+    g = prog.prepare(g)
+    faults.set_round(jnp.int32(0))
+    if isinstance(prog, AsyncSuperstepProgram):
+        state0, handle0 = prog.init(g, *inputs)
+    else:
+        state0 = prog.init(g, *inputs)
+        handle0 = ()
+    ok0 = _round_ok(prog, g, state0, state0)
+    return state0, handle0, jnp.int32(0), ok0
+
+
+def run_chunk(prog, g: dict, carry, chunk: int):
+    """Advance ``carry`` by up to ``chunk`` guarded rounds.
+
+    Exits early on halt, ``max_rounds``, or the first violated round
+    (sticky ``ok``).  Returns ``(carry, halted)``; the caller inspects
+    ``carry[3]`` (ok) to decide checkpoint vs rollback and ``halted`` /
+    ``carry[2]`` (rounds) to decide whether to keep chunking.
+    """
+    g = prog.prepare(g)
+    is_async = isinstance(prog, AsyncSuperstepProgram)
+
+    def cond(c):
+        (state, _, r, ok), i = c
+        return ok & jnp.logical_not(prog.halt(state)) \
+            & (i < chunk) & (r < prog.max_rounds)
+
+    def body(c):
+        (state, handle, r, ok), i = c
+        faults.set_round(r + 1 if is_async else r)
+        prev = state
+        if is_async:
+            state, handle = prog.fold(g, prog.local(g, state), handle)
+        else:
+            state = prog.step(g, state)
+        ok = ok & _round_ok(prog, g, prev, state)
+        return (state, handle, r + 1, ok), i + 1
+
+    carry, _ = jax.lax.while_loop(cond, body, (carry, jnp.int32(0)))
+    faults.set_round(jnp.int32(-1))
+    return carry, jnp.asarray(prog.halt(carry[0]), bool)
+
+
+def carry_outputs(prog, g: dict, carry):
+    """Finalize a halted carry into the program's outputs tuple."""
+    g = prog.prepare(g)
+    faults.set_round(jnp.int32(-1))
+    state = carry[0]
+    if isinstance(prog, AsyncSuperstepProgram):
+        return prog.outputs(g, state)
+    return prog.outputs(state)

@@ -36,6 +36,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults
 from repro.core.compat import axis_size
 from repro.core.partitioned import AXIS, psum_scalar
 from repro.core.superstep import SuperstepProgram
@@ -102,7 +103,8 @@ def triangles_program(n: int, n_local: int) -> SuperstepProgram:
         contrib = (gate * common).sum(axis=1)
         tri2 = tri2 + jnp.where(r < p, contrib, 0.0)  # no-op past P rounds
         block = jax.lax.ppermute(
-            block, AXIS, [(i, (i + 1) % p) for i in range(p)])
+            faults.tap("perm", block), AXIS,
+            [(i, (i + 1) % p) for i in range(p)])
         return block, tri2, r + 1
 
     def outputs(state):
@@ -111,6 +113,14 @@ def triangles_program(n: int, n_local: int) -> SuperstepProgram:
         total = (psum_scalar(tri2.sum()) / 6.0 + 0.5).astype(jnp.int32)
         return tri, total
 
+    def guard(g, prev, state):
+        # per-vertex double-counts accumulate non-negative intersection
+        # contributions: finite and non-decreasing.  The rotated
+        # adjacency block itself is bitmap data — transport CRC
+        # territory, no value invariant to check.
+        tri2, ptri2 = state[1], prev[1]
+        return jnp.isfinite(tri2).all() & (tri2 >= ptri2).all()
+
     return SuperstepProgram(
         name="triangles", variant="default", inputs=(),
         prepare=prepare, init=init, step=step,
@@ -118,4 +128,4 @@ def triangles_program(n: int, n_local: int) -> SuperstepProgram:
         outputs=outputs,
         output_names=("triangles", "total"),
         output_is_vertex=(True, False),
-        max_rounds=parts)
+        max_rounds=parts, guard=guard)

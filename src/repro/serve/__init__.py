@@ -27,7 +27,8 @@ from repro.serve.dynamic import DynamicGraph, EllOverflow, MutationBatch, \
     MutationStats, mutation_stream
 from repro.serve.executor import DoubleBufferedExecutor
 from repro.serve.metrics import ServeMetrics
-from repro.serve.query import Query, QueryKey, QueryResult, make_key, query
+from repro.serve.query import Query, QueryKey, QueryResult, make_key, \
+    query, validate_query
 from repro.serve.server import GraphServer
 from repro.serve.workload import parse_mix, synthetic_trace, \
     zipf_root_sampler
@@ -37,5 +38,5 @@ __all__ = [
     "DoubleBufferedExecutor", "DynamicGraph", "EllOverflow", "GraphServer",
     "MutationBatch", "MutationStats", "Query", "QueryKey", "QueryResult",
     "ServeMetrics", "make_key", "mutation_stream", "parse_mix", "query",
-    "synthetic_trace", "zipf_root_sampler",
+    "synthetic_trace", "validate_query", "zipf_root_sampler",
 ]

@@ -72,14 +72,46 @@ class Coalescer:
     queues.  Keying the queues on the admission epoch is what keeps
     coalescing snapshot-consistent: queries admitted before a mutation
     never share a launch with queries admitted after it, so every
-    launch reads exactly one graph version."""
+    launch reads exactly one graph version.
 
-    def __init__(self, ladder: BucketLadder | None = None):
+    ``max_queued`` bounds the TOTAL pending count; an admission that
+    would exceed it sheds one query first, **oldest-deadline-first**:
+    the victim is the pending query whose absolute deadline expires
+    soonest (ties, and the unbounded ``deadline_s=None`` tail, break
+    to oldest admission).  Under overload that policy drops exactly
+    the queries least likely to make their budget anyway and keeps
+    no-deadline work last in the firing line.  The evicted query (which
+    may be the one just admitted) is returned so the server can resolve
+    it with a typed ``shed`` result instead of silence."""
+
+    def __init__(self, ladder: BucketLadder | None = None,
+                 max_queued: int | None = None):
+        if max_queued is not None and max_queued < 1:
+            raise ValueError(f"max_queued must be >= 1, got {max_queued}")
         self.ladder = ladder or BucketLadder()
+        self.max_queued = max_queued
         self._pending: dict[tuple[QueryKey, int], deque[Query]] = {}
 
-    def admit(self, q: Query) -> None:
+    def admit(self, q: Query) -> Query | None:
+        """Queue ``q``; returns the query shed to stay within
+        ``max_queued`` (None when the queue had room)."""
         self._pending.setdefault((q.key, q.epoch), deque()).append(q)
+        if self.max_queued is None or \
+                self.pending_count() <= self.max_queued:
+            return None
+        return self._shed_one()
+
+    def _shed_one(self) -> Query:
+        victim_ke, victim_i, victim_key = None, -1, None
+        for ke, dq in self._pending.items():
+            for i, q in enumerate(dq):
+                k = (q.deadline_abs, q.t_submit, q.qid)
+                if victim_key is None or k < victim_key:
+                    victim_ke, victim_i, victim_key = ke, i, k
+        dq = self._pending[victim_ke]
+        victim = dq[victim_i]
+        del dq[victim_i]
+        return victim
 
     def pending_count(self, key: QueryKey | None = None) -> int:
         if key is not None:

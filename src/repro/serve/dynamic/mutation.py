@@ -109,7 +109,17 @@ class DynamicGraph:
         self.garr = dict(garr) if garr is not None else engine.device_graph()
         self.epoch = 0
         self._patch_fn = make_scatter_patch(engine.mesh)
+        # failure-atomicity journal: while an ``apply`` is in flight,
+        # every state change (mirror slot, occupancy cell, free-stack /
+        # position-index op) logs its inverse; an exception mid-batch
+        # replays the journal in reverse so the planner state and the
+        # mirrors roll back to the pre-batch graph exactly
+        self._undo: list | None = None
         self._rebuild_index()
+
+    def _log_undo(self, fn) -> None:
+        if self._undo is not None:
+            self._undo.append(fn)
 
     # -- index construction ------------------------------------------------
 
@@ -219,7 +229,19 @@ class DynamicGraph:
             else getattr(g, key)
 
     def _touch(self, touched, key: str, p: int, s: int) -> None:
-        touched.setdefault(key, set()).add((p, s))
+        """Record a mirror write; call BEFORE overwriting slot (p, s)
+        so the first touch journals the pre-batch value."""
+        seen = touched.setdefault(key, set())
+        if (p, s) not in seen and self._undo is not None:
+            arr, old = self._host_array(key), self._host_array(key)[p, s]
+            self._log_undo(lambda: arr.__setitem__((p, s), old))
+        seen.add((p, s))
+
+    def _set_occ(self, name, p, q, delta):
+        occ = self._occ[name]
+        old = int(occ[p, q])
+        self._log_undo(lambda: occ.__setitem__((p, q), old))
+        occ[p, q] = old + delta
 
     def _ell_fill(self, name, p, orig_row, value, touched):
         g = self.engine.g
@@ -229,9 +251,9 @@ class DynamicGraph:
         if occ[p, q] >= width[q]:        # unreachable post-check; belt
             raise EllOverflow(f"{name} row {q} overflow mid-apply")
         s = int(base[q] + occ[p, q])
-        g.ell_arrays[f"{name}_idx"][p, s] = value
-        occ[p, q] += 1
         self._touch(touched, f"{name}_idx", p, s)
+        g.ell_arrays[f"{name}_idx"][p, s] = value
+        self._set_occ(name, p, q, +1)
 
     def _ell_vacate(self, name, p, orig_row, value, touched):
         g = self.engine.g
@@ -248,19 +270,19 @@ class DynamicGraph:
         s = int(base[q] + hits[-1])
         last = int(base[q] + o - 1)
         if s != last:                     # keep the row contiguous
-            idx[p, s] = idx[p, last]
             self._touch(touched, f"{name}_idx", p, s)
-        idx[p, last] = meta.sentinel
+            idx[p, s] = idx[p, last]
         self._touch(touched, f"{name}_idx", p, last)
-        occ[p, q] -= 1
+        idx[p, last] = meta.sentinel
+        self._set_occ(name, p, q, -1)
 
     def _coo_set(self, key, p, e, value, touched):
-        getattr(self.engine.g, key)[p, e] = value
         self._touch(touched, key, p, e)
+        getattr(self.engine.g, key)[p, e] = value
 
     def _bump_degree(self, key, p, vl, delta, touched):
-        getattr(self.engine.g, key)[p, vl] += delta
         self._touch(touched, key, p, vl)
+        getattr(self.engine.g, key)[p, vl] += delta
 
     def _insert_one(self, u, v, touched):
         g = self.engine.g
@@ -269,12 +291,16 @@ class DynamicGraph:
         ul, vl = u - pu * n_local, v - pv * n_local
         e_out = self._free_out[pu].pop()
         e_in = self._free_in[pv].pop()
+        self._log_undo(lambda: self._free_out[pu].append(e_out))
+        self._log_undo(lambda: self._free_in[pv].append(e_in))
         self._coo_set("out_src_local", pu, e_out, ul, touched)
         self._coo_set("out_dst_global", pu, e_out, v, touched)
         self._coo_set("in_src_global", pv, e_in, u, touched)
         self._coo_set("in_dst_local", pv, e_in, vl, touched)
         self._pos_out[pu].setdefault((u, v), []).append(e_out)
         self._pos_in[pv].setdefault((u, v), []).append(e_in)
+        self._log_undo(lambda: self._pos_out[pu][(u, v)].pop())
+        self._log_undo(lambda: self._pos_in[pv][(u, v)].pop())
         self._bump_degree("out_degree", pu, ul, +1, touched)
         self._bump_degree("in_degree", pv, vl, +1, touched)
         self._ell_fill("ell_in", pv, vl, u, touched)        # neighbor id
@@ -289,6 +315,8 @@ class DynamicGraph:
         ul, vl = u - pu * n_local, v - pv * n_local
         e_out = self._pos_out[pu][(u, v)].pop()
         e_in = self._pos_in[pv][(u, v)].pop()
+        self._log_undo(lambda: self._pos_out[pu][(u, v)].append(e_out))
+        self._log_undo(lambda: self._pos_in[pv][(u, v)].append(e_in))
         self._ell_vacate("ell_in", pv, vl, u, touched)
         self._ell_vacate("ell_out", pu, ul, e_out, touched)
         self._ell_vacate("ell_dst", pu, v, e_out, touched)
@@ -301,6 +329,8 @@ class DynamicGraph:
         self._bump_degree("in_degree", pv, vl, -1, touched)
         self._free_out[pu].append(e_out)
         self._free_in[pv].append(e_in)
+        self._log_undo(lambda: self._free_out[pu].pop())
+        self._log_undo(lambda: self._free_in[pv].pop())
 
     # -- device patching ---------------------------------------------------
 
@@ -359,11 +389,25 @@ class DynamicGraph:
         except EllOverflow:
             return self._rebuild(ins, dels, t0)
         touched: dict[str, set] = {}
-        for u, v in dels:                 # deletes first: free the slots
-            self._delete_one(int(u), int(v), touched)
-        for u, v in ins:
-            self._insert_one(int(u), int(v), touched)
-        n_slots, n_arrays = self._apply_patches(touched)
+        garr_prev = dict(self.garr)        # refs only: patches are CoW
+        self._undo = []
+        try:
+            for u, v in dels:             # deletes first: free the slots
+                self._delete_one(int(u), int(v), touched)
+            for u, v in ins:
+                self._insert_one(int(u), int(v), touched)
+            n_slots, n_arrays = self._apply_patches(touched)
+        except BaseException:
+            # failure atomicity: an exception mid-batch (planning OR
+            # device patching) replays the journal in reverse — free
+            # stacks, position index, occupancy, mirrors and the
+            # resident device graph all return to the pre-batch epoch
+            for undo in reversed(self._undo):
+                undo()
+            self.garr = garr_prev
+            raise
+        finally:
+            self._undo = None
         self.epoch += 1
         return MutationStats(
             epoch=self.epoch, n_insert=len(ins), n_delete=len(dels),

@@ -12,6 +12,15 @@ is the demux, exactly as the serving layer wants it.
 The executor knows nothing about queries or programs — it pipelines
 ``(payload, device_outputs)`` pairs and hands completed ones back in
 dispatch order.
+
+Failure safety: JAX surfaces async-dispatch errors at the blocking
+call, so ``block_until_ready`` on one launch may raise long after the
+push that enqueued it.  The executor converts that into data — the
+launch is popped BEFORE blocking and the exception lands in
+``Launch.error`` — so a poisoned launch can never orphan its in-flight
+peers or wedge the pipeline: ``push``/``complete_one``/``drain`` never
+raise, and a drain after a failed launch still returns every remaining
+result.  Routing (retry, quarantine) is the server's job.
 """
 
 from __future__ import annotations
@@ -25,12 +34,16 @@ import jax
 
 @dataclass
 class Launch:
-    """One in-flight dispatch: opaque payload + unblocked device outputs."""
+    """One in-flight dispatch: opaque payload + unblocked device
+    outputs.  ``error`` is the exception ``block_until_ready`` raised,
+    if any — a failed launch completes like any other and the consumer
+    decides what to do with it."""
 
     payload: object
     out: tuple
     t_dispatch: float
     t_done: float = 0.0
+    error: Exception | None = None
 
 
 class DoubleBufferedExecutor:
@@ -66,7 +79,12 @@ class DoubleBufferedExecutor:
         return done
 
     def _complete_oldest(self) -> Launch:
+        # pop FIRST: if the block raises, the launch is already out of
+        # the pipeline and the ones behind it stay retrievable
         launch = self._inflight.popleft()
-        jax.block_until_ready(launch.out)
+        try:
+            jax.block_until_ready(launch.out)
+        except Exception as e:
+            launch.error = e
         launch.t_done = time.perf_counter()
         return launch

@@ -22,11 +22,24 @@ import time
 import numpy as np
 
 
+COUNTERS = ("shed", "timed_out", "retries", "quarantined", "rejected")
+
+
 class ServeMetrics:
+    """Latency cells record only ``status == "ok"`` answers — p99 of a
+    cell is the tail of latencies clients actually waited for an answer
+    through.  Resilience events ride the ``counts`` dict instead
+    (:data:`COUNTERS`): shed admissions, deadline misses, launch
+    retries, quarantined poison queries, admission rejects."""
+
     def __init__(self):
         self._lat: dict[tuple[str, int], list[float]] = {}
         self._t0: float | None = None
         self._t1: float | None = None
+        self.counts: dict[str, int] = {c: 0 for c in COUNTERS}
+
+    def count(self, name: str, k: int = 1) -> None:
+        self.counts[name] = self.counts.get(name, 0) + k
 
     def start(self) -> None:
         if self._t0 is None:
@@ -79,4 +92,8 @@ class ServeMetrics:
                      f"{sum(r['count'] for r in rows):6d} "
                      f"{sum(r['qps'] for r in rows):8.1f} "
                      f"(window {self.window_s:.2f}s)")
+        if any(self.counts.values()):
+            lines.append("  ".join(f"{k}={v}"
+                                   for k, v in sorted(self.counts.items())
+                                   if v))
         return "\n".join(lines)

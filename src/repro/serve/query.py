@@ -26,9 +26,25 @@ Three shapes of query flow through the server:
 Every admitted query is stamped with the server's snapshot ``epoch``;
 the epoch rides through the batch into ``QueryResult.epoch``, naming
 exactly which graph version answered.
+
+**Resilience surface.**  A query may carry a ``deadline_s`` — an
+admission-to-demux latency budget.  The server never blocks a batch on
+it: a query whose budget expires in the queue is answered ``timed_out``
+without launching, one whose launch lands late gets its answer withheld
+and the same typed result.  :func:`validate_query` is the admission
+gate: malformed inputs (out-of-range roots, non-finite float params
+such as an sssp ``weight_scale``, NaN/Inf or out-of-range seed vectors)
+are rejected BEFORE they can poison a coalesced launch.  Every
+terminal disposition is a :class:`QueryResult` whose ``status`` is one
+of ``"ok"`` / ``"timed_out"`` / ``"shed"`` / ``"failed"``; only
+``"ok"`` results carry fields.
 """
 
 from __future__ import annotations
+
+import math
+
+import numpy as np
 
 from dataclasses import dataclass, field
 
@@ -89,6 +105,10 @@ class Query:
     ``seed`` (seeded queries only) optionally pins the vertex-field
     inputs — a tuple of (n_orig,) host arrays, one per program input;
     left ``None``, the server resolves warm-vs-cold itself.
+
+    ``deadline_s`` is the admission-to-demux latency budget (None =
+    unbounded); ``attempts`` counts failed launches this query has
+    ridden (the server's retry/quarantine bookkeeping).
     """
 
     key: QueryKey
@@ -97,6 +117,16 @@ class Query:
     t_submit: float = 0.0
     seed: tuple | None = None
     epoch: int = -1
+    deadline_s: float | None = None
+    attempts: int = 0
+
+    @property
+    def deadline_abs(self) -> float:
+        """Absolute wall-clock deadline on the ``t_submit`` clock
+        (+inf when unbounded) — the load-shedder's eviction key."""
+        if self.deadline_s is None:
+            return math.inf
+        return self.t_submit + self.deadline_s
 
     def __post_init__(self):
         if self.key.rooted and self.root is None:
@@ -121,9 +151,61 @@ class Query:
 
 def query(algo: str, variant: str | None = None, *,
           root: int | None = None, seed: tuple | None = None,
-          **params) -> Query:
+          deadline_s: float | None = None, **params) -> Query:
     """Convenience constructor: ``query("bfs", root=7)``."""
-    return Query(make_key(algo, variant, **params), root, seed=seed)
+    return Query(make_key(algo, variant, **params), root, seed=seed,
+                 deadline_s=deadline_s)
+
+
+def validate_query(q: Query, n_orig: int) -> None:
+    """Admission-time input validation; raises ``ValueError`` on inputs
+    that would poison a launch (or silently corrupt a shared batch):
+
+      * a root outside ``[0, n_orig)``;
+      * a non-finite float param (an sssp ``weight_scale=inf`` scales
+        every edge weight non-finite — rejected here, not at round 40);
+      * a non-positive ``deadline_s``;
+      * seed vectors of the wrong length, with NaN/Inf entries (float
+        kinds), or with out-of-range entries (int kinds: labels and
+        core bounds both live in ``[0, n_orig)``).
+
+    The structural checks (root presence, seed arity) already ran in
+    ``Query.__post_init__``; this adds the graph-sized range checks the
+    dataclass cannot know.
+    """
+    if q.root is not None and not 0 <= int(q.root) < n_orig:
+        raise ValueError(
+            f"{q.key.label}: root {q.root} outside [0, {n_orig})")
+    for name, value in q.key.params:
+        if isinstance(value, float) and not math.isfinite(value):
+            raise ValueError(
+                f"{q.key.label}: param {name}={value!r} is not finite")
+    if q.deadline_s is not None and not (
+            math.isfinite(q.deadline_s) and q.deadline_s > 0):
+        raise ValueError(
+            f"{q.key.label}: deadline_s={q.deadline_s!r} must be a "
+            "positive finite number of seconds")
+    if q.seed is None:
+        return
+    for arr, kind, name in zip(q.seed, q.key.spec.input_kinds,
+                               q.key.spec.inputs):
+        a = np.asarray(arr)
+        if a.shape != (n_orig,):
+            raise ValueError(
+                f"{q.key.label}: seed {name!r} has shape {a.shape}; "
+                f"expected ({n_orig},)")
+        if kind == "vertex_f32":
+            if not np.isfinite(a).all():
+                raise ValueError(
+                    f"{q.key.label}: seed {name!r} has non-finite "
+                    "entries")
+        elif not ((a >= 0) & (a < n_orig)).all():
+            raise ValueError(
+                f"{q.key.label}: seed {name!r} has entries outside "
+                f"[0, {n_orig})")
+
+
+STATUSES = ("ok", "timed_out", "shed", "failed")
 
 
 @dataclass
@@ -136,6 +218,12 @@ class QueryResult:
     ``gather_vertex_field`` yields.  Refresh queries coalesced into one
     launch SHARE the fields dict; treat it as read-only.  ``epoch`` is
     the snapshot epoch the answering launch read.
+
+    ``status`` is the typed disposition: ``"ok"`` carries the answer;
+    ``"timed_out"`` missed its ``deadline_s`` budget (fields withheld,
+    ``rounds == -1``); ``"shed"`` was evicted by the bounded admission
+    queue; ``"failed"`` exhausted its launch retries and was
+    quarantined.  ``error`` holds the final exception for ``"failed"``.
     """
 
     qid: int
@@ -146,6 +234,16 @@ class QueryResult:
     latency_s: float
     bucket: int                         # launch batch width; 0 = refresh
     epoch: int = 0
+    status: str = "ok"
+    error: Exception | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
     def __getitem__(self, name: str):
+        if self.status != "ok":
+            raise KeyError(
+                f"qid={self.qid} ({self.key.label}) resolved "
+                f"{self.status!r}; no fields")
         return self.fields[name]

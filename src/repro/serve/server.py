@@ -36,6 +36,36 @@ Seeded queries (``pagerank/warm``, ``cc/incremental``,
 server's seed store — previously served outputs, adopted warm only
 when the mutation history since their epoch keeps them exact
 (``registry.IncrementalSpec.mutations``), cold otherwise.
+
+**Overload & failure resilience.**  Every terminal disposition is a
+typed :class:`QueryResult` (``status`` in ``ok`` / ``timed_out`` /
+``shed`` / ``failed``) — the server never silently drops an admitted
+query and never lets one bad query take the pipeline down:
+
+  * **validation** — :func:`~repro.serve.query.validate_query` runs at
+    admission (``validate=False`` opts out): out-of-range roots,
+    non-finite float params and corrupt seed vectors are rejected
+    BEFORE they can ride — or poison — a coalesced launch.
+  * **deadlines** — a query may carry ``deadline_s`` (or inherit
+    ``default_deadline_s``), an admission-to-demux budget.  Budgets
+    never block a batch: a query already over budget when its batch
+    forms is answered ``timed_out`` without launching, and one whose
+    launch lands late has its answer withheld at demux.  Latency cells
+    in the metrics record only ``ok`` answers; misses ride the
+    ``timed_out`` counter.
+  * **load shedding** — ``max_queued`` bounds the admission queue; an
+    overflowing admission sheds the pending query with the soonest
+    absolute deadline (oldest-deadline-first — see
+    :class:`~repro.serve.coalescer.Coalescer`), resolved as ``shed``.
+  * **retry & quarantine** — a launch that raises (at dispatch or
+    surfacing from JAX's async runtime at the blocking call) is
+    bisected: multi-query batches resubmit their members singly, so
+    healthy queries complete and the poison one keeps failing alone;
+    a singleton retries with exponential backoff (``retry_backoff_s *
+    2**attempt``) up to ``max_retries``, then lands in
+    ``server.quarantined`` with a ``failed`` result carrying the
+    exception.  The executor itself never wedges — a failed launch
+    cannot orphan its in-flight peers (``serve.executor``).
 """
 
 from __future__ import annotations
@@ -53,17 +83,33 @@ from repro.serve.coalescer import Batch, BucketLadder, Coalescer
 from repro.serve.dynamic import DynamicGraph, MutationBatch, MutationStats
 from repro.serve.executor import DoubleBufferedExecutor, Launch
 from repro.serve.metrics import ServeMetrics
-from repro.serve.query import Query, QueryKey, QueryResult, make_key
+from repro.serve.query import Query, QueryKey, QueryResult, make_key, \
+    validate_query
 
 
 class GraphServer:
-    def __init__(self, engine: GraphEngine, *, buckets=None, depth: int = 2):
+    def __init__(self, engine: GraphEngine, *, buckets=None, depth: int = 2,
+                 max_queued: int | None = None,
+                 default_deadline_s: float | None = None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.02,
+                 validate: bool = True):
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.engine = engine
         self.garr = engine.device_graph()      # resident device graph
         self.ladder = BucketLadder(buckets) if buckets else BucketLadder()
-        self.coalescer = Coalescer(self.ladder)
+        self.coalescer = Coalescer(self.ladder, max_queued=max_queued)
         self.executor = DoubleBufferedExecutor(depth)
         self.metrics = ServeMetrics()
+        self.default_deadline_s = default_deadline_s
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.validate = bool(validate)
+        # quarantined poison queries (their `failed` results), and
+        # out-of-band resolutions (shed at admission) the next pump()
+        # hands back to whoever drives the loop
+        self.quarantined: list[QueryResult] = []
+        self._oob: list[QueryResult] = []
         # mailbox of demuxed-but-uncollected answers: serve()/
         # serve_trace() POP what they return, so a long-running server
         # holds only results nobody has picked up yet (callers driving
@@ -84,10 +130,12 @@ class GraphServer:
 
     # -- admission -----------------------------------------------------------
     def submit(self, algo: str, variant: str | None = None, *,
-               root: int | None = None, **params) -> int:
+               root: int | None = None,
+               deadline_s: float | None = None, **params) -> int:
         """Admit one query; returns its qid (resolved in ``results``)."""
         return self.submit_query(
-            Query(make_key(algo, variant, **params), root))
+            Query(make_key(algo, variant, **params), root,
+                  deadline_s=deadline_s))
 
     def submit_query(self, q: Query, t_submit: float | None = None) -> int:
         if q.qid != -1:
@@ -96,15 +144,42 @@ class GraphServer:
             raise ValueError(
                 f"query already admitted as qid={q.qid}; build a fresh "
                 "Query to resubmit")
+        if self.validate:
+            try:
+                validate_query(q, self.engine.g.n_orig)
+            except ValueError:
+                self.metrics.count("rejected")
+                raise
         q.qid, self._next_qid = self._next_qid, self._next_qid + 1
         q.t_submit = time.perf_counter() if t_submit is None else t_submit
         q.epoch = self.epoch
+        if q.deadline_s is None:
+            q.deadline_s = self.default_deadline_s
         # the metrics window opens at FIRST ADMISSION (idempotent), so
         # the first launch's queue + dispatch wait counts against qps —
         # record()'s own start() is only a fallback for standalone use
         self.metrics.start()
-        self.coalescer.admit(q)
+        shed = self.coalescer.admit(q)
+        if shed is not None:
+            self._oob.append(self._resolve(shed, "shed"))
         return q.qid
+
+    def _resolve(self, q: Query, status: str,
+                 error: Exception | None = None,
+                 t_done: float | None = None) -> QueryResult:
+        """Terminal non-``ok`` disposition: typed result into the
+        mailbox plus the matching resilience counter."""
+        t_done = time.perf_counter() if t_done is None else t_done
+        res = QueryResult(
+            qid=q.qid, key=q.key, root=q.root, fields={}, rounds=-1,
+            latency_s=t_done - q.t_submit, bucket=0, epoch=q.epoch,
+            status=status, error=error)
+        self.metrics.count(
+            "quarantined" if status == "failed" else status)
+        if status == "failed":
+            self.quarantined.append(res)
+        self.results[q.qid] = res
+        return res
 
     # -- warmup --------------------------------------------------------------
     def warmup(self, keys) -> int:
@@ -156,8 +231,7 @@ class GraphServer:
             batch = self.coalescer.next_batch()
             if batch is None:
                 break
-            for launch in self.executor.push(batch, self._dispatch(batch)):
-                self._demux(launch)
+            self._launch(batch)           # results wait in the mailbox
         dyn = self.dynamic_graph()
         stats = dyn.apply(inserts, deletes)
         self.garr = dyn.garr
@@ -215,23 +289,91 @@ class GraphServer:
     def pump(self) -> list[QueryResult]:
         """Advance one step: form + dispatch one batch if any query is
         pending (retiring the oldest launch when the pipeline is full),
-        else retire one in-flight launch.  Returns completed results."""
-        batch = self.coalescer.next_batch()
-        if batch is not None:
-            out = self._dispatch(batch)
-            retired = self.executor.push(batch, out)
+        else retire one in-flight launch.  Returns completed results —
+        including typed shed / timed-out / failed dispositions."""
+        done = self._oob
+        self._oob = []
+        while True:
+            batch = self.coalescer.next_batch()
+            if batch is None:
+                launch = self.executor.complete_one()
+                if launch is not None:
+                    done.extend(self._demux(launch))
+                return done
+            batch, expired = self._check_deadlines(batch)
+            done.extend(expired)
+            if batch is not None:
+                done.extend(self._launch(batch))
+                return done
+            # every member had expired in the queue: try the next batch
+
+    def _check_deadlines(self, batch: Batch):
+        """Expire batch members already over budget BEFORE the launch
+        (a deadline never blocks the batch — the live members re-pack
+        and go).  Returns ``(batch | None, timed-out results)``."""
+        now = time.perf_counter()
+        live = [q for q in batch.queries if now <= q.deadline_abs]
+        expired = [self._resolve(q, "timed_out", t_done=now)
+                   for q in batch.queries if now > q.deadline_abs]
+        if not expired:
+            return batch, []
+        if not live:
+            return None, expired
+        if batch.bucket:
+            bucket = self.ladder.pick(len(live))
+            roots = [q.root for q in live]
+            roots += [roots[-1]] * (bucket - len(roots))
+            batch = Batch(batch.key, live, bucket, roots, batch.epoch)
         else:
-            launch = self.executor.complete_one()
-            retired = [launch] if launch else []
+            batch = Batch(batch.key, live, batch.bucket, [], batch.epoch)
+        return batch, expired
+
+    def _singleton(self, q: Query, epoch: int) -> Batch:
+        """A one-query batch for the retry / bisection path."""
+        if q.key.rooted:
+            b = self.ladder.pick(1)
+            return Batch(q.key, [q], b, [q.root] * b, epoch)
+        return Batch(q.key, [q], 0, [], epoch)
+
+    def _launch(self, batch: Batch) -> list[QueryResult]:
+        """Dispatch one batch; a raising dispatch routes to retry /
+        quarantine instead of propagating.  Returns whatever completed
+        as a side effect (retired peers, failure dispositions)."""
+        try:
+            out = self._dispatch(batch)
+        except Exception as e:
+            return self._on_launch_failure(batch, e)
         done = []
-        for launch in retired:
+        for launch in self.executor.push(batch, out):
             done.extend(self._demux(launch))
         return done
+
+    def _on_launch_failure(self, batch: Batch,
+                           exc: Exception) -> list[QueryResult]:
+        if not batch.queries:
+            raise exc                      # warmup launch: surface it
+        if len(batch.queries) > 1:
+            # poison-query quarantine, step 1: bisect by resubmitting
+            # the members singly — healthy queries complete, the poison
+            # one keeps failing alone and exhausts its retries below
+            done = []
+            for q in batch.queries:
+                done.extend(self._launch(self._singleton(q, batch.epoch)))
+            return done
+        q = batch.queries[0]
+        q.attempts += 1
+        if q.attempts > self.max_retries:
+            return [self._resolve(q, "failed", error=exc)]
+        self.metrics.count("retries")
+        if self.retry_backoff_s:
+            time.sleep(self.retry_backoff_s * (2 ** (q.attempts - 1)))
+        return self._launch(self._singleton(q, batch.epoch))
 
     def drain(self) -> list[QueryResult]:
         """Run the pipeline dry: every pending query dispatched, every
         in-flight launch demuxed."""
-        done = []
+        done = self._oob
+        self._oob = []
         while self.coalescer.has_pending() or len(self.executor):
             done.extend(self.pump())
         self.metrics.stop()
@@ -260,7 +402,7 @@ class GraphServer:
         t0 = time.perf_counter()
         done, i = [], 0
         while i < len(trace) or self.coalescer.has_pending() \
-                or len(self.executor):
+                or len(self.executor) or self._oob:
             now = time.perf_counter() - t0
             while i < len(trace) and trace[i][0] <= now:
                 item = trace[i][1]
@@ -269,7 +411,8 @@ class GraphServer:
                 else:
                     self.submit_query(item, t_submit=t0 + trace[i][0])
                 i += 1
-            if self.coalescer.has_pending() or len(self.executor):
+            if self.coalescer.has_pending() or len(self.executor) \
+                    or self._oob:
                 for res in self.pump():
                     self.results.pop(res.qid, None)   # collected here
                     done.append(res)
@@ -301,6 +444,10 @@ class GraphServer:
 
     def _demux(self, launch: Launch) -> list[QueryResult]:
         batch = launch.payload
+        if launch.error is not None:
+            # the async runtime surfaced a failure at the blocking
+            # call: same routing as a dispatch-time raise
+            return self._on_launch_failure(batch, launch.error)
         if not batch.queries:              # warmup launch: nothing to slice
             return []
         prog = self._program(batch.key, batch.bucket)
@@ -330,6 +477,12 @@ class GraphServer:
             self._harvest_seeds(batch.key, shared, batch.epoch)
         results = []
         for q, (fields, r) in zip(batch.queries, per_query):
+            if launch.t_done > q.deadline_abs:
+                # the answer exists but missed its budget: withhold it
+                # (a client gone by now must not see a stale success)
+                results.append(
+                    self._resolve(q, "timed_out", t_done=launch.t_done))
+                continue
             res = QueryResult(
                 qid=q.qid, key=q.key, root=q.root, fields=fields, rounds=r,
                 latency_s=launch.t_done - q.t_submit, bucket=batch.bucket,

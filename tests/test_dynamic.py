@@ -207,6 +207,75 @@ def test_mutation_validation(slack_server):
                                         [0, 0], [0, 0], [0, 0], [0, 0]]))
 
 
+def test_apply_rolls_back_on_midbatch_failure(slack_server, monkeypatch):
+    """Failure atomicity: a planner that raises mid-batch must leave
+    the host free-slot index, the ELL/COO mirrors, the occupancy
+    counters and the resident device graph at the pre-batch epoch —
+    and the SAME batch must then apply cleanly and exactly."""
+    n, edges, eng, server = slack_server
+    server.serve([query("cc")])
+    dyn = server.dynamic_graph()
+    rng = np.random.default_rng(3)
+    ins = dyn.sample_insertable(6, rng)
+
+    g = eng.g
+    ell_keys = [f"{nm}_idx" for nm in ("ell_in", "ell_out",
+                                       "ell_dst", "ell_src")]
+    coo_keys = ("out_src_local", "out_dst_global", "in_src_global",
+                "in_dst_local", "out_degree", "in_degree")
+    ell0 = {k: g.ell_arrays[k].copy() for k in ell_keys}
+    coo0 = {k: getattr(g, k).copy() for k in coo_keys}
+    occ0 = {nm: occ.copy() for nm, occ in dyn._occ.items()}
+    free0 = ([list(s) for s in dyn._free_out],
+             [list(s) for s in dyn._free_in])
+    def _pos_index(dicts):              # empty lists == absent keys
+        return [{k: list(v) for k, v in d.items() if v} for d in dicts]
+
+    pos0 = (_pos_index(dyn._pos_out), _pos_index(dyn._pos_in))
+    garr0 = dict(dyn.garr)
+    edges0 = _edge_counter(dyn.current_edges())
+    epoch0 = dyn.epoch
+
+    orig_fill = dyn._ell_fill
+    calls = {"n": 0}
+
+    def failing(name, p, row, value, touched):
+        calls["n"] += 1                 # 4 fills per insert: call 10 is
+        if calls["n"] == 10:            # mid-batch, 2 edges committed
+            raise RuntimeError("simulated planner crash")
+        return orig_fill(name, p, row, value, touched)
+
+    monkeypatch.setattr(dyn, "_ell_fill", failing)
+    with pytest.raises(RuntimeError, match="planner crash"):
+        dyn.apply(inserts=ins)
+
+    assert dyn.epoch == epoch0
+    for k in ell_keys:
+        np.testing.assert_array_equal(g.ell_arrays[k], ell0[k], err_msg=k)
+    for k in coo_keys:
+        np.testing.assert_array_equal(getattr(g, k), coo0[k], err_msg=k)
+    for nm in occ0:
+        np.testing.assert_array_equal(dyn._occ[nm], occ0[nm], err_msg=nm)
+    assert [list(s) for s in dyn._free_out] == free0[0]
+    assert [list(s) for s in dyn._free_in] == free0[1]
+    assert _pos_index(dyn._pos_out) == pos0[0]
+    assert _pos_index(dyn._pos_in) == pos0[1]
+    assert dyn.garr.keys() == garr0.keys()
+    assert all(dyn.garr[k] is garr0[k] for k in garr0), \
+        "device graph must return to the pre-batch buffers"
+    assert _edge_counter(dyn.current_edges()) == edges0
+
+    # the same batch now applies cleanly (wrapper stays installed but
+    # only call #10 raises) and the result is exact
+    stats = server.mutate(inserts=ins)
+    assert not stats.rebuild and dyn.epoch == epoch0 + 1
+    want = _edge_counter(_apply_host(edges, inserts=ins))
+    assert _edge_counter(dyn.current_edges()) == want
+    res = server.serve([query("cc")])[0]
+    np.testing.assert_array_equal(
+        res["labels"], oracle.cc_labels(_apply_host(edges, inserts=ins), n))
+
+
 # -- warm seeds ----------------------------------------------------------
 
 

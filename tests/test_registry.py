@@ -309,3 +309,7 @@ def test_docs_table_matches_registry():
         "docs/API.md incremental-programs table is stale — regenerate "
         "with:\n  PYTHONPATH=src python -c 'from repro.core import "
         "registry; print(registry.incremental_markdown_table())'")
+    assert registry.guards_markdown_table() in content, (
+        "docs/API.md fault-guard table is stale — regenerate with:\n"
+        "  PYTHONPATH=src python -c 'from repro.core import registry; "
+        "print(registry.guards_markdown_table())'")

@@ -5,6 +5,8 @@ conformance gate — served answers must be bit-identical to direct
 (every registered program: source queries and refresh queries alike).
 """
 
+import time
+
 import numpy as np
 import pytest
 
@@ -24,6 +26,7 @@ from repro.serve import (
     parse_mix,
     query,
     synthetic_trace,
+    validate_query,
     zipf_root_sampler,
 )
 
@@ -415,3 +418,269 @@ np.testing.assert_array_equal(res[3]["rank"], eng.gather_vertex_field(r))
 print("SERVE-PARITY OK")
 """, devices=2)
     assert "SERVE-PARITY OK" in out
+
+
+# -- resilience: validation, deadlines, shedding, retry/quarantine -------
+
+
+def test_validate_query_rejects_bad_inputs(served):
+    """Admission-time validation: out-of-range roots, non-finite float
+    params, malformed seed vectors and non-positive deadlines are all
+    rejected before they can reach a compiled program."""
+    n, eng, _, _ = served
+    validate_query(query("bfs", root=5), n)              # clean passes
+    with pytest.raises(ValueError, match="root"):
+        validate_query(query("bfs", root=n), n)
+    with pytest.raises(ValueError, match="root"):
+        validate_query(query("bfs", root=-1), n)
+    with pytest.raises(ValueError, match="finite"):
+        validate_query(
+            query("sssp", root=1, weight_scale=float("inf")), n)
+    bad_rank = np.full(n, 1.0 / n, np.float32)
+    bad_rank[7] = np.nan
+    with pytest.raises(ValueError, match="finite"):
+        validate_query(query("pagerank", "warm", seed=(bad_rank,)), n)
+    bad_labels = np.arange(n, dtype=np.int32)
+    bad_labels[3] = n                                    # out of range
+    with pytest.raises(ValueError, match="outside"):
+        validate_query(query("cc", "incremental", seed=(bad_labels,)), n)
+    with pytest.raises(ValueError, match="shape"):
+        validate_query(
+            query("cc", "incremental",
+                  seed=(np.zeros(n - 1, np.int32),)), n)
+    with pytest.raises(ValueError, match="deadline"):
+        validate_query(query("bfs", root=1, deadline_s=0.0), n)
+
+
+def test_server_rejects_invalid_at_admission(served):
+    """submit() raises on an invalid query, counts it, and leaves the
+    admission queue untouched (no poison enters the pipeline)."""
+    n, eng, _, _ = served
+    server = GraphServer(eng, buckets=(4,))
+    with pytest.raises(ValueError, match="root"):
+        server.submit("bfs", root=n + 7)
+    assert server.metrics.counts["rejected"] == 1
+    assert not server.coalescer.has_pending()
+    assert server.pump() == []
+
+
+def test_deadline_expired_in_queue_times_out(served):
+    """A query whose deadline lapses while queued gets a typed
+    ``timed_out`` result and is dropped from the batch pre-launch; its
+    live batchmates are still answered, bit-identical to direct."""
+    _, eng, garr, _ = served
+    server = GraphServer(eng, buckets=(4,))
+    qid_live = server.submit("bfs", root=5)
+    qid_dead = server.submit("bfs", root=6, deadline_s=1e-6)
+    time.sleep(0.01)                       # lapse the tiny deadline
+    res = {r.qid: r for r in server.drain()}
+    dead = res[qid_dead]
+    assert dead.status == "timed_out" and not dead.ok
+    assert dead.fields == {} and dead.rounds == -1
+    with pytest.raises(KeyError, match="timed_out"):
+        dead["parents"]
+    live = res[qid_live]
+    assert live.ok and live.status == "ok"
+    p, _ = eng.program("bfs", "fast")(garr, jnp.int32(5))
+    np.testing.assert_array_equal(live["parents"],
+                                  eng.gather_vertex_field(p))
+    assert server.metrics.counts["timed_out"] == 1
+
+
+def test_default_deadline_is_inherited(served):
+    """``default_deadline_s`` applies to queries submitted without an
+    explicit deadline."""
+    _, eng, _, _ = served
+    server = GraphServer(eng, buckets=(4,), default_deadline_s=1e-6)
+    qid = server.submit("cc")
+    time.sleep(0.01)
+    res = server.drain()
+    assert [r.status for r in res] == ["timed_out"]
+    assert server.results[qid].status == "timed_out"
+
+
+def test_load_shedding_evicts_oldest_deadline_first(served):
+    """With ``max_queued=2`` the coalescer sheds on overflow, evicting
+    the pending query with the soonest deadline; shed queries resolve
+    as ``shed`` and the survivors are still answered."""
+    _, eng, garr, _ = served
+    server = GraphServer(eng, buckets=(4,), max_queued=2)
+    q1 = server.submit("bfs", root=1, deadline_s=0.5)
+    q2 = server.submit("bfs", root=2, deadline_s=30.0)
+    q3 = server.submit("bfs", root=3)              # sheds q1 (soonest)
+    q4 = server.submit("bfs", root=4, deadline_s=5.0)   # sheds q4 itself
+    assert server.results[q1].status == "shed"
+    assert server.results[q4].status == "shed"
+    res = {r.qid: r for r in server.drain()}
+    assert sorted(res) == sorted([q1, q2, q3, q4])  # shed results surface
+    assert res[q1].status == "shed" and res[q4].status == "shed"
+    assert res[q2].ok and res[q3].ok
+    p, _ = eng.program("bfs", "fast")(garr, jnp.int32(2))
+    np.testing.assert_array_equal(res[q2]["parents"],
+                                  eng.gather_vertex_field(p))
+    assert server.metrics.counts["shed"] == 2
+
+
+def test_transient_launch_failure_is_retried(served, monkeypatch):
+    """A dispatch that fails once then succeeds yields an ok answer
+    after one backoff retry — the failure is invisible to the caller
+    beyond the retry counter."""
+    _, eng, garr, _ = served
+    server = GraphServer(eng, buckets=(4,), retry_backoff_s=0.0)
+    orig = server._dispatch
+    calls = {"n": 0}
+
+    def flaky(batch):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient launch failure")
+        return orig(batch)
+
+    monkeypatch.setattr(server, "_dispatch", flaky)
+    res = server.serve([query("bfs", root=7)])
+    assert [r.status for r in res] == ["ok"]
+    assert server.metrics.counts["retries"] == 1
+    p, _ = eng.program("bfs", "fast")(garr, jnp.int32(7))
+    np.testing.assert_array_equal(res[0]["parents"],
+                                  eng.gather_vertex_field(p))
+
+
+def test_poison_query_is_bisected_and_quarantined(served, monkeypatch):
+    """A poison query that makes every containing launch raise is
+    isolated by bisection: its batchmates are answered bit-identical,
+    the poison member exhausts its retries, lands in
+    ``server.quarantined`` with the causal error, and the server stays
+    fully usable afterwards."""
+    _, eng, garr, _ = served
+    server = GraphServer(eng, buckets=(4,), max_retries=1,
+                         retry_backoff_s=0.0)
+    orig = server._dispatch
+
+    def poisoned(batch):
+        if any(q.root == 13 for q in batch.queries):
+            raise RuntimeError("poison root")
+        return orig(batch)
+
+    monkeypatch.setattr(server, "_dispatch", poisoned)
+    res = server.serve([query("bfs", root=5), query("bfs", root=13),
+                        query("bfs", root=9)])
+    assert [r.status for r in res] == ["ok", "failed", "ok"]
+    bad = res[1]
+    assert isinstance(bad.error, RuntimeError) and not bad.ok
+    assert [r.qid for r in server.quarantined] == [bad.qid]
+    assert server.metrics.counts["quarantined"] == 1
+    assert server.metrics.counts["retries"] == 1    # singleton retried once
+    prog = eng.program("bfs", "fast")
+    for r, root in ((res[0], 5), (res[2], 9)):
+        p, _ = prog(garr, jnp.int32(root))
+        np.testing.assert_array_equal(r["parents"],
+                                      eng.gather_vertex_field(p))
+    after = server.serve([query("bfs", root=2)])    # still healthy
+    assert after[0].ok
+
+
+def test_executor_failed_block_is_contained(monkeypatch):
+    """Satellite 3 (unit): a launch whose block raises is returned with
+    ``error`` set; its in-flight peer is untouched, drain returns every
+    remaining launch, and the executor stays usable."""
+    import repro.serve.executor as executor_mod
+    ex = DoubleBufferedExecutor(depth=2)
+    orig = executor_mod.jax.block_until_ready
+
+    def boom(out):
+        if isinstance(out, str):
+            raise RuntimeError("device error")
+        return orig(out)
+
+    monkeypatch.setattr(executor_mod.jax, "block_until_ready", boom)
+    ex.push("a", "BOOM")
+    ex.push("b", jnp.zeros(2))
+    done = ex.drain()                               # never raises
+    assert [l.payload for l in done] == ["a", "b"]
+    assert isinstance(done[0].error, RuntimeError)
+    assert done[1].error is None
+    assert len(ex) == 0
+    assert [l.payload for l in ex.drain()] == []    # not wedged
+    ex.push("c", jnp.zeros(2))
+    done = ex.drain()
+    assert [l.payload for l in done] == ["c"] and done[0].error is None
+
+
+def test_async_launch_failure_does_not_orphan_peers(served, monkeypatch):
+    """Satellite 3 (server): a failure surfacing at block time (async
+    dispatch) with depth=2 in flight routes through the retry path
+    without orphaning the concurrent launch — both queries end ok."""
+    import repro.serve.executor as executor_mod
+    _, eng, garr, _ = served
+    server = GraphServer(eng, buckets=(4,), depth=2, retry_backoff_s=0.0)
+    poison_ids = set()
+    armed = {"on": True}
+    orig_dispatch = server._dispatch
+
+    def marked(batch):
+        out = orig_dispatch(batch)
+        if armed["on"] and any(q.root == 13 for q in batch.queries):
+            armed["on"] = False                     # fail only the first
+            poison_ids.add(id(out))
+        return out
+
+    orig_block = executor_mod.jax.block_until_ready
+
+    def boom(out):
+        if id(out) in poison_ids:
+            poison_ids.discard(id(out))
+            raise RuntimeError("async failure surfaced at block")
+        return orig_block(out)
+
+    monkeypatch.setattr(server, "_dispatch", marked)
+    monkeypatch.setattr(executor_mod.jax, "block_until_ready", boom)
+    res = server.serve([query("bfs", root=13), query("sssp", root=7)])
+    assert [r.status for r in res] == ["ok", "ok"]
+    assert server.metrics.counts["retries"] == 1
+    assert len(server.executor) == 0
+    p, _ = eng.program("bfs", "fast")(garr, jnp.int32(13))
+    np.testing.assert_array_equal(res[0]["parents"],
+                                  eng.gather_vertex_field(p))
+    d, _ = eng.program("sssp")(garr, jnp.int32(7))
+    np.testing.assert_array_equal(res[1]["dist"],
+                                  eng.gather_vertex_field(d))
+
+
+def test_overload_sheds_but_never_corrupts(served, monkeypatch):
+    """Overload acceptance: a trace far beyond capacity through a
+    bounded queue sheds/times out part of the load, but every answer
+    that does come back ok is bit-identical to a direct program()
+    call, and recorded latency (ok answers only) respects the
+    deadline."""
+    n, eng, garr, _ = served
+    server = GraphServer(eng, buckets=(1, 4), max_queued=8,
+                         default_deadline_s=2.0)
+    server.serve([query("bfs", root=0)])            # warm the compile
+    orig = server._dispatch
+
+    def slow(batch):                # pin capacity below the trace rate
+        time.sleep(0.005)
+        return orig(batch)
+
+    monkeypatch.setattr(server, "_dispatch", slow)
+    trace = synthetic_trace(n, "bfs", rate=2000, duration=0.2, seed=4)
+    res = server.serve_trace(trace)
+    assert len(res) == len(trace)
+    statuses = {r.status for r in res}
+    assert "ok" in statuses
+    shed = server.metrics.counts["shed"]
+    timed_out = server.metrics.counts["timed_out"]
+    assert shed + timed_out > 0                     # overload was real
+    prog = eng.program("bfs", "fast")
+    by_qid = {q.qid: q for _, q in trace}
+    checked = 0
+    for r in res:
+        if not r.ok or checked >= 8:
+            continue
+        p, _ = prog(garr, jnp.int32(by_qid[r.qid].root))
+        np.testing.assert_array_equal(r["parents"],
+                                      eng.gather_vertex_field(p))
+        checked += 1
+    assert checked > 0
+    for row in server.metrics.rows():
+        assert row["p99_ms"] <= 2.0 * 1e3
