@@ -20,6 +20,14 @@ counts, and the subprocess asserts in-line that p99 of admitted
 answers holds the deadline and that ok answers under overload stay
 bit-identical to direct ``program()`` calls.
 
+A ``bucket="recovery"`` row times restart recovery: a durable server
+(WAL + snapshots, ``repro.serve.persist``) runs a short mutation trace,
+is abandoned, and ``GraphServer.recover()`` rebuilds it from the
+directory — the row records ``ttfok_ms`` (recover start to first ok
+answer), epochs replayed from the WAL, and the snapshot epoch resumed
+from, with in-line asserts that the recovered server lands on the exact
+killed epoch and serves bit-identical bfs parents.
+
 Like ``benchmarks/graph_scaling.py``, the measurement runs in ONE
 subprocess so ``XLA_FLAGS=--xla_force_host_platform_device_count`` can
 force the partition count before jax imports; the harness process never
@@ -130,6 +138,46 @@ orow = dict(orow, bucket="overload",
             timed_out=server.metrics.counts["timed_out"],
             deadline_s=deadline)
 print("RESULT " + json.dumps(orow))
+
+# -- recovery cell: a durable server runs a short mutation trace, is
+# abandoned mid-flight (the live object stands in for a killed
+# process - the on-disk WAL/snapshot state is identical either way),
+# and GraphServer.recover() restarts from the directory.  ttfok =
+# recover() start to the first ok answer off the recovered server,
+# asserted in-line to land on the exact killed epoch with the bfs
+# parents bit-identical to the pre-kill server's.
+import tempfile, time
+from repro.serve import Persistence
+
+pdir = tempfile.mkdtemp(prefix="bench-recovery-")
+dserver = GraphServer(eng, buckets=(8,), persistence=Persistence(
+    dir=pdir, snapshot_every=4, fsync=False))
+dserver.warmup([make_key("bfs")])
+rng = np.random.default_rng(7)
+for _ in range(3):
+    dserver.mutate(deletes=dserver.dynamic_graph()
+                   .sample_deletable(16, rng))
+    dserver.mutate(inserts=dserver.dynamic_graph()
+                   .sample_insertable(16, rng))
+    live = dserver.serve([Query(make_key("bfs"), 3)])
+killed_epoch = dserver.epoch
+t0 = time.perf_counter()
+rec = GraphServer.recover(pdir, buckets=(8,))
+res = rec.serve([Query(make_key("bfs"), 3)])
+ttfok = time.perf_counter() - t0
+assert rec.epoch == killed_epoch and res[0].ok, \
+    (rec.epoch, killed_epoch, res[0].status)
+assert (np.asarray(res[0]["parents"])
+        == np.asarray(live[0]["parents"])).all(), \
+    "recovered answer differs from the pre-kill server's"
+rep = rec.recovery_report
+ms = round(ttfok * 1e3, 1)
+print("RESULT " + json.dumps({{
+    "algo": "bfs_fast", "bucket": "recovery", "count": 1,
+    "qps": round(1.0 / ttfok, 3),
+    "p50_ms": ms, "p95_ms": ms, "p99_ms": ms, "ttfok_ms": ms,
+    "epochs_replayed": rep.replayed, "wal_records": rep.wal_records,
+    "snapshot_epoch": rep.snapshot_epoch}}))
 """
 
 
@@ -198,9 +246,15 @@ def main(argv=None) -> int:
                                overload_duration=0.5 if args.fast else 1.0)
     for r in rows:
         b = str(r["bucket"]) if r["bucket"] else "shared"
-        extra = (f" shed={r['shed']} timed_out={r['timed_out']} "
-                 f"offered={r['offered_qps']:.0f}q/s"
-                 if r["bucket"] == "overload" else "")
+        if r["bucket"] == "overload":
+            extra = (f" shed={r['shed']} timed_out={r['timed_out']} "
+                     f"offered={r['offered_qps']:.0f}q/s")
+        elif r["bucket"] == "recovery":
+            extra = (f" ttfok={r['ttfok_ms']:.0f}ms "
+                     f"replayed={r['epochs_replayed']} "
+                     f"snapshot_epoch={r['snapshot_epoch']}")
+        else:
+            extra = ""
         print(f"[bench_serve] {r['algo']:16s} bucket={b:>8s} "
               f"qps={r['qps']:8.1f} p50={r['p50_ms']:7.1f}ms "
               f"p99={r['p99_ms']:7.1f}ms" + extra)

@@ -139,6 +139,12 @@ def _fmt_serve(key) -> str:
     return f"{algo:22s} {'shared' if bucket == 0 else bucket:>10} {'':5s}"
 
 
+def _sort_key(key) -> tuple:
+    """Serve keys mix int buckets with str rungs ("overload",
+    "recovery") — stringify so sorted() never compares across types."""
+    return tuple(str(part) for part in key)
+
+
 def compare(old: dict, new: dict, threshold: float, min_ms: float = 0.0, *,
             serve: bool = False) -> tuple[list, list]:
     """(table_lines, regression_keys) for the joined row sets.
@@ -152,7 +158,7 @@ def compare(old: dict, new: dict, threshold: float, min_ms: float = 0.0, *,
             else f"{'algo/variant':22s} {'graph':10s} {'parts':>5s}")
     lines = [f"{head} {'old':>9s} {'new':>9s} {'ratio':>6s}  ({metric})"]
     regressions = []
-    for key in sorted(set(old) & set(new)):
+    for key in sorted(set(old) & set(new), key=_sort_key):
         o, n = old[key][metric], new[key][metric]
         ratio = (o / max(n, 1e-9)) if serve else (n / max(o, 1e-9))
         floor_vals = ((old[key].get("p50_ms", 0.0),
@@ -178,10 +184,10 @@ def compare(old: dict, new: dict, threshold: float, min_ms: float = 0.0, *,
                     f"{fmt(key)} {ov:9.1f} {nv:9.1f} "
                     f"{nv / max(ov, 1e-9):6.2f}  <-- REGRESSION "
                     f"({label}: deterministic, no jitter floor)")
-    for key in sorted(set(new) - set(old)):
+    for key in sorted(set(new) - set(old), key=_sort_key):
         lines.append(f"{fmt(key)} {'-':>9s} {new[key][metric]:9.1f}   "
                      "new row")
-    for key in sorted(set(old) - set(new)):
+    for key in sorted(set(old) - set(new), key=_sort_key):
         lines.append(f"{fmt(key)} {old[key][metric]:9.1f} {'-':>9s}   "
                      "row dropped")
     return lines, regressions

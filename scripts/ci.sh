@@ -36,6 +36,14 @@
 # guard, recover from the last checkpoint, and match the NumPy oracle
 # exactly.  It runs as its own lane in BOTH modes (multi-device
 # subprocesses — isolating it keeps the tier-1 signal fast and clean).
+#
+# The `durability` marker is the crash-recovery acceptance drill
+# (tests/test_persist.py): for each named crash point in the
+# WAL/snapshot protocol, a subprocess server is killed at that exact
+# instruction mid-mutation-trace, recovered in a fresh process, and
+# must land on the exact epoch + edge multiset with probe answers
+# bit-identical to an uninterrupted reference run.  Like chaos, it is
+# its own lane in both modes.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -43,16 +51,19 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--markers" ]]; then
     echo "== tier-1: pytest -m 'tier1 or not slow' (fast lane: conformance + kernel parity) =="
-    python -m pytest -x -q -m "(tier1 or not slow) and not chaos"
+    python -m pytest -x -q -m "(tier1 or not slow) and not chaos and not durability"
     echo "== tier-2: pytest -m 'slow and not tier1' (subprocess / multi-device) =="
-    python -m pytest -q -m "slow and not tier1 and not chaos"
+    python -m pytest -q -m "slow and not tier1 and not chaos and not durability"
 else
     echo "== tier-1: pytest =="
-    python -m pytest -x -q -m "not chaos"
+    python -m pytest -x -q -m "not chaos and not durability"
 fi
 
 echo "== chaos lane: pytest -m chaos (seeded fault-injection sweep, parts {2,4}) =="
 python -m pytest -q -m chaos
+
+echo "== durability lane: pytest -m durability (crash-point kill + recovery drills) =="
+python -m pytest -q -m durability
 
 echo "== bench smoke: benchmarks.run --fast =="
 python -m benchmarks.run --fast

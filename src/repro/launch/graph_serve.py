@@ -15,6 +15,11 @@ p50/p95/p99 latency per (program, bucket) cell.
 seconds a K-edge delete/insert batch applies in place and opens a new
 snapshot epoch, so the replay exercises serving under churn.
 
+``--wal-dir DIR`` makes the server durable (write-ahead mutation log +
+crash-consistent snapshots every ``--snapshot-every`` epochs, see
+``repro.serve.persist``); ``--recover --wal-dir DIR`` resumes a killed
+server from that directory instead of regenerating the graph.
+
 (Use XLA_FLAGS=--xla_force_host_platform_device_count=N for --parts N
 on a single host, as with repro.launch.graph_analytics.)
 
@@ -37,25 +42,49 @@ from repro.core import GraphEngine, localops, partition_graph
 from repro.core.compat import runtime_fingerprint
 from repro.graphs import generate_edges
 from repro.launch.mesh import make_graph_mesh
-from repro.serve import GraphServer, mutation_stream, parse_mix, \
-    synthetic_trace
+from repro.serve import GraphServer, Persistence, mutation_stream, \
+    parse_mix, synthetic_trace
 
 
 def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
         duration: float = 10.0, rate: float = 64.0, buckets=(1, 8, 32, 128),
         depth: int = 2, zipf_s: float = 1.05, seed: int = 42,
         layout: str = "ell", json_path: str | None = None,
-        mutate_every: float = 0.0, mutate_size: int = 64):
+        mutate_every: float = 0.0, mutate_size: int = 64,
+        wal_dir: str | None = None, snapshot_every: int = 8,
+        recover: bool = False):
     gcfg = graph_workloads.ALL[graph_name]
-    print(f"[serve] generating {graph_name}: 2^{gcfg.scale} vertices, "
-          f"{gcfg.num_edges:,} edges ({gcfg.generator})")
-    edges = generate_edges(gcfg, seed)
-    t0 = time.time()
-    g = partition_graph(edges, gcfg.num_vertices, parts)
-    print(f"[serve] partitioned over {parts} parts in {time.time()-t0:.1f}s "
-          f"(layout={layout} localops={localops.get_mode()})")
-    eng = GraphEngine(g, make_graph_mesh(parts), layout=layout)
-    server = GraphServer(eng, buckets=buckets, depth=depth)
+    edges = None
+    if recover:
+        if not wal_dir:
+            raise SystemExit("[serve] --recover requires --wal-dir")
+        t0 = time.time()
+        server = GraphServer.recover(wal_dir, buckets=buckets, depth=depth,
+                                     snapshot_every=snapshot_every)
+        eng = server.engine
+        rep = server.recovery_report
+        print(f"[serve] recovered {wal_dir} in {time.time()-t0:.1f}s: "
+              f"epoch {server.epoch} (snapshot {rep.snapshot_epoch} "
+              f"+ {rep.replayed} WAL records replayed, "
+              f"{rep.skipped} skipped, {rep.rebuilds} rebuilds)")
+    else:
+        print(f"[serve] generating {graph_name}: 2^{gcfg.scale} vertices, "
+              f"{gcfg.num_edges:,} edges ({gcfg.generator})")
+        edges = generate_edges(gcfg, seed)
+        t0 = time.time()
+        g = partition_graph(edges, gcfg.num_vertices, parts)
+        print(f"[serve] partitioned over {parts} parts in "
+              f"{time.time()-t0:.1f}s "
+              f"(layout={layout} localops={localops.get_mode()})")
+        eng = GraphEngine(g, make_graph_mesh(parts), layout=layout)
+        persistence = Persistence(dir=wal_dir,
+                                  snapshot_every=snapshot_every) \
+            if wal_dir else None
+        server = GraphServer(eng, buckets=buckets, depth=depth,
+                             persistence=persistence)
+        if persistence:
+            print(f"[serve] durable: wal-dir={wal_dir} "
+                  f"snapshot_every={snapshot_every}")
 
     keys = parse_mix(mix)
     t0 = time.time()
@@ -64,11 +93,13 @@ def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
           f"{time.time()-t0:.1f}s; ladder={server.ladder.sizes} "
           f"depth={depth}")
 
-    trace = synthetic_trace(gcfg.num_vertices, keys, rate=rate,
+    trace = synthetic_trace(eng.g.n_orig, keys, rate=rate,
                             duration=duration, zipf_s=zipf_s, seed=seed)
     n_mut = 0
     if mutate_every > 0:
-        events = mutation_stream(edges, every=mutate_every,
+        src_edges = edges if edges is not None \
+            else server.dynamic_graph().current_edges()
+        events = mutation_stream(src_edges, every=mutate_every,
                                  size=mutate_size, duration=duration,
                                  seed=seed)
         trace = trace + events          # serve_trace sorts by time
@@ -88,6 +119,7 @@ def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
     print(server.metrics.table())
 
     if json_path:
+        snap = server.metrics.snapshot()
         payload = {
             "meta": {"graph": graph_name, "parts": parts, "mix": mix,
                      "rate": rate, "duration": duration,
@@ -98,8 +130,15 @@ def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
                      "mutate_size": mutate_size,
                      "mutations": len(server.mutation_log),
                      "final_epoch": server.epoch,
+                     "wal_dir": wal_dir, "recovered": bool(recover),
                      **runtime_fingerprint()},
-            "rows": server.metrics.rows(),
+            "rows": snap["rows"],
+            # resilience + durability observability (the PR 8 counters
+            # were log-only; overload/recovery drills script off these)
+            "counts": snap["counts"],
+            "epoch": snap["epoch"],
+            "recoveries": snap["recoveries"],
+            "wal_records": snap["wal_records"],
         }
         text = json.dumps(payload, indent=2)
         if json_path == "-":
@@ -142,13 +181,23 @@ def main():
     ap.add_argument("--mutate-size", type=int, default=64,
                     help="edges per mutation batch (alternating "
                          "delete/insert; see serve.dynamic.mutation_stream)")
+    ap.add_argument("--wal-dir", default=None,
+                    help="durability directory (WAL + snapshots); makes "
+                         "the server crash-recoverable")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="epochs between crash-consistent snapshots")
+    ap.add_argument("--recover", action="store_true",
+                    help="resume from --wal-dir instead of generating "
+                         "and partitioning a fresh graph")
     args = ap.parse_args()
     run(args.graph, args.parts, mix=args.mix, duration=args.duration,
         rate=args.rate,
         buckets=tuple(int(b) for b in args.buckets.split(",")),
         depth=args.depth, zipf_s=args.zipf, seed=args.seed,
         layout=args.layout, json_path=args.json,
-        mutate_every=args.mutate_every, mutate_size=args.mutate_size)
+        mutate_every=args.mutate_every, mutate_size=args.mutate_size,
+        wal_dir=args.wal_dir, snapshot_every=args.snapshot_every,
+        recover=args.recover)
 
 
 if __name__ == "__main__":

@@ -15,6 +15,12 @@ versioning, and the seeded incremental programs (``pagerank/warm``,
 ``cc/incremental``, ``kcore/incremental``) recompute from the previous
 epoch's served outputs.
 
+Serving state is DURABLE on request: ``GraphServer(...,
+persistence=Persistence(dir))`` write-ahead-logs every mutation batch
+and snapshots the whole serving state (``repro.serve.persist``), and
+``GraphServer.recover(dir)`` resumes a killed server at the exact
+epoch with bit-identical answers.
+
 CLI: ``python -m repro.launch.graph_serve``; bench:
 ``python -m benchmarks.bench_serve`` (writes ``BENCH_serve.json``) and
 ``python -m benchmarks.bench_mutate`` (writes ``BENCH_mutate.json``).
@@ -27,6 +33,7 @@ from repro.serve.dynamic import DynamicGraph, EllOverflow, MutationBatch, \
     MutationStats, mutation_stream
 from repro.serve.executor import DoubleBufferedExecutor
 from repro.serve.metrics import ServeMetrics
+from repro.serve.persist import Persistence
 from repro.serve.query import Query, QueryKey, QueryResult, make_key, \
     query, validate_query
 from repro.serve.server import GraphServer
@@ -36,7 +43,8 @@ from repro.serve.workload import parse_mix, synthetic_trace, \
 __all__ = [
     "Batch", "BucketLadder", "Coalescer", "DEFAULT_BUCKETS",
     "DoubleBufferedExecutor", "DynamicGraph", "EllOverflow", "GraphServer",
-    "MutationBatch", "MutationStats", "Query", "QueryKey", "QueryResult",
+    "MutationBatch", "MutationStats", "Persistence", "Query", "QueryKey",
+    "QueryResult",
     "ServeMetrics", "make_key", "mutation_stream", "parse_mix", "query",
     "synthetic_trace", "validate_query", "zipf_root_sampler",
 ]

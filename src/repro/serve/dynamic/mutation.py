@@ -104,7 +104,7 @@ class DynamicGraph:
     device graph.
     """
 
-    def __init__(self, engine, garr=None):
+    def __init__(self, engine, garr=None, *, planner_state=None):
         self.engine = engine
         self.garr = dict(garr) if garr is not None else engine.device_graph()
         self.epoch = 0
@@ -115,7 +115,10 @@ class DynamicGraph:
         # replays the journal in reverse so the planner state and the
         # mirrors roll back to the pre-batch graph exactly
         self._undo: list | None = None
-        self._rebuild_index()
+        if planner_state is not None:
+            self._restore_planner(planner_state)
+        else:
+            self._rebuild_index()
 
     def _log_undo(self, fn) -> None:
         if self._undo is not None:
@@ -158,6 +161,47 @@ class DynamicGraph:
             for e, u, v in zip(ee.tolist(), us.tolist(), vs.tolist()):
                 d.setdefault((u, v), []).append(e)
             self._pos_in.append(d)
+
+    # -- planner-state snapshot / restore ----------------------------------
+
+    def planner_state(self) -> dict:
+        """The EXACT free-slot planner state, in plain picklable types.
+
+        Order matters: free stacks pop from the end and position lists
+        pop newest-first, so slot placement — and therefore float
+        reduction order in every downstream kernel — is a function of
+        this state.  A snapshot restored through ``_restore_planner``
+        replays mutations into the same slots the original run used,
+        which is what makes recovered answers bit-identical rather than
+        merely multiset-equal."""
+        return {
+            "occ": {name: occ.copy() for name, occ in self._occ.items()},
+            "free_out": [list(x) for x in self._free_out],
+            "free_in": [list(x) for x in self._free_in],
+            "pos_out": [[(u, v, list(es)) for (u, v), es in d.items()]
+                        for d in self._pos_out],
+            "pos_in": [[(u, v, list(es)) for (u, v), es in d.items()]
+                       for d in self._pos_in],
+            "epoch": int(self.epoch),
+        }
+
+    def _restore_planner(self, state: dict) -> None:
+        g = self.engine.g
+        if not g.ell_meta:
+            raise ValueError(
+                "dynamic mutation needs the blocked-ELL layout "
+                "(partition_graph(..., build_ell_layout=True))")
+        self._row_layout = {name: ell_row_layout(g.ell_meta[name].buckets)
+                            for name in _ELL_NAMES}
+        self._occ = {name: np.array(occ)
+                     for name, occ in state["occ"].items()}
+        self._free_out = [list(x) for x in state["free_out"]]
+        self._free_in = [list(x) for x in state["free_in"]]
+        self._pos_out = [{(u, v): list(es) for u, v, es in part}
+                         for part in state["pos_out"]]
+        self._pos_in = [{(u, v): list(es) for u, v, es in part}
+                        for part in state["pos_in"]]
+        self.epoch = int(state.get("epoch", 0))
 
     # -- capacity ----------------------------------------------------------
 
@@ -372,12 +416,15 @@ class DynamicGraph:
 
     # -- public API --------------------------------------------------------
 
-    def apply(self, inserts=None, deletes=None) -> MutationStats:
-        """Apply one mutation batch; returns patch-path stats, or
-        ``rebuild=True`` when the batch overflowed the free pools and
-        the graph was re-partitioned instead.  Either way ``self.garr``
-        is the new epoch's device graph and ``self.epoch`` advanced."""
-        t0 = time.perf_counter()
+    def plan(self, inserts=None, deletes=None
+             ) -> tuple[np.ndarray, np.ndarray, bool]:
+        """Validate one batch against the current graph WITHOUT mutating
+        anything: returns ``(ins, dels, rebuild)`` where ``rebuild``
+        says the batch overflows the free pools and ``apply`` would
+        take the re-partition path.  Raises exactly what ``apply``
+        would raise for an invalid batch (out-of-range endpoints,
+        deletes of absent edges) — which is what lets the durability
+        layer reject a batch BEFORE logging it."""
         ins, dels = _as_pairs(inserts), _as_pairs(deletes)
         g = self.engine.g
         for arr, what in ((ins, "insert"), (dels, "delete")):
@@ -387,6 +434,22 @@ class DynamicGraph:
         try:
             self._check_capacity(ins, dels)
         except EllOverflow:
+            return ins, dels, True
+        return ins, dels, False
+
+    def apply(self, inserts=None, deletes=None, *,
+              force_rebuild: bool = False) -> MutationStats:
+        """Apply one mutation batch; returns patch-path stats, or
+        ``rebuild=True`` when the batch overflowed the free pools and
+        the graph was re-partitioned instead.  Either way ``self.garr``
+        is the new epoch's device graph and ``self.epoch`` advanced.
+        ``force_rebuild=True`` takes the re-partition path even when
+        the batch would fit — WAL replay uses it so a logged rebuild
+        record deterministically re-takes the path the original
+        execution took."""
+        t0 = time.perf_counter()
+        ins, dels, overflow = self.plan(inserts, deletes)
+        if overflow or force_rebuild:
             return self._rebuild(ins, dels, t0)
         touched: dict[str, set] = {}
         garr_prev = dict(self.garr)        # refs only: patches are CoW

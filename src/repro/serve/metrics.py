@@ -37,6 +37,12 @@ class ServeMetrics:
         self._t0: float | None = None
         self._t1: float | None = None
         self.counts: dict[str, int] = {c: 0 for c in COUNTERS}
+        # durability / dynamic-graph observability (the server keeps
+        # these current): snapshot epoch being served, restarts this
+        # process recovered through, valid records in the open WAL
+        self.epoch = 0
+        self.recoveries = 0
+        self.wal_records = 0
 
     def count(self, name: str, k: int = 1) -> None:
         self.counts[name] = self.counts.get(name, 0) + k
@@ -78,6 +84,21 @@ class ServeMetrics:
                 "p99_ms": round(float(p99), 2),
             })
         return out
+
+    def snapshot(self) -> dict:
+        """One JSON-ready dict of everything observable: the latency
+        cells, the resilience counters, and the durability state
+        (epoch / recoveries / wal_records) — what ``graph_serve --json``
+        publishes, so overload and recovery drills are scriptable
+        without grepping logs."""
+        return {
+            "window_s": round(self.window_s, 4),
+            "epoch": int(self.epoch),
+            "recoveries": int(self.recoveries),
+            "wal_records": int(self.wal_records),
+            "counts": dict(self.counts),
+            "rows": self.rows(),
+        }
 
     def table(self) -> str:
         rows = self.rows()

@@ -83,6 +83,7 @@ from repro.serve.coalescer import Batch, BucketLadder, Coalescer
 from repro.serve.dynamic import DynamicGraph, MutationBatch, MutationStats
 from repro.serve.executor import DoubleBufferedExecutor, Launch
 from repro.serve.metrics import ServeMetrics
+from repro.serve.persist import DurabilityState, Persistence, maybe_crash
 from repro.serve.query import Query, QueryKey, QueryResult, make_key, \
     validate_query
 
@@ -92,7 +93,8 @@ class GraphServer:
                  max_queued: int | None = None,
                  default_deadline_s: float | None = None,
                  max_retries: int = 2, retry_backoff_s: float = 0.02,
-                 validate: bool = True):
+                 validate: bool = True,
+                 persistence: Persistence | str | None = None):
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.engine = engine
@@ -127,6 +129,15 @@ class GraphServer:
         self.dynamic: DynamicGraph | None = None
         self.mutation_log: list[dict] = []
         self._seeds: dict[tuple[str, str], tuple[int, np.ndarray]] = {}
+        # durability (WAL + snapshots): None = fail-stop volatile, the
+        # pre-persistence behavior.  ``persistence=`` starts durable
+        # FROM SCRATCH (refusing a dir that already holds state);
+        # ``GraphServer.recover(dir)`` is the resume constructor.
+        self.durability: DurabilityState | None = None
+        self.recovery_report = None
+        if persistence is not None:
+            self.durability = DurabilityState.create(self, persistence)
+            self.metrics.wal_records = self.durability.wal_records
 
     # -- admission -----------------------------------------------------------
     def submit(self, algo: str, variant: str | None = None, *,
@@ -226,20 +237,72 @@ class GraphServer:
         free-slot pools falls back to a full re-partition + re-upload
         (``stats.rebuild=True``; programs for the new layout re-warm on
         first use — the compile-cache key covers the layout signature).
+
+        Durability ordering (``persistence=`` servers): the batch is
+        planned, WAL-logged and fsynced BEFORE it applies — a crash at
+        any instruction leaves the log a superset of the applied
+        epochs, never the reverse — and every ``snapshot_every`` epochs
+        a crash-consistent snapshot pumps after the apply.
         """
+        if self.durability is not None:
+            maybe_crash("between-batches")
         while True:
             batch = self.coalescer.next_batch()
             if batch is None:
                 break
             self._launch(batch)           # results wait in the mailbox
         dyn = self.dynamic_graph()
-        stats = dyn.apply(inserts, deletes)
+        if self.durability is not None:
+            stats = self.durability.logged_apply(dyn, inserts, deletes)
+        else:
+            stats = dyn.apply(inserts, deletes)
         self.garr = dyn.garr
         self.epoch = dyn.epoch
+        self.metrics.epoch = self.epoch
         self.mutation_log.append({
             "epoch": stats.epoch, "n_insert": stats.n_insert,
             "n_delete": stats.n_delete, "rebuild": stats.rebuild})
+        if self.durability is not None:
+            self.metrics.wal_records = self.durability.wal_records
+            self.durability.maybe_snapshot(self)
         return stats
+
+    @classmethod
+    def recover(cls, dir, *, mesh=None, snapshot_every=None, retain=None,
+                fsync=None, **kwargs) -> "GraphServer":
+        """Resume serving from a durability directory: newest
+        digest-valid snapshot + WAL-suffix replay, bit-identical to the
+        uninterrupted server at the recovered epoch.  ``kwargs`` pass
+        through to the constructor (buckets, depth, deadlines, ...);
+        the persistence knobs default to what the snapshot recorded.
+        The recovered server keeps appending to the same WAL; what it
+        did is on ``server.recovery_report``."""
+        from repro.serve.persist.recover import recover_state
+        rs = recover_state(dir, mesh=mesh)
+        server = cls(rs.engine, **kwargs)
+        server.dynamic = rs.dynamic
+        server.garr = rs.dynamic.garr
+        server.epoch = rs.epoch
+        server.mutation_log = rs.mutation_log
+        server._seeds = dict(rs.seeds)
+        stored = rs.persist_cfg
+        cfg = Persistence(
+            dir=str(dir),
+            snapshot_every=(snapshot_every if snapshot_every is not None
+                            else stored.get("snapshot_every", 8)),
+            retain=(retain if retain is not None
+                    else stored.get("retain", 2)),
+            fsync=(fsync if fsync is not None
+                   else stored.get("fsync", True)))
+        rs.wal.fsync = cfg.fsync
+        server.durability = DurabilityState.resume(
+            cfg, rs.wal, rs.digest, rs.count, rs.batch_id,
+            last_snapshot_epoch=rs.report.snapshot_epoch)
+        server.recovery_report = rs.report
+        server.metrics.epoch = rs.epoch
+        server.metrics.recoveries = 1
+        server.metrics.wal_records = rs.report.wal_records
+        return server
 
     def resolve_seed(self, key: QueryKey) -> tuple[tuple, bool]:
         """(seed arrays, warm?) for a seeded query without an explicit

@@ -1,0 +1,540 @@
+"""Durable serving state (PR 9): WAL framing, crash-consistent
+snapshots, recovery semantics, and the subprocess kill drills.
+
+Tier-1 (in-process, parts=1): record framing + torn-tail/bit-flip
+handling, the commutative edge digest, WAL-before-apply ordering (an
+apply failure truncates the orphan record; an append failure blocks
+the apply), idempotent replay of snapshotted batch ids, rebuild-record
+replay, seed-store round-trip, corrupt-snapshot fallback, metrics
+observability, and the docs drift guard for the crash-point table.
+
+The `durability` lane (subprocess, parts=2) is the acceptance drill:
+for each named crash point a victim server is killed mid-trace at that
+exact protocol instruction (``REPRO_CRASH_POINT``), a fresh process
+recovers the directory, and the recovered epoch, edge multiset, and
+every re-served probe answer must be bit-identical to an uninterrupted
+reference server at that epoch — same bar as tests/test_chaos.py.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import SRC
+
+from repro.core import GraphEngine, partition_graph
+from repro.graphs import urand_edges
+from repro.launch.mesh import make_graph_mesh
+from repro.serve import GraphServer, Persistence, Query, make_key
+from repro.serve.dynamic.mutation import DynamicGraph
+from repro.serve.persist import CRASH_EXIT_CODE, CRASH_POINTS, \
+    crash_points_markdown_table, maybe_crash, reset_counts
+from repro.serve.persist.recover import RecoveryFailed, recover_state
+from repro.serve.persist.snapshot import SnapshotCorrupt, find_snapshots, \
+    load_snapshot, pack_snapshot, unpack_snapshot, write_snapshot
+from repro.serve.persist.wal import FILE_MAGIC, WalRecord, WriteAheadLog, \
+    edge_digest, encode_record, update_digest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rec(bid, epoch, ins=(), dels=(), rebuild=False):
+    return WalRecord(batch_id=bid, epoch=epoch, rebuild=rebuild,
+                     digest=bid * 17, count=bid,
+                     inserts=np.asarray(ins, np.int64).reshape(-1, 2),
+                     deletes=np.asarray(dels, np.int64).reshape(-1, 2))
+
+
+def _same(a: WalRecord, b: WalRecord) -> bool:
+    return (a.batch_id == b.batch_id and a.epoch == b.epoch
+            and a.rebuild == b.rebuild and a.digest == b.digest
+            and a.count == b.count
+            and np.array_equal(a.inserts, b.inserts)
+            and np.array_equal(a.deletes, b.deletes))
+
+
+def _make_server(pdir=None, *, n=256, e=2048, seed=11, snapshot_every=2,
+                 retain=2, **kw):
+    edges = urand_edges(n, e, seed=seed)
+    g = partition_graph(edges, n, 1)
+    eng = GraphEngine(g, make_graph_mesh(1))
+    pers = Persistence(dir=str(pdir), snapshot_every=snapshot_every,
+                       retain=retain, fsync=False) \
+        if pdir is not None else None
+    return GraphServer(eng, buckets=(4,), persistence=pers, **kw)
+
+
+def _run_rounds(server, rounds, rng):
+    """The shared deterministic trace: per round one delete batch, one
+    insert batch (sampled against live capacity), one served query."""
+    dyn = server.dynamic_graph()
+    for _ in range(rounds):
+        server.mutate(deletes=dyn.sample_deletable(12, rng))
+        server.mutate(inserts=dyn.sample_insertable(12, rng))
+        server.serve([Query(make_key("bfs"), 3)])
+
+
+def _sorted_edges(dyn):
+    cur = dyn.current_edges()
+    return cur[np.lexsort((cur[:, 1], cur[:, 0]))]
+
+
+# -- WAL framing -------------------------------------------------------------
+
+def test_wal_roundtrip_and_reopen(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = WriteAheadLog(path, fsync=False)
+    recs = [_rec(1, 1, ins=[[0, 1]]),
+            _rec(2, 2, dels=[[3, 4], [5, 6]], rebuild=True),
+            _rec(3, 3)]
+    for r in recs:
+        wal.append(r)
+    wal.close()
+    wal2 = WriteAheadLog(path, fsync=False)
+    assert wal2.n_records == 3
+    assert all(_same(a, b) for a, b in zip(recs, wal2.records))
+    wal2.close()
+
+
+def test_wal_torn_tail_truncated(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = WriteAheadLog(path, fsync=False)
+    wal.append(_rec(1, 1, ins=[[0, 1]]))
+    wal.append(_rec(2, 2, ins=[[2, 3]]))
+    wal.close()
+    frame = encode_record(_rec(3, 3, ins=[[4, 5]]))
+    with open(path, "ab") as f:
+        f.write(frame[:len(frame) // 2])      # the crash mid-append
+    wal2 = WriteAheadLog(path, fsync=False)
+    assert [r.batch_id for r in wal2.records] == [1, 2]
+    wal2.close()
+    # the torn bytes are gone from disk, not just skipped
+    size = os.path.getsize(path)
+    assert size == len(FILE_MAGIC) + sum(
+        len(encode_record(r)) for r in wal2.records)
+
+
+def test_wal_bitflip_stops_scan(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = WriteAheadLog(path, fsync=False)
+    for i in (1, 2, 3):
+        wal.append(_rec(i, i, ins=[[i, i + 1]]))
+    wal.close()
+    data = bytearray(open(path, "rb").read())
+    flip = len(FILE_MAGIC) + len(encode_record(_rec(1, 1,
+                                                    ins=[[1, 2]]))) + 12
+    data[flip] ^= 0x10                         # inside record 2
+    open(path, "wb").write(bytes(data))
+    wal2 = WriteAheadLog(path, fsync=False)
+    assert [r.batch_id for r in wal2.records] == [1]
+    wal2.close()
+
+
+def test_wal_truncate_to_drops_appended_record(tmp_path):
+    wal = WriteAheadLog(tmp_path / "wal.log", fsync=False)
+    wal.append(_rec(1, 1))
+    off = wal.append(_rec(2, 2, ins=[[7, 8]]))
+    wal.truncate_to(off)
+    assert [r.batch_id for r in wal.records] == [1]
+    wal.append(_rec(2, 2, ins=[[9, 9]]))       # the log stays appendable
+    wal.close()
+    wal2 = WriteAheadLog(tmp_path / "wal.log", fsync=False)
+    assert [r.batch_id for r in wal2.records] == [1, 2]
+    assert wal2.records[1].inserts[0, 0] == 9
+    wal2.close()
+
+
+def test_edge_digest_commutative_update():
+    rng = np.random.default_rng(0)
+    edges = rng.integers(0, 100, size=(50, 2))
+    d, c = edge_digest(edges)
+    dp, cp = edge_digest(rng.permutation(edges, axis=0))
+    assert (d, c) == (dp, cp)                  # order-independent
+    ins, dels = rng.integers(0, 100, size=(7, 2)), edges[:5]
+    after = np.concatenate([edges[5:], ins])
+    assert update_digest(d, c, ins, dels) == edge_digest(after)
+    # multiplicity matters: a duplicated edge is a different multiset
+    assert edge_digest(np.concatenate([edges, edges[:1]])) != (d, c)
+
+
+# -- snapshots ---------------------------------------------------------------
+
+def test_snapshot_envelope_detects_any_flip(tmp_path):
+    state = {"x": np.arange(5), "epoch": 7}
+    data = pack_snapshot(7, state)
+    epoch, loaded = unpack_snapshot(data)
+    assert epoch == 7 and np.array_equal(loaded["x"], state["x"])
+    for pos in (2, 9, len(data) - 3):          # magic, header, payload
+        bad = bytearray(data)
+        bad[pos] ^= 1
+        with pytest.raises(SnapshotCorrupt):
+            unpack_snapshot(bytes(bad))
+    with pytest.raises(SnapshotCorrupt):
+        unpack_snapshot(data[:-1])             # truncation
+
+    write_snapshot(tmp_path, 3, state, fsync=False)
+    write_snapshot(tmp_path, 9, state, fsync=False)
+    (tmp_path / ".snapshot-0000000011.tmp").write_bytes(b"torn")
+    assert [e for e, _ in find_snapshots(tmp_path)] == [9, 3]
+    assert load_snapshot(find_snapshots(tmp_path)[0][1])[0] == 9
+
+
+def test_persistence_refuses_resumable_dir(tmp_path):
+    _make_server(tmp_path)
+    with pytest.raises(ValueError, match="already holds durable state"):
+        _make_server(tmp_path)
+
+
+def test_recover_empty_dir_raises(tmp_path):
+    with pytest.raises(RecoveryFailed, match="no snapshots"):
+        recover_state(str(tmp_path))
+
+
+# -- recovery semantics ------------------------------------------------------
+
+def test_recover_replay_bit_identical(tmp_path):
+    # snapshot_every huge => recovery replays EVERY batch from the base
+    # snapshot, the pure-WAL path
+    server = _make_server(tmp_path, snapshot_every=100)
+    rng = np.random.default_rng(3)
+    _run_rounds(server, 2, rng)
+    (res,) = server.serve([Query(make_key("bfs"), 3)])
+    ref_edges = _sorted_edges(server.dynamic)
+
+    # WAL-before-apply, observable: every applied epoch's batch is in
+    # the log (the converse — logged but unapplied — is what replay fixes)
+    logged = {r.epoch for r in server.durability.wal.records}
+    assert {m["epoch"] for m in server.mutation_log} <= logged
+
+    rec = GraphServer.recover(tmp_path, buckets=(4,))
+    rep = rec.recovery_report
+    assert (rep.snapshot_epoch, rep.epoch, rep.replayed, rep.skipped) \
+        == (0, 4, 4, 0)
+    assert rec.epoch == server.epoch == 4
+    np.testing.assert_array_equal(ref_edges, _sorted_edges(rec.dynamic))
+    (res2,) = rec.serve([Query(make_key("bfs"), 3)])
+    np.testing.assert_array_equal(np.asarray(res["parents"]),
+                                  np.asarray(res2["parents"]))
+    assert res2.rounds == res.rounds
+    assert rec.metrics.recoveries == 1
+
+
+def test_replay_of_snapshotted_batch_is_noop(tmp_path):
+    # snapshot_every=1 => the newest snapshot already folds in every
+    # batch; replay must SKIP all of them (idempotence on batch id)
+    server = _make_server(tmp_path, snapshot_every=1)
+    rng = np.random.default_rng(5)
+    _run_rounds(server, 2, rng)
+    ref_edges = _sorted_edges(server.dynamic)
+
+    rec = GraphServer.recover(tmp_path)
+    rep = rec.recovery_report
+    assert (rep.replayed, rep.skipped, rep.epoch) == (0, 4, 4)
+    np.testing.assert_array_equal(ref_edges, _sorted_edges(rec.dynamic))
+    # the recovered server keeps mutating durably on the same WAL
+    dyn = rec.dynamic_graph()
+    rec.mutate(deletes=dyn.sample_deletable(3, rng))
+    assert rec.epoch == 5 and rec.durability.batch_id == 5
+    rec2 = GraphServer.recover(tmp_path)
+    assert rec2.epoch == 5
+    np.testing.assert_array_equal(_sorted_edges(rec.dynamic),
+                                  _sorted_edges(rec2.dynamic))
+
+
+def test_rebuild_record_replays_rebuild_path(tmp_path):
+    server = _make_server(tmp_path, snapshot_every=100)
+    rng = np.random.default_rng(7)
+    dyn = server.dynamic_graph()
+    server.mutate(deletes=dyn.sample_deletable(8, rng))
+    # overflow the out-COO free pool => the rebuild path, logged as such
+    hot = np.tile([[0, 1]], (len(dyn._free_out[0]) + 1, 1))
+    stats = server.mutate(inserts=hot)
+    assert stats.rebuild
+    assert server.durability.wal.records[-1].rebuild
+    server.mutate(deletes=dyn.sample_deletable(5, rng))
+    ref_edges = _sorted_edges(dyn)
+
+    rec = GraphServer.recover(tmp_path)
+    rep = rec.recovery_report
+    assert (rep.replayed, rep.rebuilds, rep.epoch) == (3, 1, 3)
+    np.testing.assert_array_equal(ref_edges, _sorted_edges(rec.dynamic))
+
+
+def test_wal_append_failure_blocks_apply(tmp_path, monkeypatch):
+    server = _make_server(tmp_path)
+    rng = np.random.default_rng(9)
+    dyn = server.dynamic_graph()
+    before = _sorted_edges(dyn)
+    monkeypatch.setattr(WriteAheadLog, "append",
+                        lambda self, rec: (_ for _ in ()).throw(
+                            OSError("disk full")))
+    with pytest.raises(OSError, match="disk full"):
+        server.mutate(deletes=dyn.sample_deletable(4, rng))
+    # no log record => no applied epoch: the graph never moved
+    assert server.epoch == 0 and dyn.epoch == 0
+    np.testing.assert_array_equal(before, _sorted_edges(dyn))
+    monkeypatch.undo()
+    assert server.durability.wal.n_records == 0
+
+
+def test_apply_failure_truncates_orphan_record(tmp_path, monkeypatch):
+    server = _make_server(tmp_path)
+    rng = np.random.default_rng(13)
+    dyn = server.dynamic_graph()
+    before = _sorted_edges(dyn)
+    monkeypatch.setattr(DynamicGraph, "_apply_patches",
+                        lambda self, touched: (_ for _ in ()).throw(
+                            RuntimeError("device fell over")))
+    with pytest.raises(RuntimeError, match="device fell over"):
+        server.mutate(deletes=dyn.sample_deletable(4, rng))
+    monkeypatch.undo()
+    # the record logged ahead of the failed apply is truncated away:
+    # log and state agree (no batch that neither applied nor replays)
+    assert server.durability.wal.n_records == 0
+    assert server.epoch == 0
+    np.testing.assert_array_equal(before, _sorted_edges(dyn))
+    server.mutate(deletes=dyn.sample_deletable(4, rng))   # still durable
+    assert server.durability.wal.n_records == 1
+    rec = GraphServer.recover(tmp_path)
+    assert rec.epoch == 1
+    np.testing.assert_array_equal(_sorted_edges(dyn),
+                                  _sorted_edges(rec.dynamic))
+
+
+def test_snapshot_corruption_falls_back_to_previous(tmp_path):
+    server = _make_server(tmp_path, snapshot_every=1, retain=3)
+    rng = np.random.default_rng(17)
+    _run_rounds(server, 2, rng)                # snapshots at 0..4
+    ref_edges = _sorted_edges(server.dynamic)
+    newest = find_snapshots(tmp_path)[0][1]
+    data = bytearray(open(newest, "rb").read())
+    data[len(data) // 2] ^= 1                  # flip a payload bit
+    open(newest, "wb").write(bytes(data))
+
+    rec = GraphServer.recover(tmp_path)
+    rep = rec.recovery_report
+    assert rep.snapshots_tried == 2            # newest condemned by CRC
+    assert (rep.snapshot_epoch, rep.replayed, rep.epoch) == (3, 1, 4)
+    np.testing.assert_array_equal(ref_edges, _sorted_edges(rec.dynamic))
+
+
+def test_seed_store_roundtrip(tmp_path):
+    server = _make_server(tmp_path)
+    server.serve([Query(make_key("pagerank"), None)])   # harvests the seed
+    assert ("pagerank", "rank") in server._seeds
+    server.durability.snapshot_now(server)
+    rec = GraphServer.recover(tmp_path)
+    assert set(rec._seeds) == set(server._seeds)
+    ep0, arr0 = server._seeds[("pagerank", "rank")]
+    ep1, arr1 = rec._seeds[("pagerank", "rank")]
+    assert ep0 == ep1
+    np.testing.assert_array_equal(np.asarray(arr0), np.asarray(arr1))
+
+
+# -- observability / machinery ----------------------------------------------
+
+def test_metrics_snapshot_fields(tmp_path):
+    from repro.serve.metrics import ServeMetrics
+    snap = ServeMetrics().snapshot()
+    assert (snap["epoch"], snap["recoveries"], snap["wal_records"]) \
+        == (0, 0, 0)
+    assert set(snap) == {"window_s", "epoch", "recoveries", "wal_records",
+                         "counts", "rows"}
+    server = _make_server(tmp_path)
+    rng = np.random.default_rng(1)
+    dyn = server.dynamic_graph()
+    server.mutate(deletes=dyn.sample_deletable(2, rng))
+    snap = server.metrics.snapshot()
+    assert snap["epoch"] == 1 and snap["wal_records"] == 1
+    rec = GraphServer.recover(tmp_path)
+    snap = rec.metrics.snapshot()
+    assert snap["recoveries"] == 1 and snap["epoch"] == 1 \
+        and snap["wal_records"] == 1
+
+
+def test_crash_point_machinery(monkeypatch):
+    fired = []
+    monkeypatch.setattr(os, "_exit",
+                        lambda code: fired.append(code) or (_ for _ in ())
+                        .throw(SystemExit(code)))
+    monkeypatch.setenv("REPRO_CRASH_POINT", "between-batches:2")
+    reset_counts()
+    maybe_crash("between-batches")             # occurrence 1: survives
+    maybe_crash("after-wal-append")            # other points don't count
+    assert not fired
+    with pytest.raises(SystemExit):
+        maybe_crash("between-batches")         # occurrence 2: dies
+    assert fired == [CRASH_EXIT_CODE]
+    reset_counts()
+    with pytest.raises(ValueError, match="unknown crash point"):
+        maybe_crash("not-a-point")
+
+
+def test_docs_crash_point_table_in_sync():
+    content = open(os.path.join(REPO, "docs", "API.md")).read()
+    table = crash_points_markdown_table()
+    assert table in content, (
+        "docs/API.md 'Durability & crash recovery' crash-point table is "
+        "out of sync; paste this:\n\n" + table)
+
+
+# -- the kill drills ---------------------------------------------------------
+
+_DRILL_SETUP = r"""
+import hashlib, json, os
+import numpy as np
+from repro.core import GraphEngine, partition_graph
+from repro.graphs import urand_edges
+from repro.launch.mesh import make_graph_mesh
+from repro.serve import GraphServer, Persistence, Query, make_key
+
+N, PARTS, E, ROUNDS = 512, 2, 4096, 3
+PROBES = (("bfs", 3), ("pagerank", None), ("cc", None))
+
+def hsh(a):
+    return hashlib.sha256(
+        np.ascontiguousarray(np.asarray(a)).tobytes()).hexdigest()
+
+def probe(server):
+    out = {}
+    for algo, root in PROBES:
+        (res,) = server.serve([Query(make_key(algo), root)])
+        out[algo] = {"rounds": int(res.rounds),
+                     "fields": {k: hsh(v)
+                                for k, v in sorted(res.fields.items())}}
+    return out
+
+def build(persistence=None):
+    edges = urand_edges(N, E, seed=11)
+    g = partition_graph(edges, N, PARTS)
+    eng = GraphEngine(g, make_graph_mesh(PARTS))
+    return GraphServer(eng, buckets=(4,), persistence=persistence)
+
+def edges_hash(dyn):
+    cur = dyn.current_edges()
+    return hsh(cur[np.lexsort((cur[:, 1], cur[:, 0]))])
+"""
+
+_VICTIM_CODE = _DRILL_SETUP + r"""
+server = build(Persistence(dir=os.environ["DRILL_DIR"], snapshot_every=2))
+rng = np.random.default_rng(3)
+dyn = server.dynamic_graph()
+for k in range(ROUNDS):
+    server.mutate(deletes=dyn.sample_deletable(12, rng))
+    server.mutate(inserts=dyn.sample_insertable(12, rng))
+    server.serve([Query(make_key("bfs"), 3)])
+print("VICTIM-SURVIVED")
+"""
+
+_REFERENCE_CODE = _DRILL_SETUP + r"""
+server = build()
+rng = np.random.default_rng(3)
+dyn = server.dynamic_graph()
+report = {}
+for k in range(ROUNDS):
+    server.mutate(deletes=dyn.sample_deletable(12, rng))
+    report[str(server.epoch)] = {"edges": edges_hash(dyn),
+                                 "answers": probe(server)}
+    server.mutate(inserts=dyn.sample_insertable(12, rng))
+    report[str(server.epoch)] = {"edges": edges_hash(dyn),
+                                 "answers": probe(server)}
+    server.serve([Query(make_key("bfs"), 3)])
+print("REF " + json.dumps(report))
+"""
+
+_RECOVER_CODE = _DRILL_SETUP + r"""
+server = GraphServer.recover(os.environ["DRILL_DIR"], buckets=(4,))
+rep = server.recovery_report
+print("RECOVERED " + json.dumps({
+    "epoch": server.epoch, "snapshot_epoch": rep.snapshot_epoch,
+    "replayed": rep.replayed, "skipped": rep.skipped,
+    "recoveries": server.metrics.recoveries,
+    "wal_records": server.metrics.wal_records,
+    "edges": edges_hash(server.dynamic_graph()),
+    "answers": probe(server)}))
+"""
+
+# crash spec -> what recovery must land on.  The victim trace is 6
+# mutate() calls (epochs 1..6) with snapshots at epochs 0/2/4/6; the
+# occurrence counter picks the exact protocol instruction to die at.
+_DRILLS = [
+    # 5th WAL append: batch 5 logged + fsynced, never applied — replay
+    # redoes it from snapshot 4
+    ("after-wal-append:5",
+     dict(epoch=5, snapshot_epoch=4, replayed=1, skipped=4)),
+    # top of mutate 5: nothing of batch 5 exists — clean resume at 4
+    ("between-batches:5",
+     dict(epoch=4, snapshot_epoch=4, replayed=0, skipped=4)),
+    # 3rd snapshot write (epoch 4) torn mid-temp-file: recovery ignores
+    # the temp and replays batches 3..4 over snapshot 2
+    ("mid-snapshot-temp-write:3",
+     dict(epoch=4, snapshot_epoch=2, replayed=2, skipped=2)),
+    # crash right after snapshot 4's atomic rename: the new snapshot IS
+    # durable, every logged batch idempotently skips
+    ("post-rename:3",
+     dict(epoch=4, snapshot_epoch=4, replayed=0, skipped=4)),
+]
+
+
+def _run_drill_proc(code, *, expect_rc=0, extra_env=None, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = SRC
+    env.update(extra_env or {})
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == expect_rc, (
+        f"rc={r.returncode} (expected {expect_rc})\n"
+        f"STDOUT:{r.stdout[-3000:]}\nSTDERR:{r.stderr[-3000:]}")
+    return r.stdout
+
+
+@pytest.fixture(scope="module")
+def reference_report():
+    """One uninterrupted run of the drill trace, probed at EVERY epoch:
+    the oracle the recovered servers must match bit-for-bit."""
+    out = _run_drill_proc(_REFERENCE_CODE)
+    for line in out.splitlines():
+        if line.startswith("REF "):
+            return json.loads(line[len("REF "):])
+    raise AssertionError(f"no REF line in reference output:\n{out[-2000:]}")
+
+
+@pytest.mark.durability
+@pytest.mark.slow
+@pytest.mark.parametrize("crash_spec,expect",
+                         _DRILLS, ids=[d[0] for d in _DRILLS])
+def test_crash_drill(crash_spec, expect, reference_report, tmp_path):
+    pdir = str(tmp_path / "store")
+    out = _run_drill_proc(_VICTIM_CODE,
+                          expect_rc=CRASH_EXIT_CODE,
+                          extra_env={"REPRO_CRASH_POINT": crash_spec,
+                                     "DRILL_DIR": pdir})
+    assert "VICTIM-SURVIVED" not in out, \
+        f"{crash_spec}: the crash point never fired"
+
+    out = _run_drill_proc(_RECOVER_CODE, extra_env={"DRILL_DIR": pdir})
+    rec = next(json.loads(line[len("RECOVERED "):])
+               for line in out.splitlines()
+               if line.startswith("RECOVERED "))
+    for k in ("epoch", "snapshot_epoch", "replayed", "skipped"):
+        assert rec[k] == expect[k], \
+            f"{crash_spec}: {k}={rec[k]}, expected {expect[k]}"
+    assert rec["recoveries"] == 1
+    ref = reference_report[str(expect["epoch"])]
+    assert rec["edges"] == ref["edges"], \
+        f"{crash_spec}: recovered edge multiset differs from reference"
+    assert rec["answers"] == ref["answers"], \
+        f"{crash_spec}: recovered answers not bit-identical to reference"
+
+
+@pytest.mark.durability
+@pytest.mark.slow
+def test_drill_crash_points_are_exhaustive():
+    """Every registered crash point has a drill (and vice versa)."""
+    drilled = {spec.split(":")[0] for spec, _ in _DRILLS}
+    assert drilled == set(CRASH_POINTS)

@@ -250,6 +250,128 @@ def test_stale_pagerank_window_max_residual_monotone(
     assert wm[-1] < wm[0] * 0.9
 
 
+# -- durability: WAL framing + snapshot envelope properties ---------------
+#
+# Bytes-level (no files, no jax): the WAL/snapshot modules are jax-free
+# so these properties exercise exactly the code the recovery path trusts.
+
+from repro.serve.persist.snapshot import SnapshotCorrupt, \
+    pack_snapshot, unpack_snapshot  # noqa: E402
+from repro.serve.persist.wal import WalRecord, edge_digest, \
+    encode_record, scan_records, update_digest  # noqa: E402
+
+
+def _random_records(rng, k):
+    recs, digest, count = [], 0, 0
+    for i in range(1, k + 1):
+        ins = rng.integers(0, 1 << 40, size=(int(rng.integers(0, 6)), 2))
+        dels = rng.integers(0, 1 << 40, size=(int(rng.integers(0, 6)), 2))
+        digest, count = update_digest(digest, count, ins, dels)
+        recs.append(WalRecord(i, i, bool(rng.integers(0, 2)),
+                              digest, max(count, 0),
+                              ins.astype(np.int64), dels.astype(np.int64)))
+    return recs
+
+
+def _same_record(a, b):
+    return (a.batch_id == b.batch_id and a.epoch == b.epoch
+            and a.rebuild == b.rebuild and a.digest == b.digest
+            and a.count == b.count
+            and np.array_equal(a.inserts, b.inserts)
+            and np.array_equal(a.deletes, b.deletes))
+
+
+@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_wal_records_roundtrip_through_scan(k, seed):
+    """encode -> concatenate -> scan recovers every record exactly and
+    consumes the whole buffer (canonical framing, no slack bytes)."""
+    recs = _random_records(np.random.default_rng(seed), k)
+    data = b"".join(encode_record(r) for r in recs)
+    got, end = scan_records(data)
+    assert end == len(data)
+    assert len(got) == k
+    assert all(_same_record(a, b) for a, b in zip(got, recs))
+
+
+@given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_wal_truncated_tail_yields_exact_prefix(k, seed, cut_frac):
+    """Cutting the log at ANY byte position yields exactly the records
+    whose frames lie fully before the cut — the prefix-durability
+    contract a torn tail relies on."""
+    recs = _random_records(np.random.default_rng(seed), k)
+    frames = [encode_record(r) for r in recs]
+    data = b"".join(frames)
+    cut = int(round(cut_frac * len(data)))
+    bounds = np.cumsum([0] + [len(f) for f in frames])
+    expect = int(np.searchsorted(bounds, cut, side="right")) - 1
+    got, end = scan_records(data[:cut])
+    assert len(got) == expect
+    assert end == int(bounds[expect])
+    assert all(_same_record(a, b) for a, b in zip(got, recs))
+
+
+@given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_wal_bitflip_stops_scan_at_damaged_record(k, seed, flip_seed):
+    """One flipped bit anywhere in frame i: the scan returns exactly
+    the i preceding records, bit-identical, and nothing after."""
+    recs = _random_records(np.random.default_rng(seed), k)
+    frames = [encode_record(r) for r in recs]
+    frng = np.random.default_rng(flip_seed)
+    i = int(frng.integers(0, k))
+    pos = int(frng.integers(0, len(frames[i])))
+    bit = 1 << int(frng.integers(0, 8))
+    buf = bytearray(frames[i])
+    buf[pos] ^= bit
+    frames[i] = bytes(buf)
+    got, _ = scan_records(b"".join(frames))
+    assert len(got) == i
+    assert all(_same_record(a, b) for a, b in zip(got, recs))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_edge_digest_order_free_and_invertible(seed):
+    """The multiset digest is permutation-invariant, and inserting then
+    deleting the same edges is the identity — the two algebraic facts
+    write-ahead digest computation rests on."""
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, 1 << 40, size=(int(rng.integers(1, 64)), 2))
+    d0 = edge_digest(edges)
+    assert edge_digest(rng.permutation(edges, axis=0)) == d0
+    batch = rng.integers(0, 1 << 40, size=(8, 2))
+    d1 = update_digest(*d0, batch, np.zeros((0, 2), np.int64))
+    assert update_digest(*d1, np.zeros((0, 2), np.int64), batch) == d0
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_snapshot_envelope_roundtrip_and_flip_detection(seed, flip_seed):
+    """pack/unpack round-trips the state dict; flipping any single bit
+    of the envelope raises SnapshotCorrupt (CRC covers epoch+payload)."""
+    rng = np.random.default_rng(seed)
+    epoch = int(rng.integers(0, 1 << 40))
+    state = {"format": 1, "epoch": epoch,
+             "arr": rng.integers(0, 100, size=(4, 2)),
+             "nested": {"k": list(rng.integers(0, 9, 3))}}
+    data = pack_snapshot(epoch, state)
+    got_epoch, got = unpack_snapshot(data)
+    assert got_epoch == epoch and got["epoch"] == epoch
+    np.testing.assert_array_equal(got["arr"], state["arr"])
+    frng = np.random.default_rng(flip_seed)
+    pos = int(frng.integers(0, len(data)))
+    buf = bytearray(data)
+    buf[pos] ^= 1 << int(frng.integers(0, 8))
+    with pytest.raises(SnapshotCorrupt):
+        unpack_snapshot(bytes(buf))
+    with pytest.raises(SnapshotCorrupt):
+        unpack_snapshot(data[:int(frng.integers(0, len(data)))])
+
+
 @given(st.integers(0, 2 ** 16))
 @settings(max_examples=10, deadline=None)
 def test_bfs_parents_form_valid_tree(seed):
