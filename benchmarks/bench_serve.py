@@ -178,6 +178,18 @@ print("RESULT " + json.dumps({{
     "p50_ms": ms, "p95_ms": ms, "p99_ms": ms, "ttfok_ms": ms,
     "epochs_replayed": rep.replayed, "wal_records": rep.wal_records,
     "snapshot_epoch": rep.snapshot_epoch}}))
+
+# -- obs session: a SHORT traced replay on its OWN server, so every
+# gated cell above ran un-instrumented (tracing on the timed path
+# would be a confound).  Its span summary rides the artifact as
+# informational context; compare.py never gates on it.
+from repro.obs import SpanRecorder, trace_summary
+orec = SpanRecorder()
+oserver = GraphServer(eng, buckets=(8,), obs=orec)
+oserver.warmup([make_key("bfs")])
+oserver.serve([Query(make_key("bfs"), (13 * i) % gcfg.num_vertices)
+               for i in range(16)])
+print("TRACE " + json.dumps(trace_summary(orec)))
 """
 
 
@@ -198,13 +210,15 @@ def run_cells(graph: str, parts: int, cells, launches: int,
         raise RuntimeError(
             f"serve bench subprocess failed:\n{proc.stdout[-2000:]}\n"
             f"{proc.stderr[-4000:]}")
-    rows, meta = [], {}
+    rows, meta, trace_sum = [], {}, None
     for line in proc.stdout.splitlines():
         if line.startswith("META "):
             meta = json.loads(line[len("META "):])
         elif line.startswith("RESULT "):
             rows.append(json.loads(line[len("RESULT "):]))
-    return rows, meta
+        elif line.startswith("TRACE "):
+            trace_sum = json.loads(line[len("TRACE "):])
+    return rows, meta, trace_sum
 
 
 def speedup_section(rows: list[dict], algo_label: str = "bfs_fast") -> dict:
@@ -242,8 +256,9 @@ def main(argv=None) -> int:
     print(f"[bench_serve] {graph} parts={args.parts} "
           f"launches/cell={launches} "
           f"cells={[(a, list(b)) for a, b in cells]}")
-    rows, sub_meta = run_cells(graph, args.parts, cells, launches,
-                               overload_duration=0.5 if args.fast else 1.0)
+    rows, sub_meta, trace_sum = run_cells(
+        graph, args.parts, cells, launches,
+        overload_duration=0.5 if args.fast else 1.0)
     for r in rows:
         b = str(r["bucket"]) if r["bucket"] else "shared"
         if r["bucket"] == "overload":
@@ -276,6 +291,15 @@ def main(argv=None) -> int:
                 "localops", os.environ.get("REPRO_LOCALOPS", "auto")),
             "jax": sub_meta.get("jax"), "device": sub_meta.get("device")}
     payload = {"meta": meta, "rows": rows, "speedup": speedup}
+    if trace_sum is not None:
+        # span summary of the short traced session (separate server —
+        # the gated cells ran un-instrumented); informational only,
+        # compare.py ignores it
+        payload["trace_summary"] = trace_sum
+        print(f"[bench_serve] obs session: {trace_sum['spans_total']} "
+              f"spans, top p99: "
+              + ", ".join(f"{r['kind']}={r['p99_ms']:.2f}ms"
+                          for r in trace_sum["top_p99_ms"]))
     pathlib.Path(args.out).write_text(
         json.dumps(payload, indent=2) + "\n")
     print(f"[bench_serve] wrote {args.out} ({len(rows)} rows)")

@@ -38,7 +38,13 @@ All share the guards against false alarms:
   * rows present on only one side (new algorithms, new bucket rungs,
     dropped bench points) are reported but never fail;
   * a missing baseline (fresh clone, artifact not committed yet) is a
-    skip, not a failure.
+    skip, not a failure;
+  * observability blocks are INFORMATIONAL, never gated: a row's
+    ``telemetry`` dict (per-round probe series + tap-level wire bytes,
+    from ``repro.obs``) and a serve artifact's ``trace_summary`` are
+    ignored by the join and by every gate rule above — rows or
+    baselines without them compare exactly as before, so enabling or
+    refreshing telemetry can never flip this gate.
 
 ``scripts/ci.sh`` runs this right after the fast benches.  The
 committed artifacts are the baselines, so land refreshed rows in the
@@ -123,6 +129,9 @@ def config_changed(old_meta: dict, new_meta: dict) -> bool:
 # deterministic per-row fields gated WITHOUT the jitter floor: (field,
 # short label, absolute slack added on top of the ratio threshold).
 # Absent on either side (baseline predates the field) -> not compared.
+# A row's "telemetry" block is deliberately NOT here: its figures
+# (probe means, tap-level bytes, wall_ms) are informational context,
+# and the gated wire number stays the HLO-parsed wire_mb_per_part.
 DETERMINISTIC_FIELDS = (
     ("rounds_to_converge", "rounds", 2),
     ("wire_mb_per_part", "wire_mb", 0.01),

@@ -64,12 +64,19 @@ for _ in range(reps):
     out = prog(*args); jax.block_until_ready(out)
     times.append(time.perf_counter() - t0)
 times.sort()
+# separate telemetry build AFTER the timed reps (its own compile-cache
+# entry; the headline ms stays the un-instrumented number).  The summary
+# rides the row as INFORMATIONAL context — compare.py never gates on it.
+tprog = eng.program(algo, variant, telemetry=True, **params)
+tout = tprog(*args)
+telemetry = tprog.run_telemetry(tout[-1]).summary()
 print("RESULT " + json.dumps({{
     "graph": graph, "algo": algo, "mode": variant, "parts": parts,
     "ms": times[len(times)//2] * 1e3,
     "wire_bytes_per_part": wire,
     "rounds": int(out[-1]),
     "collective_counts": stats.counts,
+    "telemetry": telemetry,
 }}))
 """
 

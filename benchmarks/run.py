@@ -58,6 +58,10 @@ def write_bench_artifact(rows: list[dict], meta: dict,
         "ms": round(r["ms"], 2),
         "wire_mb_per_part": round(r["wire_bytes_per_part"] / 1e6, 3),
         "rounds_to_converge": r["rounds"],
+        # per-row engine-telemetry summary (per-round probe series +
+        # tap-level wire bytes) — INFORMATIONAL ONLY: compare.py never
+        # gates on it and tolerates rows without it (older baselines)
+        **({"telemetry": r["telemetry"]} if "telemetry" in r else {}),
     } for r in rows]
     pathlib.Path(out).write_text(
         json.dumps({"meta": meta, "rows": slim}, indent=2) + "\n")

@@ -44,6 +44,16 @@
 # must land on the exact epoch + edge multiset with probe answers
 # bit-identical to an uninterrupted reference run.  Like chaos, it is
 # its own lane in both modes.
+#
+# The `obs` marker is the observability acceptance drill
+# (tests/test_obs.py): a multi-device subprocess runs a short TRACED
+# serve session and schema-validates its exported Chrome trace
+# (matched async pairs, ordered tracks, proper nesting), asserts
+# telemetry-OFF builds stay bit-identical to the seed path, and runs
+# telemetry-ON programs through the NumPy-oracle gate at parts
+# {1, 2, 4}.  Its own lane in both modes; the in-process obs unit
+# tests (series parsing, span rings, exporter schema, registry drift)
+# ride tier-1.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -51,12 +61,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--markers" ]]; then
     echo "== tier-1: pytest -m 'tier1 or not slow' (fast lane: conformance + kernel parity) =="
-    python -m pytest -x -q -m "(tier1 or not slow) and not chaos and not durability"
+    python -m pytest -x -q -m "(tier1 or not slow) and not chaos and not durability and not obs"
     echo "== tier-2: pytest -m 'slow and not tier1' (subprocess / multi-device) =="
-    python -m pytest -q -m "slow and not tier1 and not chaos and not durability"
+    python -m pytest -q -m "slow and not tier1 and not chaos and not durability and not obs"
 else
     echo "== tier-1: pytest =="
-    python -m pytest -x -q -m "not chaos and not durability"
+    python -m pytest -x -q -m "not chaos and not durability and not obs"
 fi
 
 echo "== chaos lane: pytest -m chaos (seeded fault-injection sweep, parts {2,4}) =="
@@ -64,6 +74,9 @@ python -m pytest -q -m chaos
 
 echo "== durability lane: pytest -m durability (crash-point kill + recovery drills) =="
 python -m pytest -q -m durability
+
+echo "== obs lane: pytest -m obs (traced serve + schema-valid trace export + telemetry bit-identity/conformance) =="
+python -m pytest -q -m obs
 
 echo "== bench smoke: benchmarks.run --fast =="
 python -m benchmarks.run --fast

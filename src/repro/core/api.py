@@ -24,6 +24,7 @@ dry-run (core/dryrun.py) via :meth:`CompiledProgram.lower` /
 from __future__ import annotations
 
 import contextlib
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -36,6 +37,7 @@ from repro.core import faults as faults_mod
 from repro.core.compat import shard_map
 from repro.core.graph import GraphShards
 from repro.core.superstep import run_program, run_program_batched
+from repro.obs import telemetry as obs_telemetry
 
 P = jax.sharding.PartitionSpec
 
@@ -62,17 +64,42 @@ class CompiledProgram:
     """
 
     def __init__(self, spec, program, fn, abstract_args,
-                 guarded=False, faults=None):
+                 guarded=False, faults=None, telemetry=False, wire=None):
         self.spec = spec                  # registry ProgramSpec
         self.program = program            # SuperstepProgram instance
         self.fn = fn                      # jitted shard_map callable
         self.abstract_args = abstract_args
         self.guarded = guarded            # trailing ok output appended
         self.faults = faults              # FaultSchedule or None
+        self.telemetry = telemetry        # trailing series output appended
+        self.wire = wire                  # obs WireRecord (telemetry builds)
+        self.last_wall_s = 0.0            # telemetry-mode host wall-time
         self._aot = None
 
     def __call__(self, garr, *inputs):
-        return self.fn(garr, *inputs)
+        if not self.telemetry:
+            return self.fn(garr, *inputs)
+        # telemetry builds are MEASUREMENT mode: block on the result so
+        # the recorded wall-time covers the device work, not just the
+        # dispatch (documented perturbation — don't time the dispatch
+        # overlap through a telemetry build)
+        t0 = time.perf_counter()
+        out = self.fn(garr, *inputs)
+        jax.block_until_ready(out)
+        self.last_wall_s = time.perf_counter() - t0
+        return out
+
+    def run_telemetry(self, series) -> "obs_telemetry.RunTelemetry":
+        """Parse the trailing series output of a telemetry run into a
+        ``RunTelemetry`` carrying this build's trace-time wire snapshot
+        and the last ``__call__``'s wall-time."""
+        if not self.telemetry:
+            raise ValueError(f"{self.program.key} was not built with "
+                             "telemetry=True")
+        ps = obs_telemetry.PhaseSeries.from_array(
+            np.asarray(series), self.program.probe_names)
+        return obs_telemetry.RunTelemetry(
+            series=ps, wire=self.wire.snapshot(), wall_s=self.last_wall_s)
 
     def lower(self, *args):
         """AOT-lower; defaults to the engine's abstract arg shapes."""
@@ -107,7 +134,8 @@ class GraphEngine:
     def program(self, algo: str, variant: str | None = None, *,
                 static_iters: int = 0, batch: int | None = None,
                 exec_mode: str | None = None, guard: bool = False,
-                faults=None, **params) -> CompiledProgram:
+                faults=None, telemetry: bool = False,
+                **params) -> CompiledProgram:
         """Resolve, build, wrap and cache an algorithm program.
 
         ``static_iters > 0`` replaces the early-exit while loop with a
@@ -132,9 +160,19 @@ class GraphEngine:
         is also set.  Neither composes with ``batch``/``static_iters``
         (checkpointed recovery lives in ``core/recovery.py``).
 
+        ``telemetry=True`` compiles the per-round telemetry series in
+        (``core/superstep.py`` series block): ONE extra replicated
+        ``(max_rounds, 2 + K)`` f32 output is appended LAST, trace-time
+        wire bytes are captured on :attr:`CompiledProgram.wire`, and
+        ``__call__`` blocks on the result to measure host wall-time —
+        parse it all with :meth:`CompiledProgram.run_telemetry`.
+        Composes with ``guard``; like it, incompatible with ``batch``
+        and ``static_iters``.  ``telemetry=False`` builds are
+        bit-identical to pre-telemetry builds (asserted in tests).
+
         The cache key covers algo, variant, params, loop mode, exec
-        mode, guard/fault schedule, graph shapes and mesh, so repeated
-        calls return the same object and never re-trace.
+        mode, guard/fault schedule, telemetry, graph shapes and mesh,
+        so repeated calls return the same object and never re-trace.
         """
         bare = variant is None and "/" not in algo
         spec = registry.get_spec(algo, variant)
@@ -172,6 +210,15 @@ class GraphEngine:
             raise ValueError(
                 "guard/faults do not compose with batch: fault rounds "
                 "and guard verdicts are per-run, not per-lane")
+        if telemetry and static_iters:
+            raise ValueError(
+                "telemetry requires the while-loop driver; the "
+                "static_iters dry-run has no data-dependent rounds to "
+                "record")
+        if telemetry and batch is not None:
+            raise ValueError(
+                "telemetry does not compose with batch: the series is "
+                "per-run, not per-lane")
         # normalize params into full (defaults + overrides) form so an
         # explicitly spelled default hits the same cache entry; batched
         # builds additionally merge the spec's vmap-friendly overrides
@@ -187,7 +234,8 @@ class GraphEngine:
         # the bucket decomposition differs, and the traced per-bucket
         # loops would silently read the wrong rows on a stale cache hit
         key = (spec.algo, spec.variant, spec.exec_mode, static_iters,
-               batch, guard, schedule, tuple(sorted(params.items())),
+               batch, guard, schedule, telemetry,
+               tuple(sorted(params.items())),
                (g.n, g.n_orig, g.parts, g.n_local, g.e_max),
                g.layout_signature(),
                (tuple(self.mesh.shape.items()), self.mesh.devices.shape),
@@ -199,19 +247,30 @@ class GraphEngine:
         prog = spec.build(g, **params)
         n_inputs = len(spec.inputs)
         kinds = spec.input_kinds
+        wire = obs_telemetry.WireRecord() if telemetry else None
 
         def fn(garr, *inputs):
             garr = {k: v[0] for k, v in garr.items()}
             inputs = tuple(x[0] if kind != "scalar" else x
                            for x, kind in zip(inputs, kinds))
             # the fault context is entered INSIDE the traced fn so taps
-            # see the schedule at trace time (it's part of the cache key)
+            # see the schedule at trace time (it's part of the cache
+            # key); same for the telemetry wire recording — a retrace
+            # re-fills the SAME record (recording clears on entry)
             cm = faults_mod.active(schedule, detect=guard) \
                 if schedule is not None else contextlib.nullcontext()
-            with cm:
-                if guard:
-                    outs, rounds, ok = run_program(prog, garr, *inputs,
-                                                   guard=True)
+            tcm = obs_telemetry.recording(wire) if telemetry \
+                else contextlib.nullcontext()
+            ok = series = None
+            with cm, tcm:
+                if guard or telemetry:
+                    res = run_program(prog, garr, *inputs, guard=guard,
+                                      telemetry=telemetry)
+                    outs, rounds = res[0], res[1]
+                    if guard:
+                        ok = res[2]
+                    if telemetry:
+                        series = res[-1]
                 elif batch is None:
                     outs, rounds = run_program(prog, garr, *inputs,
                                                static_iters=static_iters)
@@ -220,13 +279,15 @@ class GraphEngine:
                         prog, garr, *inputs, static_iters=static_iters)
             shaped = tuple(o[None] if is_v else o
                            for o, is_v in zip(outs, prog.output_is_vertex))
-            tail = (rounds,) + ((ok.astype(jnp.int32),) if guard else ())
+            tail = (rounds,) + ((ok.astype(jnp.int32),) if guard else ()) \
+                + ((series,) if telemetry else ())
             return shaped + tail
 
         vspec = P("parts", None) if batch is None else P("parts", None, None)
         out_specs = tuple(vspec if is_v else P()
                           for is_v in prog.output_is_vertex) \
-            + ((P(), P()) if guard else (P(),))
+            + ((P(), P()) if guard else (P(),)) \
+            + ((P(),) if telemetry else ())
         in_specs = (_graph_specs(g, self.layout),) + tuple(
             P() if kind == "scalar" else P("parts", None) for kind in kinds)
         jitted = jax.jit(shard_map(
@@ -240,7 +301,8 @@ class GraphEngine:
                 _KIND_DTYPE[kind])
             for kind in kinds)
         compiled = CompiledProgram(spec, prog, jitted, abstract_args,
-                                   guarded=guard, faults=schedule)
+                                   guarded=guard, faults=schedule,
+                                   telemetry=telemetry, wire=wire)
         self._cache[key] = compiled
         return compiled
 

@@ -160,7 +160,8 @@ def bfs_bsp_program(shards, max_levels: int = 64) -> SuperstepProgram:
         halt=lambda state: state[2] <= 0,
         outputs=lambda state: (state[0],),
         output_names=("parents",), output_is_vertex=(True,),
-        max_rounds=max_levels, guard=_parents_guard(2))
+        max_rounds=max_levels, guard=_parents_guard(2),
+        probe_names=("frontier",), probe=lambda state: (state[2],))
 
 
 def bfs_fast_program(shards, max_levels: int = 64,
@@ -221,7 +222,8 @@ def bfs_fast_program(shards, max_levels: int = 64,
         halt=lambda state: state[3] <= 0,
         outputs=lambda state: (state[0],),
         output_names=("parents",), output_is_vertex=(True,),
-        max_rounds=max_levels, guard=_parents_guard(3))
+        max_rounds=max_levels, guard=_parents_guard(3),
+        probe_names=("frontier",), probe=lambda state: (state[3],))
 
 
 def bfs_async_program(shards, max_levels: int = 64,

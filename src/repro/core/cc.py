@@ -88,6 +88,7 @@ def cc_program(shards, max_rounds: int = 64,
         inputs=("labels0",) if seeded else (),
         init=init, step=step,
         halt=lambda state: state[1] <= 0,
+        probe_names=("changed",), probe=lambda state: (state[1],),
         outputs=lambda state: (state[0],),
         output_names=("labels",), output_is_vertex=(True,),
         max_rounds=max_rounds, guard=guard)

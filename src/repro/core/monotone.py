@@ -132,4 +132,6 @@ def monotone_async_program(*, name: str, variant: str = "async",
         outputs=lambda g, state: outputs(g, state[0]),
         output_names=tuple(output_names),
         output_is_vertex=tuple(output_is_vertex),
-        max_rounds=max_rounds, guard=guard, **kwargs)
+        max_rounds=max_rounds, guard=guard,
+        probe_names=("changed",), probe=lambda state: (state[3],),
+        **kwargs)

@@ -93,6 +93,7 @@ def pagerank_bsp_program(shards, iters: int = 50,
         name="pagerank", variant="bsp", inputs=(),
         init=init, step=step,
         halt=lambda state: state[1] <= tol,
+        probe_names=("err",), probe=lambda state: (state[1],),
         outputs=lambda state: (state[0], state[1]),
         output_names=("rank", "err"), output_is_vertex=(True, False),
         max_rounds=iters, guard=guard)
@@ -196,6 +197,7 @@ def pagerank_fast_program(shards, iters: int = 50,
         inputs=("rank0",) if seeded else (),
         init=init, step=step,
         halt=lambda state: state[2] <= tol,
+        probe_names=("err",), probe=lambda state: (state[2],),
         outputs=lambda state: (state[0], state[2]),
         output_names=("rank", "err"), output_is_vertex=(True, False),
         max_rounds=iters, guard=guard)
@@ -307,6 +309,7 @@ def pagerank_async_program(shards, iters: int = 64, tol: float = 1e-6,
         name="pagerank", variant="async", inputs=(),
         init=init, local=local, fold=fold,
         halt=lambda state: state[4] <= tol,
+        probe_names=("err",), probe=lambda state: (state[4],),
         outputs=lambda g, state: (state[0], state[4], state[8]),
         output_names=("rank", "err", "max_age"),
         output_is_vertex=(True, False, False),

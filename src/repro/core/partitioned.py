@@ -26,14 +26,16 @@ the frontier-pull kernels.
 All exchange functions are meant to be called INSIDE shard_map over
 axis "parts".
 
-Every primitive routes its OUTGOING payload through ``faults.tap``
-before the collective — the deterministic chaos-injection point (see
-``core/faults.py``; a Python-level no-op unless a schedule is armed).
-Ops: ``sum`` / ``min`` / ``or`` / ``bcast``; the blocking and
-double-buffered forms share op names so one schedule addresses both
-execution modes.  ``psum_scalar`` is NOT tapped: the BSP halt scalar is
-control plane, not payload — async programs piggyback their halt count
-on the data exchange, where it IS faultable.
+Every primitive routes its OUTGOING payload through ``_tap`` before
+the collective — first the telemetry wire tap (``obs/telemetry.py``
+byte accounting at trace time), then the deterministic chaos-injection
+point (see ``core/faults.py``); both are Python-level no-ops unless
+armed.  Ops: ``sum`` / ``min`` / ``or`` / ``bcast``; the blocking and
+double-buffered forms share op names so one schedule (or one wire
+report) addresses both execution modes.  ``psum_scalar`` is NOT
+tapped: the BSP halt scalar is control plane, not payload — async
+programs piggyback their halt count on the data exchange, where it IS
+faultable (and counted).
 """
 
 from __future__ import annotations
@@ -45,8 +47,20 @@ import jax.numpy as jnp
 
 from repro.core import faults
 from repro.core.compat import axis_size
+from repro.obs import telemetry as obs_telemetry
 
 AXIS = "parts"
+
+
+def _tap(op: str, payload, axis_name: str):
+    """Every exchange routes its outgoing payload through here: the
+    telemetry wire tap first (trace-time byte accounting, a no-op
+    unless ``obs.telemetry.recording`` is armed), then the chaos-
+    injection tap (``faults.tap``, a no-op unless a schedule is armed).
+    Both read the payload the collective actually ships, so the byte
+    figure telemetry reports is the post-packing wire size."""
+    obs_telemetry.tap_wire(op, payload)
+    return faults.tap(op, payload, axis_name)
 
 
 def pack_bits(bits):
@@ -84,7 +98,7 @@ def exchange_sum(acc_global, axis_name: str = AXIS):
     owns.  One reduce-scatter on the wire: (P-1)/P * n elements.
     """
     parts = axis_size(axis_name)
-    blocks = faults.tap("sum", acc_global.reshape(parts, -1), axis_name)
+    blocks = _tap("sum", acc_global.reshape(parts, -1), axis_name)
     return jax.lax.psum_scatter(blocks, axis_name, scatter_dimension=0,
                                 tiled=False).reshape(-1)
 
@@ -99,7 +113,7 @@ def exchange_or(mask_global, axis_name: str = AXIS):
     """
     parts = axis_size(axis_name)
     n_local_words = mask_global.shape[0] // parts // 32
-    packed = faults.tap(
+    packed = _tap(
         "or", pack_bits(mask_global).reshape(parts, n_local_words),
         axis_name)
     rows = jax.lax.all_to_all(
@@ -117,7 +131,7 @@ def exchange_min_int(val_global, axis_name: str = AXIS, big=None):
     that owners receive P candidate rows; min over the row axis.
     """
     parts = axis_size(axis_name)
-    blocks = faults.tap("min", val_global.reshape(parts, -1), axis_name)
+    blocks = _tap("min", val_global.reshape(parts, -1), axis_name)
     rows = jax.lax.all_to_all(blocks.reshape(parts, 1, -1), axis_name,
                               split_axis=0,
                               concat_axis=1)          # (1, P, n_local)
@@ -126,7 +140,7 @@ def exchange_min_int(val_global, axis_name: str = AXIS, big=None):
 
 def broadcast_global(local_vals, axis_name: str = AXIS):
     """(n_local,) -> (n,) full replica (all-gather)."""
-    return jax.lax.all_gather(faults.tap("bcast", local_vals, axis_name),
+    return jax.lax.all_gather(_tap("bcast", local_vals, axis_name),
                               axis_name, axis=0, tiled=True)
 
 
@@ -166,7 +180,7 @@ def exchange_min_start(val_global, scalar, axis_name: str = AXIS):
     parts = axis_size(axis_name)
     n_local = val_global.shape[0] // parts
     blocks = val_global.reshape(parts, n_local)
-    payload = faults.tap("min", jnp.concatenate(
+    payload = _tap("min", jnp.concatenate(
         [blocks, jnp.full((parts, 1), scalar, blocks.dtype)], axis=1),
         axis_name)
     return jax.lax.all_to_all(payload.reshape(parts, 1, n_local + 1),
@@ -189,7 +203,7 @@ def exchange_sum_start(acc_global, scalar, axis_name: str = AXIS):
     parts = axis_size(axis_name)
     n_local = acc_global.shape[0] // parts
     blocks = acc_global.reshape(parts, n_local)
-    payload = faults.tap("sum", jnp.concatenate(
+    payload = _tap("sum", jnp.concatenate(
         [blocks, jnp.full((parts, 1), scalar, blocks.dtype)], axis=1),
         axis_name)
     return jax.lax.psum_scatter(payload, axis_name, scatter_dimension=0,
@@ -210,7 +224,7 @@ def exchange_or_start(mask_global, scalar, axis_name: str = AXIS):
     parts = axis_size(axis_name)
     n_local_words = mask_global.shape[0] // parts // 32
     blocks = pack_bits(mask_global).reshape(parts, n_local_words)
-    payload = faults.tap("or", jnp.concatenate(
+    payload = _tap("or", jnp.concatenate(
         [blocks, jnp.full((parts, 1), scalar, jnp.uint32)], axis=1),
         axis_name)
     return jax.lax.all_to_all(payload.reshape(parts, 1, n_local_words + 1),

@@ -52,6 +52,8 @@ from repro.core.api import _graph_specs
 from repro.core.compat import shard_map
 from repro.core.superstep import PhasedProgram, carry_outputs, init_carry, \
     run_chunk
+from repro.obs import telemetry as obs_telemetry
+from repro.obs.spans import NULL_RECORDER
 
 P = jax.sharding.PartitionSpec
 
@@ -101,6 +103,7 @@ class RunReport:
     detections: tuple = ()
     checkpoints: int = 0
     history: tuple = ()
+    telemetry: dict | None = None
 
 
 class CheckpointRunner:
@@ -124,7 +127,7 @@ class CheckpointRunner:
     def __init__(self, engine, algo: str, variant: str | None = None, *,
                  checkpoint_every: int = 2, faults=None,
                  max_recoveries: int = 16, keep_history: bool = False,
-                 **params):
+                 telemetry: bool = False, obs=None, **params):
         if checkpoint_every < 1:
             raise ValueError(
                 f"checkpoint_every must be >= 1, got {checkpoint_every}")
@@ -134,6 +137,15 @@ class CheckpointRunner:
         self.checkpoint_every = int(checkpoint_every)
         self.max_recoveries = int(max_recoveries)
         self.keep_history = bool(keep_history)
+        # telemetry rides the carry as carry[4] (see superstep series
+        # block): it checkpoints and rolls back with the state, so a
+        # recovered run's series has no rows from discarded chunks.
+        # ``obs`` is a SpanRecorder: chunk spans plus checkpoint /
+        # fault_detection / rollback instant events on the recovery
+        # track (NULL_RECORDER = off, the default).
+        self.telemetry = bool(telemetry)
+        self.wire = obs_telemetry.WireRecord() if telemetry else None
+        self.obs = obs if obs is not None else NULL_RECORDER
         prog = self.spec.build(engine.g, **params)
         self.program = prog
         self.phases = prog.phases if isinstance(prog, PhasedProgram) \
@@ -167,7 +179,8 @@ class CheckpointRunner:
                 ins = tuple(x[0] if kind != "scalar" else x
                             for x, kind in zip(inputs, kinds))
                 with self._ctx(faulty):
-                    return _wrap(init_carry(prog, garr, *ins))
+                    return _wrap(init_carry(prog, garr, *ins,
+                                            telemetry=self.telemetry))
 
             in_specs = (self._gspecs,) + tuple(
                 P() if kind == "scalar" else P("parts", None)
@@ -179,7 +192,8 @@ class CheckpointRunner:
                 garr = {k: v[0] for k, v in garr.items()}
                 ins = tuple(x[0] for x in chained)
                 with self._ctx(faulty):
-                    return _wrap(init_carry(prog, garr, *ins))
+                    return _wrap(init_carry(prog, garr, *ins,
+                                            telemetry=self.telemetry))
 
             n_prev = len(self.phases[pi - 1].output_names)
             in_specs = (self._gspecs,) + (P("parts"),) * n_prev
@@ -196,7 +210,11 @@ class CheckpointRunner:
 
         def fn(garr, carry):
             garr = {k2: v[0] for k2, v in garr.items()}
-            with self._ctx(faulty):
+            # arm the wire record during the chunk trace: the chunk body
+            # IS the per-round loop, so its taps are the per-round bytes
+            tcm = obs_telemetry.recording(self.wire) if self.telemetry \
+                else contextlib.nullcontext()
+            with self._ctx(faulty), tcm:
                 carry2, halted = run_chunk(prog, garr, _unwrap(carry), k)
             return _wrap((carry2, halted))
 
@@ -246,7 +264,11 @@ class CheckpointRunner:
             carry = self._init_piece(pi, True)(garr, *inputs)
             if not self._ok(carry):
                 stats["detections"].append(self._rounds(carry))
+                self.obs.event("fault_detection", "recovery", phase=pi,
+                               round=self._rounds(carry))
                 self._bump(stats)
+                self.obs.event("rollback", "recovery", phase=pi,
+                               to_rounds=0)
                 carry = self._init_piece(pi, False)(garr, *inputs)
                 if not self._ok(carry):
                     raise RecoveryError(
@@ -254,24 +276,37 @@ class CheckpointRunner:
                         f"still violates guards")
         ck = self._snapshot(pi, carry)
         stats["checkpoints"] += 1
+        self.obs.event("checkpoint", "recovery", phase=pi,
+                       rounds=ck.rounds)
         if self.keep_history:
             stats["history"].append(ck)
         while True:
             r0 = self._rounds(carry)
-            nxt, halted = self._chunk_piece(pi, True)(garr, carry)
-            if not self._ok(nxt):
-                stats["detections"].append(self._rounds(nxt))
-                self._bump(stats)
-                carry = self._restore(ck.carry)
-                nxt, halted = self._chunk_piece(pi, False)(garr, carry)
+            with self.obs.span("chunk", "recovery", phase=pi,
+                               from_round=r0) as chunk_span:
+                nxt, halted = self._chunk_piece(pi, True)(garr, carry)
                 if not self._ok(nxt):
-                    raise RecoveryError(
-                        f"{self.spec.key} phase {pi}: guard violation at "
-                        f"round {self._rounds(nxt)} persists on clean "
-                        f"replay from the round-{ck.rounds} checkpoint")
-            carry = nxt
+                    stats["detections"].append(self._rounds(nxt))
+                    self.obs.event("fault_detection", "recovery",
+                                   phase=pi, round=self._rounds(nxt))
+                    self._bump(stats)
+                    self.obs.event("rollback", "recovery", phase=pi,
+                                   to_rounds=ck.rounds)
+                    carry = self._restore(ck.carry)
+                    nxt, halted = self._chunk_piece(pi, False)(garr,
+                                                               carry)
+                    if not self._ok(nxt):
+                        raise RecoveryError(
+                            f"{self.spec.key} phase {pi}: guard "
+                            f"violation at round {self._rounds(nxt)} "
+                            f"persists on clean replay from the "
+                            f"round-{ck.rounds} checkpoint")
+                carry = nxt
+                chunk_span.args["to_round"] = self._rounds(carry)
             ck = self._snapshot(pi, carry)
             stats["checkpoints"] += 1
+            self.obs.event("checkpoint", "recovery", phase=pi,
+                           rounds=ck.rounds)
             if self.keep_history:
                 stats["history"].append(ck)
             if bool(np.asarray(halted)[0]) or self._rounds(carry) == r0:
@@ -299,20 +334,33 @@ class CheckpointRunner:
         total = 0
         chained = inputs
         carry = None
+        series_rows = []
         for pi in range(start, len(self.phases)):
             resume = resume_from if (resume_from is not None
                                      and pi == start) else None
             carry = self._run_phase(pi, garr, chained, stats, resume)
             total += self._rounds(carry)
+            if self.telemetry:
+                # wrapped global series: (P, max_rounds, 2 + K),
+                # replicated — any part's copy is the run's series
+                series_rows.append(np.asarray(carry[4])[0])
             if pi + 1 < len(self.phases):
                 chained = self._out_piece(pi)(garr, carry)
         outs = self._out_piece(len(self.phases) - 1)(garr, carry)
         host = tuple(
             np.asarray(o) if is_v else np.asarray(o)[0]
             for o, is_v in zip(outs, self.program.output_is_vertex))
+        telemetry = None
+        if self.telemetry:
+            ps = obs_telemetry.PhaseSeries.from_array(
+                np.concatenate(series_rows, axis=0),
+                self.program.probe_names)
+            telemetry = obs_telemetry.RunTelemetry(
+                series=ps, wire=self.wire.snapshot()).summary()
         return RunReport(
             outputs=host, rounds=total,
             recoveries=stats["recoveries"],
             detections=tuple(stats["detections"]),
             checkpoints=stats["checkpoints"],
-            history=tuple(stats["history"]))
+            history=tuple(stats["history"]),
+            telemetry=telemetry)

@@ -91,6 +91,7 @@ def sssp_program(shards, max_rounds: int = 64,
         name="sssp", variant="default", inputs=("root",),
         prepare=prepare, init=init, step=step,
         halt=lambda state: state[2] <= 0,
+        probe_names=("changed",), probe=lambda state: (state[2],),
         outputs=lambda state: (state[0],),
         output_names=("dist",), output_is_vertex=(True,),
         max_rounds=max_rounds, guard=guard)

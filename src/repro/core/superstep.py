@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from repro.core import faults
 from repro.core.compat import axis_size
 from repro.core.partitioned import AXIS, psum_scalar
+from repro.obs import telemetry as obs_tel
 
 
 @dataclass(frozen=True)
@@ -69,6 +70,12 @@ class SuperstepProgram:
                              non-negativity).  ``None`` falls back to
                              the NaN/Inf screen over float state leaves.
                              Compiled in only under ``guard=True`` runs.
+      probe(state) -> tuple  optional telemetry probes, aligned with
+                             ``probe_names``: globally-uniform scalars
+                             (frontier size, residual — values the step
+                             already reduced) recorded per round into
+                             the telemetry series.  Compiled in only
+                             under ``telemetry=True`` runs.
     """
 
     name: str
@@ -83,6 +90,8 @@ class SuperstepProgram:
     max_rounds: int = 64
     prepare: Callable[[dict], dict] = field(default=lambda g: g)
     guard: Callable[[dict, Any, Any], Any] | None = None
+    probe_names: tuple[str, ...] = ()
+    probe: Callable[[Any], tuple] | None = None
 
     @property
     def key(self) -> str:
@@ -146,10 +155,48 @@ class AsyncSuperstepProgram:
     max_rounds: int = 64
     prepare: Callable[[dict], dict] = field(default=lambda g: g)
     guard: Callable[[dict, Any, Any], Any] | None = None
+    probe_names: tuple[str, ...] = ()
+    probe: Callable[[Any], tuple] | None = None
 
     @property
     def key(self) -> str:
         return f"{self.name}/{self.variant}"
+
+
+# --------------------------------------------------------------------------
+# Telemetry series.  Under ``telemetry=True`` the while-loop drivers
+# append a zero-initialised ``(max_rounds, 2 + len(probe_names))`` f32
+# buffer to the carry and write one row per executed round:
+#
+#     [done, halted, *probes]
+#
+# ``done`` = 1.0 marks rows a round actually wrote — round counts are
+# only known on device, so the host (obs.telemetry.PhaseSeries) trims on
+# this column; it is also what lets a PhasedProgram concatenate phase
+# buffers (zero gaps between phases are simply invalid rows).  ``halted``
+# is the halt predicate evaluated on the round's resulting state;
+# ``probes`` are the program's declared globally-uniform scalars.  The
+# telemetry-off path carries ``()`` in the series slot, which adds no
+# leaves to the traced loop — outputs stay bit-identical.
+# --------------------------------------------------------------------------
+
+
+def _series_init(prog):
+    return jnp.zeros((prog.max_rounds, 2 + len(prog.probe_names)),
+                     jnp.float32)
+
+
+def _series_write(prog, series, r, state):
+    halted = jnp.asarray(prog.halt(state)).astype(jnp.float32).reshape(())
+    probes = tuple(prog.probe(state)) if prog.probe is not None else ()
+    if len(probes) != len(prog.probe_names):
+        raise ValueError(
+            f"{prog.key}: probe() returned {len(probes)} values for "
+            f"probe_names {prog.probe_names!r}")
+    row = jnp.stack(
+        [jnp.float32(1.0), halted]
+        + [jnp.asarray(p).astype(jnp.float32).reshape(()) for p in probes])
+    return series.at[r].set(row)
 
 
 # --------------------------------------------------------------------------
@@ -183,7 +230,8 @@ def _round_ok(prog, g, prev, state):
 
 
 def run_program_async(prog: AsyncSuperstepProgram, g: dict, *inputs,
-                      static_iters: int = 0, guard: bool = False):
+                      static_iters: int = 0, guard: bool = False,
+                      telemetry: bool = False):
     """The double-buffered driver: same ``(outputs, rounds)`` contract
     as :func:`run_program`, same while/scan split, but each round is
     ``local`` (overlap window) then ``fold`` (finish + restart the
@@ -192,9 +240,14 @@ def run_program_async(prog: AsyncSuperstepProgram, g: dict, *inputs,
     Fault-round addressing: the exchange issued by ``init`` is round 0;
     the one started in body iteration ``r`` is round ``r + 1`` (the
     (k+1)-th exchange started is round k+1).  With ``guard=True`` the
-    return is ``(outputs, rounds, ok)``.
+    return gains ``ok``; with ``telemetry=True`` it gains the series
+    buffer (always LAST): ``(outputs, rounds[, ok][, series])``.
     """
+    if telemetry and static_iters:
+        raise ValueError("telemetry requires the while-loop driver "
+                         "(static_iters=0)")
     g = prog.prepare(g)
+    obs_tel.phase("init")
     faults.set_round(jnp.int32(0))
     state0, handle0 = prog.init(g, *inputs)
 
@@ -205,47 +258,44 @@ def run_program_async(prog: AsyncSuperstepProgram, g: dict, *inputs,
             state, handle = prog.fold(g, prog.local(g, state), handle)
             return (state, handle, r + 1), None
 
+        obs_tel.phase("round")
         (state, _, rounds), _ = jax.lax.scan(
             sbody, (state0, handle0, jnp.int32(0)), None,
             length=static_iters)
         faults.set_round(jnp.int32(-1))   # outputs are not addressable
+        obs_tel.phase("outputs")
         return prog.outputs(g, state), rounds
 
-    if guard:
-        ok0 = _round_ok(prog, g, state0, state0)
-
-        def gcond(carry):
-            state, _, r, ok = carry
-            return ok & jnp.logical_not(prog.halt(state)) \
-                & (r < prog.max_rounds)
-
-        def gbody(carry):
-            state, handle, r, ok = carry
-            faults.set_round(r + 1)
-            prev = state
-            state, handle = prog.fold(g, prog.local(g, state), handle)
-            return state, handle, r + 1, ok & _round_ok(prog, g, prev,
-                                                        state)
-
-        state, _, rounds, ok = jax.lax.while_loop(
-            gcond, gbody, (state0, handle0, jnp.int32(0), ok0))
-        faults.set_round(jnp.int32(-1))
-        return prog.outputs(g, state), rounds, ok
+    ok0 = _round_ok(prog, g, state0, state0) if guard else ()
+    series0 = _series_init(prog) if telemetry else ()
 
     def cond(carry):
-        state, _, r = carry
-        return jnp.logical_not(prog.halt(state)) & (r < prog.max_rounds)
+        state, _, r, ok, _series = carry
+        live = jnp.logical_not(prog.halt(state)) & (r < prog.max_rounds)
+        return (ok & live) if guard else live
 
     def body(carry):
-        state, handle, r = carry
+        state, handle, r, ok, series = carry
         faults.set_round(r + 1)
+        prev = state
         state, handle = prog.fold(g, prog.local(g, state), handle)
-        return state, handle, r + 1
+        if guard:
+            ok = ok & _round_ok(prog, g, prev, state)
+        if telemetry:
+            series = _series_write(prog, series, r, state)
+        return state, handle, r + 1, ok, series
 
-    state, _, rounds = jax.lax.while_loop(
-        cond, body, (state0, handle0, jnp.int32(0)))
+    obs_tel.phase("round")
+    state, _, rounds, ok, series = jax.lax.while_loop(
+        cond, body, (state0, handle0, jnp.int32(0), ok0, series0))
     faults.set_round(jnp.int32(-1))
-    return prog.outputs(g, state), rounds
+    obs_tel.phase("outputs")
+    res = (prog.outputs(g, state), rounds)
+    if guard:
+        res += (ok,)
+    if telemetry:
+        res += (series,)
+    return res
 
 
 @dataclass(frozen=True)
@@ -276,33 +326,59 @@ class PhasedProgram:
     def key(self) -> str:
         return f"{self.name}/{self.variant}"
 
+    @property
+    def probe_names(self) -> tuple[str, ...]:
+        """Telemetry probes of a phased program: the phases share ONE
+        series buffer layout, so every phase must declare the same
+        probe names (phase 0's are canonical)."""
+        names = self.phases[0].probe_names
+        for ph in self.phases[1:]:
+            if ph.probe_names != names:
+                raise ValueError(
+                    f"{self.key}: phases declare different probe_names "
+                    f"({names!r} vs {ph.probe_names!r}); telemetry "
+                    "needs one row layout")
+        return names
+
 
 def run_phases(prog: PhasedProgram, g: dict, *inputs,
-               static_iters: int = 0, guard: bool = False):
+               static_iters: int = 0, guard: bool = False,
+               telemetry: bool = False):
     """Chain the phases of a :class:`PhasedProgram`: phase ``i+1`` is
     initialized with phase ``i``'s outputs.  Returns the last phase's
     outputs and the TOTAL round count (each phase runs ``static_iters``
     supersteps on the scan path, so the total is ``len(phases) *
     static_iters`` there).  Fault rounds address each phase's own
     counter (a round-2 event fires in EVERY phase's round 2).  Under
-    ``guard=True`` the per-phase ok scalars AND together."""
+    ``guard=True`` the per-phase ok scalars AND together.  Under
+    ``telemetry=True`` the per-phase series buffers concatenate (valid
+    rows stay marked by the ``done`` column; the host trims)."""
+    if telemetry:
+        prog.probe_names        # raises if phases disagree on layout
     chained = inputs
     total = jnp.int32(0)
     ok = jnp.bool_(True)
+    series_parts = []
     for phase in prog.phases:
         res = run_program(phase, g, *chained, static_iters=static_iters,
-                          guard=guard)
+                          guard=guard, telemetry=telemetry)
+        if telemetry:
+            series_parts.append(res[-1])
+            res = res[:-1]
         if guard:
             chained, rounds, phase_ok = res
             ok = ok & phase_ok
         else:
             chained, rounds = res
         total = total + rounds
-    return (chained, total, ok) if guard else (chained, total)
+    out = (chained, total) + ((ok,) if guard else ())
+    if telemetry:
+        out += (jnp.concatenate(series_parts, axis=0),)
+    return out
 
 
 def run_program(prog, g: dict, *inputs, static_iters: int = 0,
-                guard: bool = False):
+                guard: bool = False, telemetry: bool = False):
     """The ONE shared superstep driver (call inside shard_map).
 
     Returns ``(outputs_tuple, rounds)`` where ``rounds`` is the number of
@@ -315,16 +391,27 @@ def run_program(prog, g: dict, *inputs, static_iters: int = 0,
     and the return becomes ``(outputs_tuple, rounds, ok)``.  Not
     supported on the ``static_iters`` scan path (the dry-run costs a
     clean loop).
+
+    ``telemetry=True`` compiles the per-round series write in (see the
+    series block above) and appends the ``(max_rounds, 2 + K)`` buffer
+    as the LAST return element.  Composes with ``guard``; like it,
+    incompatible with ``static_iters``.  The off path carries ``()`` in
+    the series slot — zero extra leaves, bit-identical outputs.
     """
     if guard and static_iters:
         raise ValueError("guard=True is incompatible with static_iters")
+    if telemetry and static_iters:
+        raise ValueError("telemetry requires the while-loop driver "
+                         "(static_iters=0)")
     if isinstance(prog, PhasedProgram):
         return run_phases(prog, g, *inputs, static_iters=static_iters,
-                          guard=guard)
+                          guard=guard, telemetry=telemetry)
     if isinstance(prog, AsyncSuperstepProgram):
         return run_program_async(prog, g, *inputs,
-                                 static_iters=static_iters, guard=guard)
+                                 static_iters=static_iters, guard=guard,
+                                 telemetry=telemetry)
     g = prog.prepare(g)
+    obs_tel.phase("init")
     faults.set_round(jnp.int32(0))
     state0 = prog.init(g, *inputs)
 
@@ -334,42 +421,42 @@ def run_program(prog, g: dict, *inputs, static_iters: int = 0,
             faults.set_round(r)
             return (prog.step(g, state), r + 1), None
 
+        obs_tel.phase("round")
         (state, rounds), _ = jax.lax.scan(
             sbody, (state0, jnp.int32(0)), None, length=static_iters)
         faults.set_round(jnp.int32(-1))   # outputs are not addressable
+        obs_tel.phase("outputs")
         return prog.outputs(state), rounds
 
-    if guard:
-        ok0 = _round_ok(prog, g, state0, state0)
-
-        def gcond(carry):
-            state, r, ok = carry
-            return ok & jnp.logical_not(prog.halt(state)) \
-                & (r < prog.max_rounds)
-
-        def gbody(carry):
-            state, r, ok = carry
-            faults.set_round(r)
-            new = prog.step(g, state)
-            return new, r + 1, ok & _round_ok(prog, g, state, new)
-
-        state, rounds, ok = jax.lax.while_loop(
-            gcond, gbody, (state0, jnp.int32(0), ok0))
-        faults.set_round(jnp.int32(-1))
-        return prog.outputs(state), rounds, ok
+    ok0 = _round_ok(prog, g, state0, state0) if guard else ()
+    series0 = _series_init(prog) if telemetry else ()
 
     def cond(carry):
-        state, r = carry
-        return jnp.logical_not(prog.halt(state)) & (r < prog.max_rounds)
+        state, r, ok, _series = carry
+        live = jnp.logical_not(prog.halt(state)) & (r < prog.max_rounds)
+        return (ok & live) if guard else live
 
     def body(carry):
-        state, r = carry
+        state, r, ok, series = carry
         faults.set_round(r)
-        return prog.step(g, state), r + 1
+        new = prog.step(g, state)
+        if guard:
+            ok = ok & _round_ok(prog, g, state, new)
+        if telemetry:
+            series = _series_write(prog, series, r, new)
+        return new, r + 1, ok, series
 
-    state, rounds = jax.lax.while_loop(cond, body, (state0, jnp.int32(0)))
+    obs_tel.phase("round")
+    state, rounds, ok, series = jax.lax.while_loop(
+        cond, body, (state0, jnp.int32(0), ok0, series0))
     faults.set_round(jnp.int32(-1))
-    return prog.outputs(state), rounds
+    obs_tel.phase("outputs")
+    res = (prog.outputs(state), rounds)
+    if guard:
+        res += (ok,)
+    if telemetry:
+        res += (series,)
+    return res
 
 
 def run_program_batched(prog, g: dict, *batched_inputs,
@@ -411,13 +498,16 @@ def run_program_batched(prog, g: dict, *batched_inputs,
 # --------------------------------------------------------------------------
 
 
-def init_carry(prog, g: dict, *inputs):
+def init_carry(prog, g: dict, *inputs, telemetry: bool = False):
     """Build the initial checkpointable carry ``(state, handle, rounds,
     ok)`` — prepare + init + the round-0 verdict (init-time exchanges
     are fault-addressable as round 0, so a tainted init reports
     ``ok=False`` and the caller re-inits clean rather than checkpointing
-    poison)."""
+    poison).  ``telemetry=True`` appends the series buffer as carry[4]
+    — it checkpoints, rolls back, and restores like any state leaf, so
+    a recovered run's series has no rows from discarded chunks."""
     g = prog.prepare(g)
+    obs_tel.phase("init")
     faults.set_round(jnp.int32(0))
     if isinstance(prog, AsyncSuperstepProgram):
         state0, handle0 = prog.init(g, *inputs)
@@ -425,7 +515,8 @@ def init_carry(prog, g: dict, *inputs):
         state0 = prog.init(g, *inputs)
         handle0 = ()
     ok0 = _round_ok(prog, g, state0, state0)
-    return state0, handle0, jnp.int32(0), ok0
+    base = (state0, handle0, jnp.int32(0), ok0)
+    return base + (_series_init(prog),) if telemetry else base
 
 
 def run_chunk(prog, g: dict, carry, chunk: int):
@@ -434,18 +525,21 @@ def run_chunk(prog, g: dict, carry, chunk: int):
     Exits early on halt, ``max_rounds``, or the first violated round
     (sticky ``ok``).  Returns ``(carry, halted)``; the caller inspects
     ``carry[3]`` (ok) to decide checkpoint vs rollback and ``halted`` /
-    ``carry[2]`` (rounds) to decide whether to keep chunking.
+    ``carry[2]`` (rounds) to decide whether to keep chunking.  A
+    5-element carry (from ``init_carry(telemetry=True)``) carries the
+    telemetry series and writes its row each round.
     """
     g = prog.prepare(g)
     is_async = isinstance(prog, AsyncSuperstepProgram)
+    telemetry = len(carry) == 5
 
     def cond(c):
-        (state, _, r, ok), i = c
+        (state, _, r, ok, *_), i = c
         return ok & jnp.logical_not(prog.halt(state)) \
             & (i < chunk) & (r < prog.max_rounds)
 
     def body(c):
-        (state, handle, r, ok), i = c
+        (state, handle, r, ok, *rest), i = c
         faults.set_round(r + 1 if is_async else r)
         prev = state
         if is_async:
@@ -453,8 +547,12 @@ def run_chunk(prog, g: dict, carry, chunk: int):
         else:
             state = prog.step(g, state)
         ok = ok & _round_ok(prog, g, prev, state)
-        return (state, handle, r + 1, ok), i + 1
+        new = (state, handle, r + 1, ok)
+        if telemetry:
+            new += (_series_write(prog, rest[0], r, state),)
+        return new, i + 1
 
+    obs_tel.phase("round")
     carry, _ = jax.lax.while_loop(cond, body, (carry, jnp.int32(0)))
     faults.set_round(jnp.int32(-1))
     return carry, jnp.asarray(prog.halt(carry[0]), bool)

@@ -36,9 +36,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import faults
 from repro.core.compat import axis_size
-from repro.core.partitioned import AXIS, psum_scalar
+from repro.core.partitioned import AXIS, _tap, psum_scalar
 from repro.core.superstep import SuperstepProgram
 
 
@@ -103,7 +102,7 @@ def triangles_program(n: int, n_local: int) -> SuperstepProgram:
         contrib = (gate * common).sum(axis=1)
         tri2 = tri2 + jnp.where(r < p, contrib, 0.0)  # no-op past P rounds
         block = jax.lax.ppermute(
-            faults.tap("perm", block), AXIS,
+            _tap("perm", block, AXIS), AXIS,
             [(i, (i + 1) % p) for i in range(p)])
         return block, tri2, r + 1
 

@@ -11,6 +11,9 @@ per launch) and reports per-query amortized time — the
 serve-many-queries scenario.  ``--layout coo`` is the escape hatch back
 to the COO scatter reference path (the default ``ell`` routes every
 hot loop through the blocked-ELL local ops in ``core/localops.py``).
+``--obs`` re-runs each program with engine telemetry on (per-round
+halt/probe series + wire bytes per exchange primitive, ``repro.obs``)
+and ``--trace-out trace.json`` exports those runs as a Chrome trace.
 
   PYTHONPATH=src python -m repro.launch.graph_analytics --graph urand18
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -33,6 +36,7 @@ from repro.core import GraphEngine, incremental, partition_graph, registry
 from repro.core.registry import program_label
 from repro.graphs import generate_edges
 from repro.launch.mesh import make_graph_mesh
+from repro.obs import chrome_trace, write_trace
 
 def _timed(fn, args):
     out = fn(*args)               # compile
@@ -45,7 +49,8 @@ def _timed(fn, args):
 
 def run(graph_name: str, parts: int, *, pr_iters: int = 50,
         verify: bool = True, seed: int = 42, multi_source: int = 0,
-        layout: str = "ell", exec_mode: str = "all"):
+        layout: str = "ell", exec_mode: str = "all", obs: bool = False,
+        trace_out: str | None = None):
     from repro.core import localops
     gcfg = graph_workloads.ALL[graph_name]
     print(f"[graph] generating {graph_name}: 2^{gcfg.scale} vertices, "
@@ -61,6 +66,8 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
     garr = eng.device_graph()
     root = jnp.int32(0)
     results = {}
+    obs = obs or bool(trace_out)
+    engine_tracks = []     # (label, RunTelemetry, parts) for the export
 
     for algo, variant in registry.available():
         spec = registry.get_spec(algo, variant)
@@ -84,6 +91,20 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
         out, dt = _timed(prog, args)
         results[name] = (out, dt)
         print(f"[graph] {name:14s} {dt*1e3:9.1f} ms")
+        if obs:
+            # a SEPARATE telemetry build (telemetry is a compile-cache
+            # dimension), run after the timed one so the headline ms
+            # stays the un-instrumented number
+            tprog = eng.program(algo, variant, telemetry=True, **params)
+            tout = tprog(*args)
+            tel = tprog.run_telemetry(tout[-1])
+            engine_tracks.append((name, tel, parts))
+            s = tel.summary()
+            wire = s.get("wire_bytes_per_round", {})
+            print(f"[obs]   {name:14s} rounds={s['rounds']:3d} "
+                  f"wall={s.get('wall_ms', 0.0):8.1f} ms  wire/round="
+                  + (" ".join(f"{op}:{b:,}B"
+                              for op, b in wire.items()) or "none"))
 
     if multi_source:
         roots = jnp.arange(multi_source, dtype=jnp.int32)
@@ -153,6 +174,11 @@ def run(graph_name: str, parts: int, *, pr_iters: int = 50,
             same = ((mb[0] < 2 ** 30) == (p_fast < 2 ** 30)).all()
             print(f"[verify] multi-source BFS root0 == single-source: "
                   f"{bool(same)}")
+
+    if trace_out and engine_tracks:
+        counts = write_trace(trace_out, chrome_trace(engine=engine_tracks))
+        print(f"[graph] wrote {trace_out} (chrome trace, "
+              f"{sum(counts.values())} events; open in ui.perfetto.dev)")
     return results
 
 
@@ -176,11 +202,20 @@ def main():
                          "the synchronous programs only, async the "
                          "stale-tolerant double-buffered ones; all "
                          "runs both and cross-checks them in verify")
+    ap.add_argument("--obs", action="store_true",
+                    help="also run each program with telemetry=True "
+                         "(separate compile-cache entry) and report "
+                         "per-round series + wire bytes per primitive")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON of the "
+                         "telemetry runs (implies --obs; open in "
+                         "ui.perfetto.dev)")
     ap.add_argument("--no-verify", action="store_true")
     args = ap.parse_args()
     run(args.graph, args.parts, pr_iters=args.pr_iters,
         verify=not args.no_verify, multi_source=args.multi_source,
-        layout=args.layout, exec_mode=args.exec_mode)
+        layout=args.layout, exec_mode=args.exec_mode, obs=args.obs,
+        trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

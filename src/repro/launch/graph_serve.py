@@ -20,6 +20,12 @@ crash-consistent snapshots every ``--snapshot-every`` epochs, see
 ``repro.serve.persist``); ``--recover --wal-dir DIR`` resumes a killed
 server from that directory instead of regenerating the graph.
 
+``--obs`` traces the serving path (every pipeline stage as spans in a
+bounded ring, see ``repro.obs``) and prints a trace summary;
+``--trace-out trace.json`` additionally exports the session as Chrome
+trace-event JSON for ui.perfetto.dev (implies ``--obs``).  The
+``--json`` payload gains a ``trace_summary`` block when tracing is on.
+
 (Use XLA_FLAGS=--xla_force_host_platform_device_count=N for --parts N
 on a single host, as with repro.launch.graph_analytics.)
 
@@ -42,6 +48,8 @@ from repro.core import GraphEngine, localops, partition_graph
 from repro.core.compat import runtime_fingerprint
 from repro.graphs import generate_edges
 from repro.launch.mesh import make_graph_mesh
+from repro.obs import SpanRecorder, chrome_trace, trace_summary, \
+    write_trace
 from repro.serve import GraphServer, Persistence, mutation_stream, \
     parse_mix, synthetic_trace
 
@@ -52,15 +60,21 @@ def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
         layout: str = "ell", json_path: str | None = None,
         mutate_every: float = 0.0, mutate_size: int = 64,
         wal_dir: str | None = None, snapshot_every: int = 8,
-        recover: bool = False):
+        recover: bool = False, obs: bool = False,
+        trace_out: str | None = None):
     gcfg = graph_workloads.ALL[graph_name]
+    # --trace-out implies tracing; a SpanRecorder on the server records
+    # every pipeline stage (admission -> ... -> demux) plus durability
+    # spans and resilience events
+    rec = SpanRecorder() if (obs or trace_out) else None
     edges = None
     if recover:
         if not wal_dir:
             raise SystemExit("[serve] --recover requires --wal-dir")
         t0 = time.time()
         server = GraphServer.recover(wal_dir, buckets=buckets, depth=depth,
-                                     snapshot_every=snapshot_every)
+                                     snapshot_every=snapshot_every,
+                                     obs=rec)
         eng = server.engine
         rep = server.recovery_report
         print(f"[serve] recovered {wal_dir} in {time.time()-t0:.1f}s: "
@@ -81,7 +95,7 @@ def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
                                   snapshot_every=snapshot_every) \
             if wal_dir else None
         server = GraphServer(eng, buckets=buckets, depth=depth,
-                             persistence=persistence)
+                             persistence=persistence, obs=rec)
         if persistence:
             print(f"[serve] durable: wal-dir={wal_dir} "
                   f"snapshot_every={snapshot_every}")
@@ -118,6 +132,20 @@ def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
               f"batches ({rebuilds} rebuilds); final epoch {server.epoch}")
     print(server.metrics.table())
 
+    summ = None
+    if rec is not None:
+        summ = trace_summary(rec)
+        top = ", ".join(f"{r['kind']}={r['p99_ms']:.2f}ms"
+                        for r in summ["top_p99_ms"])
+        print(f"[serve] obs: {summ['spans_total']} spans / "
+              f"{summ['events_total']} events recorded; top p99: {top}")
+    if trace_out:
+        counts = write_trace(trace_out, chrome_trace(
+            spans=rec.spans(), events=rec.events()))
+        print(f"[serve] wrote {trace_out} "
+              f"(chrome trace, {sum(counts.values())} events; open in "
+              f"ui.perfetto.dev)")
+
     if json_path:
         snap = server.metrics.snapshot()
         payload = {
@@ -140,6 +168,8 @@ def run(graph_name: str, parts: int, *, mix: str = "bfs:8,sssp:4,cc:1",
             "recoveries": snap["recoveries"],
             "wal_records": snap["wal_records"],
         }
+        if summ is not None:
+            payload["trace_summary"] = summ
         text = json.dumps(payload, indent=2)
         if json_path == "-":
             print("SERVE_JSON " + json.dumps(payload))
@@ -189,6 +219,12 @@ def main():
     ap.add_argument("--recover", action="store_true",
                     help="resume from --wal-dir instead of generating "
                          "and partitioning a fresh graph")
+    ap.add_argument("--obs", action="store_true",
+                    help="record serving-path spans (admission/dispatch/"
+                         "device/demux/...) and report a trace summary")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON of the serve "
+                         "session (implies --obs; open in ui.perfetto.dev)")
     args = ap.parse_args()
     run(args.graph, args.parts, mix=args.mix, duration=args.duration,
         rate=args.rate,
@@ -197,7 +233,7 @@ def main():
         layout=args.layout, json_path=args.json,
         mutate_every=args.mutate_every, mutate_size=args.mutate_size,
         wal_dir=args.wal_dir, snapshot_every=args.snapshot_every,
-        recover=args.recover)
+        recover=args.recover, obs=args.obs, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,55 @@
+"""Unified observability: engine telemetry, serving spans, trace export.
+
+Three layers, one package (PR 10):
+
+  ``telemetry.py``     the per-round ENGINE telemetry channel — device-
+                       computed per-superstep series (halt scalar +
+                       per-program probes such as frontier counts)
+                       appended to the superstep drivers' loop carry,
+                       plus trace-time wire-byte accounting at the
+                       exchange taps in ``core/partitioned.py``.
+                       Telemetry on/off is a compile-cache dimension
+                       (like ``guard=``); the off path is bit-identical
+                       to a pre-telemetry build.
+  ``spans.py``         the SERVING-path span/event model: a bounded
+                       ring buffer of monotonic-timestamped spans
+                       (admission → validate → coalesce-wait →
+                       dispatch → device → demux → reply, plus
+                       mutation / WAL-append / snapshot / recovery and
+                       the checkpoint-runner's detection/rollback
+                       events).
+  ``registry.py``      the declared span kinds + instrument registry
+                       (counters / gauges / histograms) with the
+                       markdown-table generators ``docs/API.md`` is
+                       drift-tested against.
+  ``report.py``        derived views: the plain-text roll-up report,
+                       ``trace_summary`` (what ``graph_serve --json``
+                       publishes), and the latency cells derived from
+                       query spans (reconciled against
+                       ``serve/metrics.py`` in tests).
+  ``trace_export.py``  Chrome trace-event (Perfetto-loadable) JSON:
+                       per-component tracks for the server, per-part
+                       tracks for engine rounds, plus the schema
+                       validator the CI ``obs`` lane runs.
+
+Layering: this package imports NOTHING from ``repro.core`` or
+``repro.serve`` (numpy + stdlib only), so ``core/`` may call into it
+(the drivers publish trace-time phase marks and the exchange taps
+report payload bytes) without a cycle — mirroring ``core/faults.py``.
+"""
+
+from repro.obs.registry import COMPONENTS, INSTRUMENTS, SPAN_KINDS, \
+    Registry, instruments_markdown_table, spans_markdown_table
+from repro.obs.report import derive_latency_cells, rollup, trace_summary
+from repro.obs.spans import NULL_RECORDER, Event, Span, SpanRecorder
+from repro.obs.telemetry import PhaseSeries, RunTelemetry, WireRecord
+from repro.obs.trace_export import chrome_trace, validate_chrome_trace, \
+    write_trace
+
+__all__ = [
+    "COMPONENTS", "Event", "INSTRUMENTS", "NULL_RECORDER", "PhaseSeries",
+    "Registry", "RunTelemetry", "SPAN_KINDS", "Span", "SpanRecorder",
+    "WireRecord", "chrome_trace", "derive_latency_cells",
+    "instruments_markdown_table", "rollup", "spans_markdown_table",
+    "trace_summary", "validate_chrome_trace", "write_trace",
+]

@@ -1,0 +1,207 @@
+"""Engine telemetry: per-superstep series + trace-time wire accounting.
+
+Two channels, both zero-cost when off:
+
+**Device series** — the superstep drivers (``core/superstep.py``), when
+built with ``telemetry=True``, append a ``(max_rounds, 2 + K)`` f32
+buffer to the loop carry and write one row per round:
+
+    [done, halt, *probes]
+
+``done`` is 1.0 for rows a round actually wrote (the buffer is
+zero-initialised and round counts are only known on device, so the
+host trims on this column — essential for phased programs, where one
+buffer accumulates rows across phases).  ``halt`` is the halt
+predicate evaluated on the round's resulting state (1.0 once
+converged); the interesting convergence scalars (frontier size,
+residual, changed-count) are the program's declared
+``probe_names``/``probe`` extras.  ``PhaseSeries.from_array`` parses
+the fetched buffer.
+
+**Wire record** — the exchange primitives in ``core/partitioned.py``
+call ``tap_wire(op, payload)`` right where they already call
+``faults.tap``.  While a ``recording(rec)`` context is active, each tap
+adds the payload's trace-time byte size to the active ``WireRecord``
+under the current ``phase(...)`` label.  Because a ``lax.while_loop``
+body traces exactly ONCE, the accumulated totals are exact *per-round*
+wire bytes; ``lax.cond`` traces both branches, so taps inside a cond
+count both sides (a documented upper bound — no current exchange sits
+under a cond).  ``recording`` CLEARS the record on entry, so a retrace
+overwrites instead of double-counting.
+
+The byte figure is the per-part payload entering the collective (the
+arrays live inside ``shard_map``, so shapes are already per-device);
+bit-packed frontiers therefore report their packed n/8 size, matching
+what ``compare.py`` gates as ``wire_mb_per_part``.
+
+``RunTelemetry`` bundles a run's series, wire snapshot, and host
+wall-time into the summary dict the launchers and benches publish.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# Fixed leading columns of a series row, before the per-program probes.
+SERIES_FIXED_COLS = ("done", "halt")
+
+
+class WireRecord:
+    """Trace-time wire-byte accounting: (phase, op) -> [bytes, taps].
+
+    One record accumulates over a single trace of the loop body, so
+    ``cells`` values are per-ROUND figures (see module docstring).
+    """
+
+    def __init__(self):
+        self.cells: dict[tuple[str, str], list[int]] = {}
+
+    def clear(self) -> None:
+        self.cells.clear()
+
+    def add(self, phase: str, op: str, nbytes: int) -> None:
+        cell = self.cells.setdefault((phase, op), [0, 0])
+        cell[0] += int(nbytes)
+        cell[1] += 1
+
+    def bytes_by_op(self) -> dict[str, int]:
+        """Per-round bytes summed over phases, keyed by primitive."""
+        out: dict[str, int] = {}
+        for (_, op), (nbytes, _) in self.cells.items():
+            out[op] = out.get(op, 0) + nbytes
+        return out
+
+    def bytes_per_round(self) -> int:
+        return sum(nbytes for nbytes, _ in self.cells.values())
+
+    def snapshot(self) -> dict:
+        """JSON-friendly: {"phase/op": {"bytes": b, "taps": c}}."""
+        return {f"{phase}/{op}": {"bytes": b, "taps": c}
+                for (phase, op), (b, c) in sorted(self.cells.items())}
+
+
+# Module-global recording context, mirroring core/faults.py: unarmed
+# (the default) makes tap_wire a single None-check.
+_ACTIVE: WireRecord | None = None
+_PHASE: str = "round"
+
+
+@contextmanager
+def recording(rec: WireRecord):
+    """Arm ``rec`` for the duration of a trace.  Clears it on entry so
+    retracing (cache miss after eviction, explicit lower) overwrites
+    rather than accumulates."""
+    global _ACTIVE, _PHASE
+    rec.clear()
+    prev, prev_phase = _ACTIVE, _PHASE
+    _ACTIVE, _PHASE = rec, "round"
+    try:
+        yield rec
+    finally:
+        _ACTIVE, _PHASE = prev, prev_phase
+
+
+def phase(name: str) -> None:
+    """Label subsequent taps (trace-time call, e.g. per driver phase)."""
+    global _PHASE
+    _PHASE = name
+
+
+def tap_wire(op: str, payload) -> None:
+    """Account ``payload``'s bytes to the active record; no-op when no
+    recording context is armed (the telemetry-off path)."""
+    if _ACTIVE is None:
+        return
+    _ACTIVE.add(_PHASE, op,
+                int(np.prod(payload.shape)) * payload.dtype.itemsize)
+
+
+@dataclass(frozen=True)
+class PhaseSeries:
+    """Host-side view of a fetched device series buffer: valid rows
+    only (``done`` column > 0.5), fixed cols then probes."""
+
+    probe_names: tuple
+    rows: np.ndarray  # (rounds, 2 + K) float32
+
+    @classmethod
+    def from_array(cls, arr, probe_names=()) -> "PhaseSeries":
+        arr = np.asarray(arr, dtype=np.float32)
+        if arr.ndim != 2 or arr.shape[1] != len(SERIES_FIXED_COLS) + len(
+                probe_names):
+            raise ValueError(
+                f"series shape {arr.shape} does not match probes "
+                f"{probe_names!r}")
+        return cls(tuple(probe_names), arr[arr[:, 0] > 0.5])
+
+    @property
+    def rounds(self) -> int:
+        return int(self.rows.shape[0])
+
+    def halt(self) -> np.ndarray:
+        return self.rows[:, 1]
+
+    def probe(self, name: str) -> np.ndarray:
+        return self.rows[:, len(SERIES_FIXED_COLS)
+                         + self.probe_names.index(name)]
+
+    def summary(self) -> dict:
+        out = {"rounds": self.rounds}
+        if self.rounds:
+            out["halt_first"] = float(self.rows[0, 1])
+            out["halt_last"] = float(self.rows[-1, 1])
+        for name in self.probe_names:
+            vals = self.probe(name)
+            if len(vals):
+                out[f"{name}_mean"] = float(vals.mean())
+                out[f"{name}_max"] = float(vals.max())
+        return out
+
+
+@dataclass
+class RunTelemetry:
+    """Everything one telemetry-on run yields: the parsed per-round
+    series, the trace-time wire snapshot, and host wall-time."""
+
+    series: PhaseSeries
+    wire: dict = field(default_factory=dict)   # WireRecord.snapshot()
+    wall_s: float = 0.0
+
+    def wire_bytes_by_op(self, loop_only: bool = True) -> dict[str, int]:
+        """Per-round bytes by primitive.  The drivers label taps by
+        driver phase ("init" / "round" / "outputs"); only "round" taps
+        repeat per superstep, so the default drops the one-shot ones."""
+        out: dict[str, int] = {}
+        for key, cell in self.wire.items():
+            tap_phase, op = key.rsplit("/", 1)
+            if loop_only and tap_phase != "round":
+                continue
+            out[op] = out.get(op, 0) + cell["bytes"]
+        return out
+
+    def summary(self) -> dict:
+        """The JSON block benches attach per row and launchers print.
+
+        ``wire_bytes_total`` = per-round loop bytes x rounds, plus the
+        one-shot init/outputs taps once.  For phased programs the loop
+        cells sum over phases while ``rounds`` is the total, so the
+        figure is an upper bound there (exact for single-loop drivers).
+        """
+        by_op = self.wire_bytes_by_op()
+        per_round = sum(by_op.values())
+        oneshot = sum(cell["bytes"] for key, cell in self.wire.items()
+                      if key.rsplit("/", 1)[0] != "round")
+        out = self.series.summary()
+        out["wire_bytes_per_round"] = {op: int(b)
+                                       for op, b in sorted(by_op.items())}
+        out["wire_bytes_total"] = int(per_round * self.series.rounds
+                                      + oneshot)
+        if self.wall_s:
+            out["wall_ms"] = round(self.wall_s * 1e3, 3)
+            if self.series.rounds:
+                out["round_ms_mean"] = round(
+                    self.wall_s * 1e3 / self.series.rounds, 3)
+        return out

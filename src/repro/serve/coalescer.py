@@ -20,6 +20,7 @@ bounds per-key starvation under a skewed mix.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass
 
@@ -61,6 +62,7 @@ class Batch:
     bucket: int
     roots: list                          # padded, len == bucket; [] refresh
     epoch: int = -1
+    t_formed: float = 0.0                # perf_counter at next_batch()
 
     @property
     def n_real(self) -> int:
@@ -130,16 +132,18 @@ class Coalescer:
             return None
         _, (key, epoch) = min(live, key=lambda e: e[0])  # ties: admission
         dq = self._pending[(key, epoch)]
+        now = time.perf_counter()          # batch formation time: the
+        # coalesce-wait span for each member runs t_submit..t_formed
         if key.seeded:
             # one launch per seeded query: each carries (or resolves to)
             # its own vertex-field seed, so launches never share
-            return Batch(key, [dq.popleft()], 0, [], epoch)
+            return Batch(key, [dq.popleft()], 0, [], epoch, t_formed=now)
         if not key.rooted:
             queries = list(dq)
             dq.clear()
-            return Batch(key, queries, 0, [], epoch)
+            return Batch(key, queries, 0, [], epoch, t_formed=now)
         bucket = self.ladder.pick(len(dq))
         queries = [dq.popleft() for _ in range(min(bucket, len(dq)))]
         roots = [q.root for q in queries]
         roots += [roots[-1]] * (bucket - len(roots))   # dup-root padding
-        return Batch(key, queries, bucket, roots, epoch)
+        return Batch(key, queries, bucket, roots, epoch, t_formed=now)

@@ -44,6 +44,7 @@ class Launch:
     t_dispatch: float
     t_done: float = 0.0
     error: Exception | None = None
+    seq: int = -1       # executor-global dispatch order (trace correlation)
 
 
 class DoubleBufferedExecutor:
@@ -52,6 +53,7 @@ class DoubleBufferedExecutor:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.depth = depth
         self._inflight: deque[Launch] = deque()
+        self._seq = 0
 
     def __len__(self) -> int:
         return len(self._inflight)
@@ -62,7 +64,9 @@ class DoubleBufferedExecutor:
         done = []
         while len(self._inflight) >= self.depth:
             done.append(self._complete_oldest())
-        self._inflight.append(Launch(payload, out, time.perf_counter()))
+        self._inflight.append(
+            Launch(payload, out, time.perf_counter(), seq=self._seq))
+        self._seq += 1
         return done
 
     def complete_one(self) -> Launch | None:

@@ -25,6 +25,27 @@ import numpy as np
 COUNTERS = ("shed", "timed_out", "retries", "quarantined", "rejected")
 
 
+def percentiles(lat, qs=(50, 95, 99)):
+    """Latency percentiles with EXPLICIT small-sample semantics.
+
+    ``np.percentile`` on tiny cells is easy to misread (one sample
+    "has" a p99; two samples interpolate), so the degenerate cases are
+    spelled out rather than inherited:
+
+      0 samples -> all zeros (an empty cell reports 0.0, not NaN)
+      1 sample  -> every percentile IS that sample
+      2+        -> linear-interpolated ``np.percentile`` (the default
+                   method), so p50 of two samples is their midpoint and
+                   p99 leans toward the max — documented, not accidental.
+    """
+    lat = np.asarray(lat, np.float64)
+    if lat.size == 0:
+        return tuple(0.0 for _ in qs)
+    if lat.size == 1:
+        return tuple(float(lat[0]) for _ in qs)
+    return tuple(float(v) for v in np.percentile(lat, qs))
+
+
 class ServeMetrics:
     """Latency cells record only ``status == "ok"`` answers — p99 of a
     cell is the tail of latencies clients actually waited for an answer
@@ -59,6 +80,14 @@ class ServeMetrics:
         self._lat.setdefault((label, bucket), []).append(latency_s)
         self._t1 = time.perf_counter()
 
+    def latencies(self) -> dict[tuple[str, int], list[float]]:
+        """Raw per-cell ``ok`` latencies (seconds), copied.  The span
+        layer (``obs.report.derive_latency_cells``) reconstructs this
+        exact mapping from query spans — the reconciliation the obs
+        tests pin — so the metrics cells are a derived view of the
+        trace, not a second source of truth."""
+        return {k: list(v) for k, v in self._lat.items()}
+
     @property
     def window_s(self) -> float:
         if self._t0 is None:
@@ -75,7 +104,7 @@ class ServeMetrics:
         out = []
         for (label, bucket) in sorted(self._lat):
             lat = np.asarray(self._lat[(label, bucket)], np.float64)
-            p50, p95, p99 = np.percentile(lat, (50, 95, 99)) * 1e3
+            p50, p95, p99 = (v * 1e3 for v in percentiles(lat))
             out.append({
                 "algo": label, "bucket": bucket, "count": int(lat.size),
                 "qps": round(lat.size / self.window_s, 2),

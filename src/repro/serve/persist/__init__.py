@@ -30,6 +30,7 @@ from __future__ import annotations
 import os
 from dataclasses import dataclass
 
+from repro.obs import NULL_RECORDER
 from repro.serve.persist.crashpoints import CRASH_EXIT_CODE, CRASH_POINTS, \
     ENV_VAR, crash_points_markdown_table, maybe_crash, reset_counts
 from repro.serve.persist.snapshot import SnapshotCorrupt, capture_state, \
@@ -94,6 +95,9 @@ class DurabilityState:
         self.count = count
         self.batch_id = batch_id
         self.last_snapshot_epoch = last_snapshot_epoch
+        # span recorder for durability-path observability; the owning
+        # server swaps in its own (obs/spans.py) when tracing is on
+        self.obs = NULL_RECORDER
 
     @property
     def wal_records(self) -> int:
@@ -137,7 +141,11 @@ class DurabilityState:
         rec = WalRecord(batch_id=self.batch_id + 1, epoch=dyn.epoch + 1,
                         rebuild=rebuild, digest=digest, count=count,
                         inserts=ins, deletes=dels)
-        off = self.wal.append(rec)
+        with self.obs.span("wal_append", "durability",
+                           batch_id=rec.batch_id, epoch=rec.epoch,
+                           n_insert=len(ins), n_delete=len(dels),
+                           rebuild=bool(rebuild)):
+            off = self.wal.append(rec)
         try:
             stats = dyn.apply(ins, dels, force_rebuild=rebuild)
         except BaseException:
@@ -156,11 +164,12 @@ class DurabilityState:
         return due
 
     def snapshot_now(self, server) -> None:
-        state = capture_state(server, self)
-        write_snapshot(self.cfg.dir, server.epoch, state,
-                       fsync=self.cfg.fsync)
-        self.last_snapshot_epoch = server.epoch
-        prune_snapshots(self.cfg.dir, self.cfg.retain)
+        with self.obs.span("snapshot", "durability", epoch=server.epoch):
+            state = capture_state(server, self)
+            write_snapshot(self.cfg.dir, server.epoch, state,
+                           fsync=self.cfg.fsync)
+            self.last_snapshot_epoch = server.epoch
+            prune_snapshots(self.cfg.dir, self.cfg.retain)
 
     def close(self) -> None:
         self.wal.close()

@@ -78,6 +78,7 @@ import jax.numpy as jnp
 
 from repro.core import registry
 from repro.core.api import GraphEngine
+from repro.obs import NULL_RECORDER
 from repro.core.incremental import KIND_DTYPES, cold_seed
 from repro.serve.coalescer import Batch, BucketLadder, Coalescer
 from repro.serve.dynamic import DynamicGraph, MutationBatch, MutationStats
@@ -94,10 +95,18 @@ class GraphServer:
                  default_deadline_s: float | None = None,
                  max_retries: int = 2, retry_backoff_s: float = 0.02,
                  validate: bool = True,
-                 persistence: Persistence | str | None = None):
+                 persistence: Persistence | str | None = None,
+                 obs=None):
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.engine = engine
+        # serving-path observability: an obs.SpanRecorder records every
+        # pipeline stage (admission -> validate -> coalesce_wait ->
+        # dispatch -> device -> demux -> query) plus durability and
+        # resilience events.  The default NULL_RECORDER is disabled —
+        # each site pays one attribute read and allocates nothing, so
+        # the un-traced server is the pre-obs server.
+        self.obs = obs if obs is not None else NULL_RECORDER
         self.garr = engine.device_graph()      # resident device graph
         self.ladder = BucketLadder(buckets) if buckets else BucketLadder()
         self.coalescer = Coalescer(self.ladder, max_queued=max_queued)
@@ -137,6 +146,7 @@ class GraphServer:
         self.recovery_report = None
         if persistence is not None:
             self.durability = DurabilityState.create(self, persistence)
+            self.durability.obs = self.obs
             self.metrics.wal_records = self.durability.wal_records
 
     # -- admission -----------------------------------------------------------
@@ -155,22 +165,29 @@ class GraphServer:
             raise ValueError(
                 f"query already admitted as qid={q.qid}; build a fresh "
                 "Query to resubmit")
-        if self.validate:
-            try:
-                validate_query(q, self.engine.g.n_orig)
-            except ValueError:
-                self.metrics.count("rejected")
-                raise
-        q.qid, self._next_qid = self._next_qid, self._next_qid + 1
-        q.t_submit = time.perf_counter() if t_submit is None else t_submit
-        q.epoch = self.epoch
-        if q.deadline_s is None:
-            q.deadline_s = self.default_deadline_s
-        # the metrics window opens at FIRST ADMISSION (idempotent), so
-        # the first launch's queue + dispatch wait counts against qps —
-        # record()'s own start() is only a fallback for standalone use
-        self.metrics.start()
-        shed = self.coalescer.admit(q)
+        with self.obs.span("admission", "server", label=q.key.label):
+            if self.validate:
+                try:
+                    with self.obs.span("validate", "server"):
+                        validate_query(q, self.engine.g.n_orig)
+                except ValueError:
+                    self.metrics.count("rejected")
+                    if self.obs.enabled:
+                        self.obs.event("rejected", "server",
+                                       label=q.key.label)
+                    raise
+            q.qid, self._next_qid = self._next_qid, self._next_qid + 1
+            q.t_submit = (time.perf_counter() if t_submit is None
+                          else t_submit)
+            q.epoch = self.epoch
+            if q.deadline_s is None:
+                q.deadline_s = self.default_deadline_s
+            # the metrics window opens at FIRST ADMISSION (idempotent),
+            # so the first launch's queue + dispatch wait counts against
+            # qps — record()'s own start() is only a fallback for
+            # standalone use
+            self.metrics.start()
+            shed = self.coalescer.admit(q)
         if shed is not None:
             self._oob.append(self._resolve(shed, "shed"))
         return q.qid
@@ -189,6 +206,19 @@ class GraphServer:
             "quarantined" if status == "failed" else status)
         if status == "failed":
             self.quarantined.append(res)
+        if self.obs.enabled:
+            # the query's async span closes here even on a non-ok
+            # disposition; the matching resilience event marks WHY
+            self.obs.add_span("query", "server", q.t_submit, t_done,
+                              qid=q.qid, label=q.key.label, bucket=0,
+                              status=status,
+                              latency_s=res.latency_s)
+            if status == "failed":
+                self.obs.event("launch_failure", "executor", qid=q.qid,
+                               label=q.key.label)
+            else:
+                self.obs.event(status, "server", qid=q.qid,
+                               label=q.key.label)
         self.results[q.qid] = res
         return res
 
@@ -246,25 +276,29 @@ class GraphServer:
         """
         if self.durability is not None:
             maybe_crash("between-batches")
-        while True:
-            batch = self.coalescer.next_batch()
-            if batch is None:
-                break
-            self._launch(batch)           # results wait in the mailbox
-        dyn = self.dynamic_graph()
-        if self.durability is not None:
-            stats = self.durability.logged_apply(dyn, inserts, deletes)
-        else:
-            stats = dyn.apply(inserts, deletes)
-        self.garr = dyn.garr
-        self.epoch = dyn.epoch
-        self.metrics.epoch = self.epoch
-        self.mutation_log.append({
-            "epoch": stats.epoch, "n_insert": stats.n_insert,
-            "n_delete": stats.n_delete, "rebuild": stats.rebuild})
-        if self.durability is not None:
-            self.metrics.wal_records = self.durability.wal_records
-            self.durability.maybe_snapshot(self)
+        with self.obs.span("mutation", "server") as msp:
+            while True:
+                batch = self.coalescer.next_batch()
+                if batch is None:
+                    break
+                self._launch(batch)       # results wait in the mailbox
+            dyn = self.dynamic_graph()
+            if self.durability is not None:
+                stats = self.durability.logged_apply(dyn, inserts, deletes)
+            else:
+                stats = dyn.apply(inserts, deletes)
+            self.garr = dyn.garr
+            self.epoch = dyn.epoch
+            self.metrics.epoch = self.epoch
+            self.mutation_log.append({
+                "epoch": stats.epoch, "n_insert": stats.n_insert,
+                "n_delete": stats.n_delete, "rebuild": stats.rebuild})
+            msp.args.update(epoch=stats.epoch, n_insert=stats.n_insert,
+                            n_delete=stats.n_delete,
+                            rebuild=bool(stats.rebuild))
+            if self.durability is not None:
+                self.metrics.wal_records = self.durability.wal_records
+                self.durability.maybe_snapshot(self)
         return stats
 
     @classmethod
@@ -278,7 +312,12 @@ class GraphServer:
         The recovered server keeps appending to the same WAL; what it
         did is on ``server.recovery_report``."""
         from repro.serve.persist.recover import recover_state
-        rs = recover_state(dir, mesh=mesh)
+        rec = kwargs.get("obs") or NULL_RECORDER
+        with rec.span("recovery", "server", dir=str(dir)) as rsp:
+            rs = recover_state(dir, mesh=mesh)
+            rsp.args.update(epoch=rs.epoch,
+                            wal_records=rs.report.wal_records,
+                            replayed=rs.report.replayed)
         server = cls(rs.engine, **kwargs)
         server.dynamic = rs.dynamic
         server.garr = rs.dynamic.garr
@@ -298,6 +337,7 @@ class GraphServer:
         server.durability = DurabilityState.resume(
             cfg, rs.wal, rs.digest, rs.count, rs.batch_id,
             last_snapshot_epoch=rs.report.snapshot_epoch)
+        server.durability.obs = server.obs
         server.recovery_report = rs.report
         server.metrics.epoch = rs.epoch
         server.metrics.recoveries = 1
@@ -402,8 +442,18 @@ class GraphServer:
         """Dispatch one batch; a raising dispatch routes to retry /
         quarantine instead of propagating.  Returns whatever completed
         as a side effect (retired peers, failure dispositions)."""
+        if self.obs.enabled and batch.queries and batch.t_formed:
+            # coalesce-wait: first member's admission -> batch formed
+            self.obs.add_span(
+                "coalesce_wait", "coalescer",
+                min(q.t_submit for q in batch.queries), batch.t_formed,
+                label=batch.key.label, bucket=batch.bucket,
+                n=batch.n_real)
         try:
-            out = self._dispatch(batch)
+            with self.obs.span("dispatch", "executor",
+                               label=batch.key.label, bucket=batch.bucket,
+                               n=batch.n_real):
+                out = self._dispatch(batch)
         except Exception as e:
             return self._on_launch_failure(batch, e)
         done = []
@@ -507,50 +557,71 @@ class GraphServer:
 
     def _demux(self, launch: Launch) -> list[QueryResult]:
         batch = launch.payload
+        if self.obs.enabled and batch.queries:
+            # in-flight interval stamped by the executor (dispatch ->
+            # block_until_ready); warmup launches stay un-traced
+            self.obs.add_span(
+                "device", "device", launch.t_dispatch, launch.t_done,
+                label=batch.key.label, bucket=batch.bucket,
+                n=batch.n_real, launch_seq=launch.seq,
+                failed=launch.error is not None)
         if launch.error is not None:
             # the async runtime surfaced a failure at the blocking
             # call: same routing as a dispatch-time raise
             return self._on_launch_failure(batch, launch.error)
         if not batch.queries:              # warmup launch: nothing to slice
             return []
-        prog = self._program(batch.key, batch.bucket)
-        names = prog.program.output_names
-        is_vertex = prog.program.output_is_vertex
-        *outs, rounds = launch.out
-        eng = self.engine
-        if batch.bucket:
-            # drop padded dup-root lanes ON DEVICE so the host copy in
-            # this (only) synchronous section is proportional to real
-            # queries, not the bucket width
-            k = batch.n_real
-            gathered = [eng.gather_batched_vertex_field(o[:, :k]) if v
-                        else np.asarray(o)[:k]
-                        for o, v in zip(outs, is_vertex)]
-            rounds = np.asarray(rounds[:k])
-            per_query = [
-                ({n: g[i] for n, g in zip(names, gathered)}, int(rounds[i]))
-                for i in range(batch.n_real)]
-        else:
-            shared = {n: (eng.gather_vertex_field(o) if v
-                          else np.asarray(o)[()])
-                      for n, (o, v) in zip(names, zip(outs, is_vertex))}
-            per_query = [(shared, int(rounds))] * batch.n_real
-            # refresh outputs double as warm seeds for the incremental
-            # variants of the same algorithm
-            self._harvest_seeds(batch.key, shared, batch.epoch)
-        results = []
-        for q, (fields, r) in zip(batch.queries, per_query):
-            if launch.t_done > q.deadline_abs:
-                # the answer exists but missed its budget: withhold it
-                # (a client gone by now must not see a stale success)
-                results.append(
-                    self._resolve(q, "timed_out", t_done=launch.t_done))
-                continue
-            res = QueryResult(
-                qid=q.qid, key=q.key, root=q.root, fields=fields, rounds=r,
-                latency_s=launch.t_done - q.t_submit, bucket=batch.bucket,
-                epoch=batch.epoch)
-            self.metrics.record(q.key.label, batch.bucket, res.latency_s)
-            self.results[q.qid] = res
-            results.append(res)
-        return results
+        with self.obs.span("demux", "server", label=batch.key.label,
+                           bucket=batch.bucket, n=batch.n_real):
+            prog = self._program(batch.key, batch.bucket)
+            names = prog.program.output_names
+            is_vertex = prog.program.output_is_vertex
+            *outs, rounds = launch.out
+            eng = self.engine
+            if batch.bucket:
+                # drop padded dup-root lanes ON DEVICE so the host copy
+                # in this (only) synchronous section is proportional to
+                # real queries, not the bucket width
+                k = batch.n_real
+                gathered = [eng.gather_batched_vertex_field(o[:, :k]) if v
+                            else np.asarray(o)[:k]
+                            for o, v in zip(outs, is_vertex)]
+                rounds = np.asarray(rounds[:k])
+                per_query = [
+                    ({n: g[i] for n, g in zip(names, gathered)},
+                     int(rounds[i]))
+                    for i in range(batch.n_real)]
+            else:
+                shared = {n: (eng.gather_vertex_field(o) if v
+                              else np.asarray(o)[()])
+                          for n, (o, v) in zip(names, zip(outs, is_vertex))}
+                per_query = [(shared, int(rounds))] * batch.n_real
+                # refresh outputs double as warm seeds for the
+                # incremental variants of the same algorithm
+                self._harvest_seeds(batch.key, shared, batch.epoch)
+            results = []
+            for q, (fields, r) in zip(batch.queries, per_query):
+                if launch.t_done > q.deadline_abs:
+                    # the answer exists but missed its budget: withhold
+                    # it (a client gone by now must not see a stale
+                    # success)
+                    results.append(
+                        self._resolve(q, "timed_out", t_done=launch.t_done))
+                    continue
+                res = QueryResult(
+                    qid=q.qid, key=q.key, root=q.root, fields=fields,
+                    rounds=r, latency_s=launch.t_done - q.t_submit,
+                    bucket=batch.bucket, epoch=batch.epoch)
+                self.metrics.record(q.key.label, batch.bucket,
+                                    res.latency_s)
+                if self.obs.enabled:
+                    # the query's async span closes with the IDENTICAL
+                    # latency_s float metrics just recorded — the
+                    # exact-reconciliation invariant the obs tests pin
+                    self.obs.add_span(
+                        "query", "server", q.t_submit, launch.t_done,
+                        qid=q.qid, label=q.key.label, bucket=batch.bucket,
+                        status="ok", latency_s=res.latency_s)
+                self.results[q.qid] = res
+                results.append(res)
+            return results
